@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timers, CSV rows, and the α-β cost model used
+to project communication volumes to the paper's testbed wall-clock."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall time of fn() in seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+# --------------------------------------------------------------------------
+# α-β model with the paper's testbed constants (§8.1): g4dn.metal instances,
+# 100 Gbps network, T4 GPUs over PCIe3 x8 (≈8 GB/s effective per GPU)
+# --------------------------------------------------------------------------
+
+NET_BPS = 100e9 / 8  # bytes/s, 100 Gbps
+NET_ALPHA = 30e-6  # per-message latency
+PCIE_BPS = 8e9
+DRAM_RANDOM_BPS = 2e9  # random-access effective DRAM bandwidth [49]
+
+
+def net_time(bytes_: float, messages: int = 1) -> float:
+    return NET_ALPHA * messages + bytes_ / NET_BPS
+
+
+def pcie_time(bytes_: float, transfers: int = 1) -> float:
+    return 10e-6 * transfers + bytes_ / PCIE_BPS
+
+
+def dram_random_time(bytes_: float) -> float:
+    return bytes_ / DRAM_RANDOM_BPS

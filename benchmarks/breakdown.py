@@ -1,0 +1,88 @@
+"""Paper Fig. 10 — per-stage training time breakdown.
+
+Stages mirror the paper's: sampling, feature fetching, forward+backward
+(train step), learnable-feature/model update.  Vanilla adds projected
+network time for remote features; Heta's stages are all local (plus the
+Θ(B·hidden) partial exchange, part of the step)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks._util import dram_random_time, emit, net_time
+from repro.core.comm import vanilla_comm_bytes, vanilla_update_bytes
+from repro.core.meta_partition import meta_partition, random_edge_cut
+from repro.core import raf_spmd
+from repro.core.hgnn import HGNNConfig, init_hgnn_params
+from repro.core.raf import assign_branches
+from repro.embed import EmbedEngine, presample_hotness, profile_miss_penalties
+from repro.graph.sampler import NeighborSampler, SampleSpec
+from repro.graph.synthetic import ogbn_mag_like
+from repro.launch.train import _apply_feature_grads
+from repro.optim.adam import AdamConfig, adam_init
+
+import jax
+
+
+def run(scale: float = 0.002, batch: int = 32, fanouts=(5, 4), steps: int = 4):
+    g = ogbn_mag_like(scale=scale)
+    mp = meta_partition(g, 2, num_layers=2)
+    spec = SampleSpec.from_metatree(mp.metatree, fanouts)
+    assignment = assign_branches(spec, mp).fold(1, spec)
+    hot = presample_hotness(g, spec, batch, epochs=1, max_batches=8)
+    pen = profile_miss_penalties(g, measured=False)
+    engine = EmbedEngine(g, 64, hot, pen, cache_bytes=2 << 20)
+    cfg = HGNNConfig(model="rgcn", hidden=64, num_layers=2,
+                     num_classes=g.num_classes)
+    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
+    params = init_hgnn_params(jax.random.PRNGKey(0), cfg, spec, feat_dims)
+    plan = raf_spmd.build_plan(spec, assignment, cfg, feat_dims)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    stacks = raf_spmd.shard_stacks(plan, mesh, raf_spmd.stack_params_from_dict(plan, params))
+    opt = adam_init(stacks)
+    step = raf_spmd.make_train_step(plan, mesh, AdamConfig(lr=1e-3),
+                                    data_axes=("data",), learn_feats=True)
+
+    sampler = NeighborSampler(g, spec, batch, seed=3)
+    stages = {"sample": 0.0, "fetch": 0.0, "step": 0.0, "update": 0.0}
+    cut = random_edge_cut(g, 2)
+    v_fetch = v_upd = 0.0
+    learnable = set(engine.learnable_types)
+    it = sampler.epoch()
+    for i in range(steps):
+        t0 = time.perf_counter()
+        b = next(it)
+        stages["sample"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        tables = engine.tables_snapshot()
+        arrays = raf_spmd.shard_arrays(plan, mesh, raf_spmd.stack_batch(plan, b, tables))
+        stages["fetch"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        stacks, opt, loss, gf = step(stacks, opt, arrays)
+        jax.block_until_ready(loss)
+        stages["step"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        _apply_feature_grads(engine, plan, b, gf, learnable)
+        stages["update"] += time.perf_counter() - t0
+
+        v_fetch += net_time(vanilla_comm_bytes(b, cut, feat_dims, bytes_per_elem=2), 16)
+        ub = vanilla_update_bytes(b, cut, g, bytes_per_elem=2)
+        v_upd += net_time(ub, 8) + dram_random_time(ub)
+
+    total = sum(stages.values())
+    for k, v in stages.items():
+        emit(f"breakdown/heta/{k}", v / steps * 1e6, f"{100*v/total:.0f}% of step")
+    emit("breakdown/vanilla_extra/remote_fetch", v_fetch / steps * 1e6,
+         "projected 100Gbps (Heta: 0)")
+    emit("breakdown/vanilla_extra/remote_update", v_upd / steps * 1e6,
+         "projected (Heta: local, cached)")
+    return stages
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,110 @@
+"""Paper Fig. 8/9 — end-to-end epoch time, Heta vs the vanilla execution
+model.
+
+Two readings:
+  * measured — actual per-step wall time of the SPMD executor on this CPU
+    host for Heta (meta placement) vs the naive-placement ablation (the
+    communication difference shows up as extra work in the inner psum).
+  * projected — the α-β model over exact per-batch byte counts at the
+    paper's testbed constants (100 Gbps, PCIe3), giving the epoch-time
+    split the paper measures on 2×g4dn.metal.  Heta's speedup there comes
+    from eliminating feature fetching + remote learnable updates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._util import dram_random_time, emit, net_time, pcie_time
+from repro.core.comm import vanilla_comm_bytes, vanilla_update_bytes
+from repro.core.meta_partition import meta_partition, random_edge_cut
+from repro.core.raf import assign_branches, raf_comm_bytes, random_branch_assignment
+from repro.graph.sampler import NeighborSampler, SampleSpec
+from repro.graph.synthetic import make_dataset
+from repro.launch.train import train_hgnn
+
+
+def projected_epoch(dataset: str, scale, batch: int, fanouts, hidden: int = 64):
+    """α-β projection of one epoch's comm/update time, vanilla vs Heta."""
+    g = make_dataset(dataset, scale=scale)
+    mp = meta_partition(g, 2, num_layers=len(fanouts))
+    spec = SampleSpec.from_metatree(mp.metatree, fanouts)
+    sampler = NeighborSampler(g, spec, batch, seed=0)
+    b = sampler.sample_batch(g.train_nodes[:batch])
+    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
+    cut = random_edge_cut(g, 2)
+    steps = max(1, len(g.train_nodes) // batch)
+
+    v_bytes = vanilla_comm_bytes(b, cut, feat_dims, bytes_per_elem=2)
+    v_upd = vanilla_update_bytes(b, cut, g, bytes_per_elem=2)
+    h_bytes = raf_comm_bytes(spec, assign_branches(spec, mp), batch, hidden, 2)
+    t_vanilla = steps * (net_time(v_bytes, 64) + net_time(v_upd, 16)
+                         + dram_random_time(v_upd))
+    t_heta = steps * net_time(h_bytes, 4)
+    return t_vanilla, t_heta, steps
+
+
+def _measured_step(model: str, local: bool) -> float:
+    """Warm, fixed-batch step time of the SPMD executor (device compute only;
+    the host pipeline stages are measured separately in breakdown.py)."""
+    import time
+
+    import jax
+
+    from repro.core import raf_spmd
+    from repro.core.hgnn import HGNNConfig, init_embed_tables, init_hgnn_params
+    from repro.core.raf import assign_branches, random_branch_assignment
+    from repro.optim.adam import AdamConfig, adam_init
+
+    g = make_dataset("ogbn-mag", scale=0.002)
+    mp = meta_partition(g, 2, num_layers=2)
+    spec = SampleSpec.from_metatree(mp.metatree, (5, 4))
+    batch = NeighborSampler(g, spec, 32, seed=1).sample_batch(g.train_nodes[:32])
+    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
+    cfg = HGNNConfig(model=model, hidden=64, num_layers=2,
+                     num_classes=g.num_classes)
+    params = init_hgnn_params(jax.random.PRNGKey(0), cfg, spec, feat_dims)
+    emb = init_embed_tables(jax.random.PRNGKey(1), cfg, g.num_nodes, feat_dims)
+    tables = {t: np.asarray(f) for t, f in g.features.items()}
+    tables.update({t: np.asarray(v) for t, v in emb.items()})
+    assignment = (
+        assign_branches(spec, mp) if local
+        else random_branch_assignment(spec, 2, seed=0)
+    ).fold(1, spec)
+    plan = raf_spmd.build_plan(spec, assignment, cfg, feat_dims)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    stacks = raf_spmd.shard_stacks(
+        plan, mesh, raf_spmd.stack_params_from_dict(plan, params))
+    arrays = raf_spmd.shard_arrays(plan, mesh, raf_spmd.stack_batch(plan, batch, tables))
+    step = raf_spmd.make_train_step(plan, mesh, AdamConfig(), data_axes=("data",),
+                                    local_combine=local)
+    opt = adam_init(stacks)
+    ts = []
+    for i in range(6):
+        t0 = time.perf_counter()
+        stacks, opt, loss = step(stacks, opt, arrays)
+        jax.block_until_ready(loss)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts[2:]))
+
+
+def run():
+    # measured: warm step time of the real executor, meta vs naive placement
+    for model in ("rgcn", "rgat"):
+        t_meta = _measured_step(model, local=True)
+        t_naive = _measured_step(model, local=False)
+        emit(f"epoch/measured/{model}/heta_step", t_meta * 1e6, "meta placement")
+        emit(f"epoch/measured/{model}/naive_step", t_naive * 1e6,
+             "naive placement (adds inner-level exchange; ~equal on 1 device)")
+
+    # projected at the paper's constants (comm+update portion of the epoch)
+    for ds, scale, batch in (("ogbn-mag", 0.01, 1024), ("mag240m", 0.0005, 1024)):
+        tv, th, steps = projected_epoch(ds, scale, batch, (25, 20))
+        emit(f"epoch/projected/{ds}/vanilla", tv * 1e6, f"{steps} steps/epoch")
+        emit(f"epoch/projected/{ds}/heta", th * 1e6,
+             f"comm speedup {tv/max(th,1e-12):.1f}x (paper e2e: 1.9-5.8x incl. compute)")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod mesh, derives the three roofline terms
+from the compiled artifact (TPU v5e constants):
+
+  compute    = HLO_FLOPs(per-device) / 197e12      [s]
+  memory     = HLO_bytes(per-device) / 819e9       [s]
+  collective = collective_bytes(per-device) / 50e9 [s]
+
+cost_analysis() is evaluated on the per-device SPMD module, so device terms
+come directly; collective bytes are parsed from the compiled HLO (result
+shapes of all-reduce/all-gather/reduce-scatter/all-to-all/collective-permute).
+
+MODEL_FLOPS uses the 6·N·T (train) / 2·N·T (inference) convention with
+N = active parameters (MoE counts top-k experts only); the ratio
+MODEL_FLOPS / (HLO_FLOPs × chips) shows how much compiled compute is
+"useful" — remat recompute, attention FLOPs and optimizer work land in the
+denominator.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip, TPU v5e
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+__all__ = ["load_records", "roofline_row", "build_table", "render_markdown"]
+
+
+def load_records(dryrun_dir: str, mesh: str = "pod16x16") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def model_flops(rec: Dict) -> float:
+    """6·N_active·T for training, 2·N_active·T for prefill/decode."""
+    from repro.configs.base import INPUT_SHAPES
+
+    shape = INPUT_SHAPES[rec["shape"]]
+    n = rec["active_params"]
+    if rec.get("step_kind") == "train":
+        return 6.0 * n * shape.tokens
+    if rec.get("step_kind") == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["num_devices"]
+    compute = rec["flops"] / PEAK_FLOPS
+    memory = rec["bytes_accessed"] / HBM_BW
+    coll = rec["collectives"].get("total", 0) / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    ratio = mf / max(rec["flops"] * chips, 1.0)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec.get("step_kind"),
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": rec["flops"] * chips,
+        "useful_ratio": ratio,
+        "collectives": rec["collectives"],
+        "memory_bytes": rec["memory"],
+    }
+
+
+_ADVICE = {
+    "compute": "raise MFU: larger per-chip tiles (less padding), fuse elementwise chains, drop remat where memory allows",
+    "memory": "cut HBM traffic: fuse producer→consumer chains (flash-attention-style), wider arithmetic intensity per pass, bf16 intermediates",
+    "collective": "cut wire bytes: reduce-scatter+all-gather instead of all-reduce, shard the reduction axis differently, overlap collectives with compute",
+}
+
+
+def build_table(dryrun_dir: str, mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for rec in load_records(dryrun_dir, mesh):
+        if rec.get("status") == "skip":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skip": rec["reason"]})
+            continue
+        row = roofline_row(rec)
+        if row:
+            row["advice"] = _ADVICE[row["dominant"]]
+            rows.append(row)
+    return rows
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    head = (
+        "| arch | shape | kind | compute (ms) | memory (ms) | collective (ms) "
+        "| bound | useful (6NT/HLO) |\n|---|---|---|---|---|---|---|---|"
+    )
+    lines = [head]
+    for r in rows:
+        if "skip" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP | {r['skip']} |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = build_table(args.dryrun_dir, args.mesh)
+    print(render_markdown(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

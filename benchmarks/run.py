@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  comm_volume   — §4 worked example (92.3 → 8.0 → 0.5 MB)
+  epoch_time    — Fig. 8/9 epoch time (measured + α-β projection)
+  breakdown     — Fig. 10 stage breakdown
+  partitioning  — Table 2 partitioning time/memory
+  cache_bench   — Fig. 11/12 cache ablation + hit rates
+  ablations     — Fig. 13/14/15 hidden-dim / scalability / fanout
+  equivalence   — Fig. 16 accuracy (loss) equivalence, exact
+  kernels_bench — Pallas kernel oracle timings + TPU static properties
+
+Output: ``name,us_per_call,derived`` CSV rows (printed as each module runs).
+Roofline tables (§Dry-run/§Roofline) are produced by ``benchmarks.roofline``
+from the dry-run artifacts, which require the 512-device environment.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        ablations,
+        breakdown,
+        cache_bench,
+        comm_volume,
+        epoch_time,
+        equivalence,
+        kernels_bench,
+        partitioning,
+    )
+
+    modules = [
+        ("comm_volume", comm_volume),
+        ("partitioning", partitioning),
+        ("cache_bench", cache_bench),
+        ("ablations", ablations),
+        ("equivalence", equivalence),
+        ("kernels_bench", kernels_bench),
+        ("breakdown", breakdown),
+        ("epoch_time", epoch_time),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

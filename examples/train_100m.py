@@ -1,0 +1,50 @@
+"""End-to-end driver: train a ~100M-parameter HGNN for a few hundred steps.
+
+The model is R-GAT over a Freebase-like HetG where every node type is
+featureless — the ~100M parameters are dominated by the learnable feature
+tables (≈1.5M nodes × 64 dims) plus per-relation attention weights, exactly
+the regime Heta's cache targets (paper §2.3: learnable-feature updates are
+24-35% of DGL's epoch time).
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.graph.synthetic import freebase_like
+from repro.launch.train import train_hgnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=128)
+    args = ap.parse_args()
+
+    g = freebase_like(scale=0.001)
+    learnable_rows = sum(g.num_nodes.values())
+    print(f"graph: {g.total_nodes:,} nodes / {g.total_edges:,} edges, "
+          f"{len(g.relations)} relations")
+    print(f"learnable parameters: {learnable_rows * 64 / 1e6:.1f}M rows×64 "
+          f"(+ Adam states ×2)\n")
+
+    t0 = time.time()
+    m = train_hgnn(
+        dataset="freebase", scale=0.001, model="rgat",
+        num_partitions=4, batch_size=args.batch_size, fanouts=(10, 5),
+        hidden=64, steps=args.steps, cache_mb=32, log_every=10,
+    )
+    dt = time.time() - t0
+    losses = m["losses"]
+    k = max(1, len(losses) // 10)
+    print(f"\nloss: first-{k}-avg {np.mean(losses[:k]):.4f} -> "
+          f"last-{k}-avg {np.mean(losses[-k:]):.4f}")
+    print(f"total {dt/60:.1f} min, median step {m['step_time_s']*1e3:.0f} ms")
+    print(f"cache hit rates: { {t: round(r, 2) for t, r in m['hit_rates'].items()} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Sharded checkpointing: flatten a pytree to npz shards + a JSON manifest.
+
+Each host saves the addressable shards of its arrays (single-host here, so
+everything), keyed by the pytree path.  Restore rebuilds the tree and
+device_puts with the provided shardings.  No external deps (no orbax).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:  # npz cannot store bf16
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_step(directory: str, name: str = "ckpt") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.fullmatch(rf"{name}_(\d+)\.npz", f))
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, template: Any, name: str = "ckpt") -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    data = np.load(path)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in leaves_with_path:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = data[key]
+        if np.asarray(leaf).dtype == jax.numpy.bfloat16:
+            arr = arr.view(jax.numpy.bfloat16)
+        if hasattr(leaf, "sharding"):
+            arr = jax.device_put(arr, leaf.sharding)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

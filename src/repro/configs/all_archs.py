@@ -1,0 +1,11 @@
+"""Import every architecture config to populate the registry."""
+import repro.configs.llama3_2_3b  # noqa: F401
+import repro.configs.yi_6b  # noqa: F401
+import repro.configs.jamba_1_5_large_398b  # noqa: F401
+import repro.configs.mamba2_1_3b  # noqa: F401
+import repro.configs.llava_next_34b  # noqa: F401
+import repro.configs.qwen3_moe_30b_a3b  # noqa: F401
+import repro.configs.qwen2_1_5b  # noqa: F401
+import repro.configs.granite_moe_1b_a400m  # noqa: F401
+import repro.configs.hubert_xlarge  # noqa: F401
+import repro.configs.chatglm3_6b  # noqa: F401

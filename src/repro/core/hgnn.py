@@ -1,0 +1,418 @@
+"""HGNN models (R-GCN, R-GAT, HGT) over the sampled branch representation.
+
+An HGNN layer (paper Eq. 1) is
+
+    h_v^(l) = AGG_all( { AGG_r( {h_u^(l-1) : u ∈ N_r(v)} ) : r ∈ R } )
+
+The sampler (``repro.graph.sampler``) materializes the metatree as *branches*;
+this module evaluates them bottom-up.  Branch at depth d carries nodes whose
+embeddings live at layer (k - d); the relation-specific aggregation AGG_r maps
+child-branch embeddings to the parent's next layer, and AGG_all is a masked
+sum over sibling branches followed by a nonlinearity.
+
+Parameters are tied per (relation, layer) — one weight set per relation per
+layer, shared across metatree occurrences at the same layer (matches DGL's
+HeteroGraphConv).  Model variants:
+
+  * R-GCN  — masked-mean neighbor aggregation + per-relation linear [39]
+  * R-GAT  — per-relation multi-head attention [3]; attention queries are the
+             destination nodes' *input* features (tree-sampling variant; see
+             DESIGN.md §7)
+  * HGT    — per-node-type K/Q/V projections + per-edge-type attention and
+             message matrices [21] (simplified: no residual/prior-μ tricks)
+
+All functions are pure and jit-able.  The same forward is used by the vanilla
+executor, the simulated RAF executor, and (stacked/padded) the SPMD RAF
+executor, so Prop-1 equivalence tests compare identical math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.hetgraph import Relation
+from repro.graph.sampler import BranchSpec, SampleSpec, SampledBatch
+
+__all__ = [
+    "HGNNConfig",
+    "init_hgnn_params",
+    "init_embed_tables",
+    "hgnn_forward",
+    "hgnn_loss",
+    "batch_to_arrays",
+    "branch_layer",
+    "masked_mean",
+    "masked_softmax",
+]
+
+Params = Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class HGNNConfig:
+    model: str = "rgcn"  # rgcn | rgat | hgt
+    hidden: int = 64
+    num_layers: int = 2
+    num_heads: int = 4
+    num_classes: int = 2
+    learnable_dim: int = 64  # dim of learnable features for featureless types
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.model not in ("rgcn", "rgat", "hgt"):
+            raise ValueError(f"unknown HGNN model {self.model!r}")
+        if self.hidden % self.num_heads:
+            raise ValueError("hidden must be divisible by num_heads")
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.num_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def branch_layer(spec: SampleSpec, depth: int) -> int:
+    """HGNN layer index (1-based) a branch at ``depth`` feeds: layer k-d+1."""
+    return spec.num_layers - depth + 1
+
+
+# --------------------------------------------------------------------------
+# masked reductions
+# --------------------------------------------------------------------------
+
+
+def masked_mean(h: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """h [..., f, d], mask [..., f] -> [..., d]; empty groups give zeros."""
+    w = mask.astype(h.dtype)
+    s = jnp.einsum("...fd,...f->...d", h, w)
+    return s / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1.0)
+
+
+def masked_softmax(e: jnp.ndarray, mask: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Softmax with masked slots excluded; all-masked groups give zeros."""
+    neg = jnp.asarray(jnp.finfo(e.dtype).min, e.dtype)
+    e = jnp.where(mask, e, neg)
+    e = e - jax.lax.stop_gradient(jnp.max(e, axis=axis, keepdims=True))
+    z = jnp.exp(e) * mask.astype(e.dtype)
+    return z / jnp.maximum(jnp.sum(z, axis=axis, keepdims=True), 1e-9)
+
+
+# --------------------------------------------------------------------------
+# parameter initialization
+# --------------------------------------------------------------------------
+
+
+def _glorot(key, shape, dtype):
+    fan_in, fan_out = shape[-2], shape[-1]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def _rel_param_specs(
+    cfg: HGNNConfig, spec: SampleSpec, feat_dims: Dict[str, int]
+) -> Dict[Tuple[str, int], Tuple[str, str, int, int]]:
+    """Unique (relation-key, layer) -> (src_type, dst_type, d_src, d_dst)."""
+    dims = lambda t: feat_dims.get(t, cfg.learnable_dim)
+    out: Dict[Tuple[str, int], Tuple[str, str, int, int]] = {}
+    parents: List[str] = [spec.target_type]
+    for d, branches in enumerate(spec.levels, start=1):
+        layer = branch_layer(spec, d)
+        nxt = []
+        for b in branches:
+            dst_t = parents[b.parent]
+            d_src = dims(b.rel.src) if layer == 1 else cfg.hidden
+            d_dst = dims(dst_t)  # queries always come from input features
+            out.setdefault((b.rel.key, layer), (b.rel.src, dst_t, d_src, d_dst))
+            nxt.append(b.rel.src)
+        parents = nxt
+    return out
+
+
+def init_hgnn_params(
+    key: jax.Array,
+    cfg: HGNNConfig,
+    spec: SampleSpec,
+    feat_dims: Dict[str, int],
+    restrict_rels: Optional[List[str]] = None,
+) -> Params:
+    """Initialize per-(relation, layer) parameters plus the classifier head.
+
+    ``restrict_rels``: only materialize params for these relation keys (RAF
+    partitions hold only the parameters of their local relations, paper §4).
+    """
+    dt = cfg.jdtype
+    specs = _rel_param_specs(cfg, spec, feat_dims)
+    params: Params = {"rel": {}, "ntype": {}, "etype": {}}
+    nh, dh, H = cfg.num_heads, cfg.head_dim, cfg.hidden
+
+    # Keys are derived per parameter *name*, not by consumption order, so a
+    # partition-restricted init (RAF workers hold only their relations'
+    # parameters) produces bit-identical weights to the full init — required
+    # for the Prop-1 equivalence tests.
+    def _keys(name: str, n: int):
+        base = jax.random.fold_in(key, zlib.crc32(name.encode()))
+        return iter(jax.random.split(base, n))
+
+    for i, ((rk, layer), (src_t, dst_t, d_src, d_dst)) in enumerate(
+        sorted(specs.items())
+    ):
+        if restrict_rels is not None and rk not in restrict_rels:
+            continue
+        name = f"{rk}@{layer}"
+        kit = _keys(name, 8)
+        if cfg.model == "rgcn":
+            params["rel"][name] = {
+                "w": _glorot(next(kit), (d_src, H), dt),
+                "b": jnp.zeros((H,), dt),
+            }
+        elif cfg.model == "rgat":
+            params["rel"][name] = {
+                "w": _glorot(next(kit), (d_src, H), dt),
+                "w_dst": _glorot(next(kit), (d_dst, H), dt),
+                "a_src": _glorot(next(kit), (nh, dh), dt) * 0.1,
+                "a_dst": _glorot(next(kit), (nh, dh), dt) * 0.1,
+                "b": jnp.zeros((H,), dt),
+            }
+        else:  # hgt: per-type K/Q/V + per-etype att/msg
+            etype = rk.split("-")[1]
+            # per-type / per-etype params derive their keys from their own
+            # names (not the relation's) so shared params are bit-identical
+            # no matter which relation triggered their creation
+            for (kind, t, din) in (("kqv_src", src_t, d_src), ("q_dst", dst_t, d_dst)):
+                tkey = f"{t}@{layer}" if kind == "kqv_src" else f"{t}@{layer}:q"
+                if tkey not in params["ntype"]:
+                    tkit = _keys(tkey, 2)
+                    if kind == "kqv_src":
+                        params["ntype"][tkey] = {
+                            "wk": _glorot(next(tkit), (din, H), dt),
+                            "wv": _glorot(next(tkit), (din, H), dt),
+                        }
+                    else:
+                        params["ntype"][tkey] = {
+                            "wq": _glorot(next(tkit), (din, H), dt),
+                        }
+            ekey = f"{etype}@{layer}"
+            if ekey not in params["etype"]:
+                params["etype"][ekey] = {
+                    "w_att": _glorot(next(_keys(ekey, 2)), (nh, dh, dh), dt),
+                    "w_msg": _glorot(next(_keys(ekey + ":m", 1)), (nh, dh, dh), dt),
+                }
+            params["rel"][name] = {"_uses": (f"{src_t}@{layer}", f"{dst_t}@{layer}:q", ekey)}
+
+    hk = _keys("head", 1)
+    params["head"] = {
+        "w": _glorot(next(hk), (H, cfg.num_classes), dt),
+        "b": jnp.zeros((cfg.num_classes,), dt),
+    }
+    return params
+
+
+def init_embed_tables(
+    key: jax.Array,
+    cfg: HGNNConfig,
+    num_nodes: Dict[str, int],
+    featured: Dict[str, int],
+) -> Dict[str, jnp.ndarray]:
+    """Learnable feature tables for featureless node types (paper §2.1)."""
+    tables = {}
+    types = [t for t in sorted(num_nodes) if t not in featured]
+    for t, k in zip(types, jax.random.split(key, max(len(types), 1))):
+        tables[t] = (
+            jax.random.normal(k, (num_nodes[t], cfg.learnable_dim), cfg.jdtype) * 0.1
+        )
+    return tables
+
+
+# --------------------------------------------------------------------------
+# relation-specific aggregations (AGG_r)
+# --------------------------------------------------------------------------
+
+
+def _agg_rgcn(p, h_src, q_feats, mask):
+    # mean over neighbors, then per-relation linear
+    agg = masked_mean(h_src, mask)
+    return agg @ p["w"] + p["b"]
+
+
+def _agg_rgat(p, h_src, q_feats, mask, nh: int, dh: int):
+    n, f, _ = h_src.shape
+    z = (h_src @ p["w"]).reshape(n, f, nh, dh)
+    qz = (q_feats @ p["w_dst"]).reshape(n, nh, dh)
+    e_src = jnp.einsum("nfhd,hd->nfh", z, p["a_src"])
+    e_dst = jnp.einsum("nhd,hd->nh", qz, p["a_dst"])
+    e = jax.nn.leaky_relu(e_src + e_dst[:, None, :], negative_slope=0.2)
+    alpha = masked_softmax(e, mask[:, :, None], axis=1)
+    out = jnp.einsum("nfh,nfhd->nhd", alpha, z).reshape(n, nh * dh)
+    return out + p["b"]
+
+
+def _agg_hgt(p_rel, params, h_src, q_feats, mask, nh: int, dh: int):
+    src_key, dst_key, ekey = p_rel["_uses"]
+    pt, pq, pe = params["ntype"][src_key], params["ntype"][dst_key], params["etype"][ekey]
+    n, f, _ = h_src.shape
+    k = (h_src @ pt["wk"]).reshape(n, f, nh, dh)
+    v = (h_src @ pt["wv"]).reshape(n, f, nh, dh)
+    q = (q_feats @ pq["wq"]).reshape(n, nh, dh)
+    kw = jnp.einsum("nfhd,hde->nfhe", k, pe["w_att"])
+    att = jnp.einsum("nfhe,nhe->nfh", kw, q) / jnp.sqrt(jnp.asarray(dh, h_src.dtype))
+    alpha = masked_softmax(att, mask[:, :, None], axis=1)
+    msg = jnp.einsum("nfhd,hde->nfhe", v, pe["w_msg"])
+    return jnp.einsum("nfh,nfhe->nhe", alpha, msg).reshape(n, nh * dh)
+
+
+def agg_relation(
+    cfg: HGNNConfig, params: Params, rel_name: str, h_src, q_feats, mask
+):
+    """AGG_r: [n, f, d_src] x [n, d_dst_feat] x [n, f] -> [n, hidden]."""
+    p = params["rel"][rel_name]
+    if cfg.model == "rgcn":
+        return _agg_rgcn(p, h_src, q_feats, mask)
+    if cfg.model == "rgat":
+        return _agg_rgat(p, h_src, q_feats, mask, cfg.num_heads, cfg.head_dim)
+    return _agg_hgt(p, params, h_src, q_feats, mask, cfg.num_heads, cfg.head_dim)
+
+
+# --------------------------------------------------------------------------
+# batch arrays + full forward (the vanilla execution model's compute)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchArrays:
+    """Device-side view of a :class:`SampledBatch` (static tree structure,
+    traced arrays).  Feature gathers happen inside the forward so learnable
+    tables stay differentiable.  Registered as a pytree so steps jit over it.
+    """
+
+    seeds: jnp.ndarray  # [B]
+    labels: jnp.ndarray  # [B]
+    nids: Tuple[jnp.ndarray, ...]  # per level: [R_d, N_d]
+    masks: Tuple[jnp.ndarray, ...]  # per level: [R_d, N_d]
+
+
+jax.tree_util.register_dataclass(
+    BatchArrays,
+    data_fields=["seeds", "labels", "nids", "masks"],
+    meta_fields=[],
+)
+
+
+def batch_to_arrays(batch: SampledBatch) -> BatchArrays:
+    return BatchArrays(
+        seeds=jnp.asarray(batch.seeds),
+        labels=jnp.asarray(batch.labels),
+        nids=tuple(jnp.asarray(lv.nids) for lv in batch.levels),
+        masks=tuple(jnp.asarray(lv.mask) for lv in batch.levels),
+    )
+
+
+def _branch_io(spec: SampleSpec) -> List[List[Tuple[BranchSpec, str]]]:
+    """Per level: (branch, dst_type) — dst type is the parent's src type."""
+    out: List[List[Tuple[BranchSpec, str]]] = []
+    parents = [spec.target_type]
+    for branches in spec.levels:
+        row = [(b, parents[b.parent]) for b in branches]
+        out.append(row)
+        parents = [b.rel.src for b in branches]
+    return out
+
+
+def hgnn_forward(
+    cfg: HGNNConfig,
+    params: Params,
+    tables: Dict[str, jnp.ndarray],
+    batch: BatchArrays,
+    spec: SampleSpec,
+    branch_mask: Optional[Dict[Tuple[int, int], bool]] = None,
+    return_partial: bool = False,
+) -> jnp.ndarray:
+    """Evaluate the full metatree bottom-up; returns logits [B, classes].
+
+    ``tables`` maps node type -> feature table ([num_nodes, d]); learnable
+    tables should be passed via ``params['embed']`` by the caller merging them
+    in (they are gathered identically).  ``branch_mask`` drops branches (used
+    by the RAF executors to evaluate only a partition's sub-metatrees).
+
+    ``return_partial=True`` returns the root's *partial aggregation* — the
+    pre-AGG_all accumulation [B, hidden] — which is exactly what RAF workers
+    exchange (paper Alg. 1 line 6); the caller sums partials across
+    partitions, applies the nonlinearity and the classifier head.
+    """
+    k = spec.num_layers
+    io = _branch_io(spec)
+    embed = params.get("embed", {})
+    lookup = lambda t: embed[t] if t in embed else tables[t]
+
+    def feats_of(depth: int, b: int) -> jnp.ndarray:
+        if depth == 0:
+            return lookup(spec.target_type)[batch.seeds]
+        sp = spec.levels[depth - 1][b]
+        return lookup(sp.rel.src)[batch.nids[depth - 1][b]]
+
+    def included(depth: int, b: int) -> bool:
+        return branch_mask is None or branch_mask.get((depth, b), False)
+
+    # bottom-up: combined[b] accumulates AGG_r outputs into parent embeddings
+    child_sum: List[Optional[jnp.ndarray]] = [None]  # per parent at level d-1
+    for depth in range(k, 0, -1):
+        branches = io[depth - 1]
+        f = spec.fanouts[depth - 1]
+        n_parent_prev = None
+        sums: List[Optional[jnp.ndarray]] = [None] * (
+            len(io[depth - 2]) if depth > 1 else 1
+        )
+        for b, (bs, dst_t) in enumerate(branches):
+            if not included(depth, b):
+                continue
+            # embeddings of this branch's nodes at layer (k - depth)
+            if depth == k:
+                h_nodes = feats_of(depth, b)
+            else:
+                acc = child_sum[b]
+                if acc is None:
+                    # leaf-at-intermediate-depth: type had no in-relations
+                    h_nodes = jnp.zeros(
+                        (batch.nids[depth - 1][b].shape[0], cfg.hidden), cfg.jdtype
+                    )
+                else:
+                    h_nodes = jax.nn.relu(acc)
+            n = h_nodes.shape[0] // f
+            h_src = h_nodes.reshape(n, f, -1)
+            mask = batch.masks[depth - 1][b].reshape(n, f)
+            q_feats = feats_of(depth - 1, bs.parent)
+            name = f"{bs.rel.key}@{branch_layer(spec, depth)}"
+            out = agg_relation(cfg, params, name, h_src, q_feats, mask)
+            if sums[bs.parent] is None:
+                sums[bs.parent] = out
+            else:
+                sums[bs.parent] = sums[bs.parent] + out
+        child_sum = sums
+
+    root = child_sum[0]
+    if root is None:
+        root = jnp.zeros((batch.seeds.shape[0], cfg.hidden), cfg.jdtype)
+    if return_partial:
+        return root
+    h = jax.nn.relu(root)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def hgnn_loss(
+    cfg: HGNNConfig,
+    params: Params,
+    tables: Dict[str, jnp.ndarray],
+    batch: BatchArrays,
+    spec: SampleSpec,
+) -> jnp.ndarray:
+    logits = hgnn_forward(cfg, params, tables, batch, spec)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch.labels[:, None], axis=-1)
+    return jnp.mean(nll)

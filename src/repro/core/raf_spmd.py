@@ -1,0 +1,513 @@
+"""SPMD RAF executor — relations laid along the ``"model"`` mesh axis.
+
+This is the production realization of paper Alg. 1 on a TPU mesh:
+
+  * the metatree's branches are grouped by owning meta-partition and the
+    branch axis is sharded over ``"model"`` — each model-shard holds its
+    partition's relation parameters, sampled blocks and feature slices;
+  * relation-specific aggregation + within-partition cross-relation combines
+    are shard-local tensor ops (``segment_sum`` over the *local* branch axis);
+  * the only model-axis collective is one ``psum`` of the root partials
+    [batch, hidden] per step — Θ(|B|·hidden), the paper's Prop-2 bound —
+    plus the loss scalar;
+  * the batch axis is sharded over (``"pod"``, ``"data"``) — the paper's
+    intra-machine data parallelism.
+
+A ``local_combine=False`` mode emulates *naive* relation placement (branches
+scattered without metatree awareness): inner-level partial aggregations must
+then cross the model axis as full [R, N, hidden] psums — the paper's 8.0 MB
+case, used as the ablation baseline in benchmarks and §Perf.
+
+Everything is static-shaped: branch counts are padded per shard, dummy slots
+carry zeroed parameters and all-False masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hgnn import HGNNConfig, Params, masked_mean, masked_softmax
+from repro.core.raf import BranchAssignment
+from repro.graph.sampler import SampledBatch, SampleSpec
+
+__all__ = [
+    "StackedPlan",
+    "build_plan",
+    "stack_params_from_dict",
+    "stack_batch",
+    "raf_spmd_forward",
+    "make_train_step",
+]
+
+
+# --------------------------------------------------------------------------
+# static plan
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LevelPlan:
+    depth: int
+    layer: int
+    fanout: int
+    d_in: int  # aggregation input dim (d_pad at the leaf layer, hidden above)
+    slot_branch: np.ndarray  # [P, rb] original branch index, -1 for dummies
+    parent_local: np.ndarray  # [P, rb] parent slot within the shard, level d-1
+    parent_global: np.ndarray  # [P, rb] parent global slot (naive mode)
+    branch_u: np.ndarray  # [P, rb] index into the shard's layer-l param stack
+    valid: np.ndarray  # [P, rb] bool
+
+    @property
+    def rb(self) -> int:
+        return self.slot_branch.shape[1]
+
+
+@dataclasses.dataclass
+class StackedPlan:
+    spec: SampleSpec
+    cfg: HGNNConfig
+    num_shards: int
+    d_pad: int
+    levels: List[LevelPlan]
+    # per layer: list of (relation_key@layer) per shard slot — [P][U_l]
+    layer_params: Dict[int, List[List[str]]]
+    src_types: List[List[str]]  # per level: src type per original branch
+    dst_types: List[List[str]]  # per level: dst type per original branch
+
+    def u_of(self, layer: int) -> int:
+        return max(len(names) for names in self.layer_params[layer])
+
+
+def build_plan(
+    spec: SampleSpec,
+    assignment: BranchAssignment,
+    cfg: HGNNConfig,
+    feat_dims: Dict[str, int],
+) -> StackedPlan:
+    if cfg.model not in ("rgcn", "rgat"):
+        raise NotImplementedError(
+            "SPMD RAF executor supports rgcn/rgat; HGT uses the simulated "
+            "executor (per-node-type parameter structure; see DESIGN.md)"
+        )
+    Pn = assignment.num_partitions
+    k = spec.num_layers
+    dims = lambda t: feat_dims.get(t, cfg.learnable_dim)
+    all_types = set([spec.target_type])
+    for lv in spec.levels:
+        for b in lv:
+            all_types.add(b.rel.src)
+    d_pad = max(dims(t) for t in all_types)
+
+    # paper-faithful bookkeeping of src/dst types per branch (feature gathers)
+    src_types, dst_types = [], []
+    parents = [spec.target_type]
+    for lv in spec.levels:
+        src_types.append([b.rel.src for b in lv])
+        dst_types.append([parents[b.parent] for b in lv])
+        parents = [b.rel.src for b in lv]
+
+    # group branches by owner, pad to uniform per-shard counts
+    slot_of: List[Dict[int, Tuple[int, int]]] = []  # per level: branch -> (p, slot)
+    level_plans: List[LevelPlan] = []
+    layer_params: Dict[int, List[List[str]]] = {}
+    for d in range(1, k + 1):
+        layer = k - d + 1
+        owners = assignment.owner[d - 1]
+        by_p: List[List[int]] = [[] for _ in range(Pn)]
+        for b, o in enumerate(owners):
+            by_p[int(o)].append(b)
+        rb = max(1, max(len(x) for x in by_p))
+        slot_branch = np.full((Pn, rb), -1, dtype=np.int64)
+        valid = np.zeros((Pn, rb), dtype=bool)
+        smap: Dict[int, Tuple[int, int]] = {}
+        for p in range(Pn):
+            for s, b in enumerate(by_p[p]):
+                slot_branch[p, s] = b
+                valid[p, s] = True
+                smap[b] = (p, s)
+        slot_of.append(smap)
+
+        # per-shard unique (rel@layer) param list
+        names = layer_params.setdefault(layer, [[] for _ in range(Pn)])
+        branch_u = np.zeros((Pn, rb), dtype=np.int64)
+        for p in range(Pn):
+            for s, b in enumerate(by_p[p]):
+                nm = f"{spec.levels[d - 1][b].rel.key}@{layer}"
+                if nm not in names[p]:
+                    names[p].append(nm)
+                branch_u[p, s] = names[p].index(nm)
+
+        # parent mapping
+        parent_local = np.zeros((Pn, rb), dtype=np.int64)
+        parent_global = np.zeros((Pn, rb), dtype=np.int64)
+        if d > 1:
+            prev = level_plans[-1]
+            for p in range(Pn):
+                for s in range(rb):
+                    b = slot_branch[p, s]
+                    if b < 0:
+                        continue
+                    pb = spec.levels[d - 1][b].parent
+                    pp, ps = slot_of[d - 2][pb]
+                    parent_global[p, s] = pp * prev.rb + ps
+                    parent_local[p, s] = ps
+                    if pp != p and assignment.meta_local:
+                        raise AssertionError("meta-local assignment violated")
+        level_plans.append(
+            LevelPlan(
+                depth=d,
+                layer=layer,
+                fanout=spec.fanouts[d - 1],
+                d_in=d_pad if d == k else cfg.hidden,
+                slot_branch=slot_branch,
+                parent_local=parent_local,
+                parent_global=parent_global,
+                branch_u=branch_u,
+                valid=valid,
+            )
+        )
+    return StackedPlan(
+        spec=spec,
+        cfg=cfg,
+        num_shards=Pn,
+        d_pad=d_pad,
+        levels=level_plans,
+        layer_params=layer_params,
+        src_types=src_types,
+        dst_types=dst_types,
+    )
+
+
+# --------------------------------------------------------------------------
+# parameter stacking
+# --------------------------------------------------------------------------
+
+
+def _pad_rows(w: np.ndarray, rows: int) -> np.ndarray:
+    out = np.zeros((rows,) + w.shape[1:], dtype=w.dtype)
+    out[: w.shape[0]] = w
+    return out
+
+
+def stack_params_from_dict(plan: StackedPlan, params: Params) -> Dict:
+    """Pack dict-form parameters (``init_hgnn_params``) into per-layer stacks
+    [P, U_l, ...] with input dims padded to ``d_pad`` at the leaf layer.
+    Padding rows are zero, so padded feature slots contribute nothing and the
+    stacked forward is bit-equivalent to the dict forward."""
+    cfg = plan.cfg
+    k = plan.spec.num_layers
+    stacks: Dict = {}
+    for layer, names_per_p in plan.layer_params.items():
+        U = plan.u_of(layer)
+        d_in = plan.d_pad if layer == 1 else cfg.hidden
+        get = lambda nm: jax.tree.map(np.asarray, params["rel"][nm])
+        w = np.zeros((plan.num_shards, U, d_in, cfg.hidden), np.float32)
+        b = np.zeros((plan.num_shards, U, cfg.hidden), np.float32)
+        extra = {}
+        if cfg.model == "rgat":
+            extra = {
+                "w_dst": np.zeros((plan.num_shards, U, plan.d_pad, cfg.hidden), np.float32),
+                "a_src": np.zeros((plan.num_shards, U, cfg.num_heads, cfg.head_dim), np.float32),
+                "a_dst": np.zeros((plan.num_shards, U, cfg.num_heads, cfg.head_dim), np.float32),
+            }
+        for p, names in enumerate(names_per_p):
+            for u, nm in enumerate(names):
+                pr = get(nm)
+                w[p, u] = _pad_rows(pr["w"], d_in)
+                b[p, u] = pr["b"]
+                if cfg.model == "rgat":
+                    extra["w_dst"][p, u] = _pad_rows(pr["w_dst"], plan.d_pad)
+                    extra["a_src"][p, u] = pr["a_src"]
+                    extra["a_dst"][p, u] = pr["a_dst"]
+        stacks[f"layer{layer}"] = {"w": jnp.asarray(w), "b": jnp.asarray(b),
+                                   **{k2: jnp.asarray(v) for k2, v in extra.items()}}
+    # copy (not alias) the head: the train step donates its inputs, and an
+    # aliased caller-owned array would be deleted out from under the caller
+    stacks["head"] = jax.tree.map(lambda a: jnp.array(a, copy=True), params["head"])
+    return stacks
+
+
+# --------------------------------------------------------------------------
+# batch stacking (host-side feature gathers)
+# --------------------------------------------------------------------------
+
+
+def stack_batch(
+    plan: StackedPlan,
+    batch: SampledBatch,
+    tables: Dict[str, np.ndarray],
+) -> Dict:
+    """Assemble the stacked device arrays for one sampled batch.
+
+    ``tables`` must contain a feature table for every node type (learnable
+    tables included — the embed engine supplies them).  Feature gathers for a
+    shard's branches touch only node types present in its partition, matching
+    Heta's locality argument; we materialize all shards' slices because the
+    test/driver processes run every shard on one host.
+    """
+    spec, k = plan.spec, plan.spec.num_layers
+    B = batch.batch_size
+    dp = plan.d_pad
+
+    def padded_gather(t: str, nids: np.ndarray) -> np.ndarray:
+        tab = tables[t]
+        out = np.zeros((len(nids), dp), np.float32)
+        out[:, : tab.shape[1]] = tab[nids]
+        return out
+
+    arrays: Dict = {"seeds": jnp.asarray(batch.seeds), "labels": jnp.asarray(batch.labels)}
+    n_prev = B
+    for d in range(1, k + 1):
+        lp = plan.levels[d - 1]
+        lv = batch.levels[d - 1]
+        n_d = lv.nids.shape[1]
+        mask = np.zeros((plan.num_shards, lp.rb, n_d), bool)
+        qfeat = np.zeros((plan.num_shards, lp.rb, n_prev, dp), np.float32)
+        hfeat = (
+            np.zeros((plan.num_shards, lp.rb, n_d, dp), np.float32) if d == k else None
+        )
+        for p in range(plan.num_shards):
+            for s in range(lp.rb):
+                b = lp.slot_branch[p, s]
+                if b < 0:
+                    continue
+                mask[p, s] = lv.mask[b]
+                dst_t = plan.dst_types[d - 1][b]
+                parent_nids = (
+                    batch.seeds if d == 1 else batch.levels[d - 2].nids[spec.levels[d - 1][b].parent]
+                )
+                qfeat[p, s] = padded_gather(dst_t, parent_nids)
+                if d == k:
+                    hfeat[p, s] = padded_gather(plan.src_types[d - 1][b], lv.nids[b])
+        arrays[f"mask{d}"] = jnp.asarray(mask.reshape(plan.num_shards * lp.rb, n_d))
+        arrays[f"qfeat{d}"] = jnp.asarray(qfeat.reshape(plan.num_shards * lp.rb, n_prev, dp))
+        if d == k:
+            arrays[f"hfeat{d}"] = jnp.asarray(hfeat.reshape(plan.num_shards * lp.rb, n_d, dp))
+        n_prev = n_d
+    return arrays
+
+
+# --------------------------------------------------------------------------
+# the sharded forward
+# --------------------------------------------------------------------------
+
+
+def _agg_level(cfg: HGNNConfig, lp: LevelPlan, stacks, h_in, qfeat, mask, shard_idx):
+    """Relation-specific aggregation for one level on one shard.
+
+    h_in  [rb, n_d, d_in] -> out [rb, n_prev, hidden]
+    """
+    layer = stacks[f"layer{lp.layer}"]
+    u = jnp.asarray(lp.branch_u)[shard_idx]  # [rb]
+    valid = jnp.asarray(lp.valid)[shard_idx]  # [rb]
+    w = layer["w"][0][u]  # [rb, d_in, H]
+    b = layer["b"][0][u]  # [rb, H]
+    rb, n_d, d_in = h_in.shape
+    f = lp.fanout
+    n_prev = n_d // f
+    hg = h_in.reshape(rb, n_prev, f, d_in)
+    mg = mask.reshape(rb, n_prev, f)
+    if cfg.model == "rgcn":
+        agg = masked_mean(hg, mg)  # [rb, n_prev, d_in]
+        out = jnp.einsum("rnd,rdh->rnh", agg, w) + b[:, None, :]
+    else:  # rgat
+        nh, dh = cfg.num_heads, cfg.head_dim
+        w_dst = layer["w_dst"][0][u]
+        a_src = layer["a_src"][0][u]
+        a_dst = layer["a_dst"][0][u]
+        z = jnp.einsum("rnfd,rdh->rnfh", hg, w).reshape(rb, n_prev, f, nh, dh)
+        qz = jnp.einsum("rnd,rdh->rnh", qfeat, w_dst).reshape(rb, n_prev, nh, dh)
+        e = jnp.einsum("rnfhd,rhd->rnfh", z, a_src) + jnp.einsum(
+            "rnhd,rhd->rnh", qz, a_dst
+        )[:, :, None, :]
+        e = jax.nn.leaky_relu(e, negative_slope=0.2)
+        alpha = masked_softmax(e, mg[..., None], axis=2)
+        out = jnp.einsum("rnfh,rnfhd->rnhd", alpha, z).reshape(rb, n_prev, nh * dh)
+        out = out + b[:, None, :]
+    return out * valid[:, None, None].astype(out.dtype)
+
+
+def raf_spmd_forward(
+    plan: StackedPlan,
+    stacks: Dict,
+    arrays: Dict,
+    model_axis: str = "model",
+    local_combine: bool = True,
+):
+    """Per-shard body (runs inside shard_map).  Returns root embedding
+    [B_local, hidden] (replicated over the model axis after the psum)."""
+    cfg, k = plan.cfg, plan.spec.num_layers
+    shard_idx = jax.lax.axis_index(model_axis)
+    child: Optional[jnp.ndarray] = None
+    for d in range(k, 0, -1):
+        lp = plan.levels[d - 1]
+        if d == k:
+            h_in = arrays[f"hfeat{d}"]
+        else:
+            h_in = jax.nn.relu(child)
+        out = _agg_level(
+            cfg, lp, stacks, h_in, arrays[f"qfeat{d}"], arrays[f"mask{d}"], shard_idx
+        )
+        if d == 1:
+            partial = jnp.sum(out, axis=0)  # shard's partial aggregation [B, H]
+            root = jax.lax.psum(partial, model_axis)  # RAF exchange (Alg.1 l.6)
+        else:
+            prev_rb = plan.levels[d - 2].rb
+            if local_combine:
+                seg = jnp.asarray(lp.parent_local)[shard_idx]
+                child = jax.ops.segment_sum(out, seg, num_segments=prev_rb)
+            else:
+                # naive placement: parents may be remote -> full inner-level
+                # exchange of [R_{d-1}, N, H] partials (the ablation case)
+                seg = jnp.asarray(lp.parent_global)[shard_idx]
+                full = jax.ops.segment_sum(
+                    out, seg, num_segments=prev_rb * plan.num_shards
+                )
+                full = jax.lax.psum(full, model_axis)
+                child = jax.lax.dynamic_slice_in_dim(
+                    full, shard_idx * prev_rb, prev_rb, axis=0
+                )
+    return root
+
+
+# --------------------------------------------------------------------------
+# jitted train step
+# --------------------------------------------------------------------------
+
+
+def _array_specs(plan: StackedPlan, data_axes, model_axis):
+    k = plan.spec.num_layers
+    specs = {"seeds": P(data_axes), "labels": P(data_axes)}
+    for d in range(1, k + 1):
+        specs[f"mask{d}"] = P(model_axis, data_axes)
+        specs[f"qfeat{d}"] = P(model_axis, data_axes, None)
+        if d == k:
+            specs[f"hfeat{d}"] = P(model_axis, data_axes, None)
+    return specs
+
+
+def _stack_specs(plan: StackedPlan):
+    specs = {}
+    for layer in plan.layer_params:
+        entry = {"w": P("model", None, None, None), "b": P("model", None, None)}
+        if plan.cfg.model == "rgat":
+            entry.update(
+                w_dst=P("model", None, None, None),
+                a_src=P("model", None, None, None),
+                a_dst=P("model", None, None, None),
+            )
+        specs[f"layer{layer}"] = entry
+    specs["head"] = {"w": P(None, None), "b": P(None)}
+    return specs
+
+
+def make_train_step(
+    plan: StackedPlan,
+    mesh: Mesh,
+    adam_cfg,
+    model_axis: str = "model",
+    data_axes=("data",),
+    local_combine: bool = True,
+    learn_feats: bool = False,
+):
+    """Build the jitted SPMD RAF train step.
+
+    ``step(stacks, opt_state, arrays) -> (stacks, opt_state, loss[, feat_grads])``
+
+    The shard_map body computes the root embedding (ending in the RAF psum);
+    the classifier head + loss run outside under GSPMD, so gradients of the
+    replicated head are exact.  With ``learn_feats=True`` the step also
+    returns gradients w.r.t. the gathered feature arrays (``qfeat*``/``hfeat*``)
+    for the embed engine's sparse row updates.
+    """
+    from jax import shard_map
+
+    from repro.optim.adam import adam_update
+
+    cfg = plan.cfg
+    da = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    arr_specs = _array_specs(plan, da, model_axis)
+    stack_specs = _stack_specs(plan)
+    rel_specs = {k2: v for k2, v in stack_specs.items() if k2 != "head"}
+
+    def split_arrays(arrays):
+        feats = {k2: v for k2, v in arrays.items() if "feat" in k2}
+        rest = {k2: v for k2, v in arrays.items() if "feat" not in k2}
+        return feats, rest
+
+    def root_fn(rel_stacks, feats, rest):
+        def body(stacks_s, feats_s, rest_s):
+            return raf_spmd_forward(
+                plan, stacks_s, {**feats_s, **rest_s}, model_axis, local_combine
+            )
+
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                rel_specs,
+                {k2: arr_specs[k2] for k2 in feats},
+                {k2: arr_specs[k2] for k2 in rest},
+            ),
+            out_specs=P(da, None),
+            check_vma=False,
+        )(rel_stacks, feats, rest)
+
+    def loss_fn(stacks, feats, rest):
+        rel_stacks = {k2: v for k2, v in stacks.items() if k2 != "head"}
+        root = root_fn(rel_stacks, feats, rest)
+        h = jax.nn.relu(root)
+        logits = h @ stacks["head"]["w"] + stacks["head"]["b"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, rest["labels"][:, None], axis=-1)
+        return jnp.mean(nll)
+
+    if not learn_feats:
+        grad_fn = jax.value_and_grad(loss_fn)
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def step(stacks, opt_state, arrays):
+            feats, rest = split_arrays(arrays)
+            loss, grads = grad_fn(stacks, feats, rest)
+            stacks, opt_state = adam_update(adam_cfg, stacks, grads, opt_state)
+            return stacks, opt_state, loss
+
+        return step
+
+    grad_fn2 = jax.value_and_grad(loss_fn, argnums=(0, 1))
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step_feats(stacks, opt_state, arrays):
+        feats, rest = split_arrays(arrays)
+        loss, (gs, gf) = grad_fn2(stacks, feats, rest)
+        stacks, opt_state = adam_update(adam_cfg, stacks, gs, opt_state)
+        return stacks, opt_state, loss, gf
+
+    return step_feats
+
+
+def shard_arrays(plan: StackedPlan, mesh: Mesh, arrays: Dict, data_axes=("data",),
+                 model_axis: str = "model") -> Dict:
+    """Device-put stacked batch arrays with their production shardings."""
+    da = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    specs = _array_specs(plan, da, model_axis)
+    return {
+        k2: jax.device_put(v, NamedSharding(mesh, specs[k2])) for k2, v in arrays.items()
+    }
+
+
+def shard_stacks(plan: StackedPlan, mesh: Mesh, stacks: Dict) -> Dict:
+    specs = _stack_specs(plan)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        stacks,
+        specs,
+        is_leaf=lambda x: isinstance(x, jnp.ndarray),
+    )

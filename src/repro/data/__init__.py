@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticCorpus, TokenPipeline
+
+__all__ = ["SyntheticCorpus", "TokenPipeline"]

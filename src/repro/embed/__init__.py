@@ -1,0 +1,23 @@
+from repro.embed.profiler import (
+    HotnessProfile,
+    presample_hotness,
+    measure_miss_penalty,
+    analytic_miss_penalty,
+    MissPenaltyProfile,
+    profile_miss_penalties,
+)
+from repro.embed.cache import CacheAllocation, allocate_cache, FeatureCache
+from repro.embed.engine import EmbedEngine
+
+__all__ = [
+    "HotnessProfile",
+    "presample_hotness",
+    "measure_miss_penalty",
+    "analytic_miss_penalty",
+    "MissPenaltyProfile",
+    "profile_miss_penalties",
+    "CacheAllocation",
+    "allocate_cache",
+    "FeatureCache",
+    "EmbedEngine",
+]

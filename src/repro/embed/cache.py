@@ -1,0 +1,266 @@
+"""Miss-penalty-aware device feature cache (paper §6).
+
+Two pieces:
+
+  * :func:`allocate_cache` — the hierarchical allocation policy: the per-type
+    cache budget is proportional to ``count_a × o_a`` (hotness × miss-penalty
+    ratio), then each type's budget is filled with its hottest nodes.  A
+    ``hotness_only`` switch reproduces the paper's ablation baseline
+    (Fig. 11's 'hotness only').
+
+  * :class:`FeatureCache` — a functional device cache in front of host
+    feature tables.  Read-only types cache feature rows; learnable types
+    cache the row *and* its Adam states, and writes go to the cached copy
+    (non-replicative: each row lives in exactly one place — a device shard
+    or host memory — so there is never a second version to invalidate,
+    paper §6 'Cache Consistency').  Multi-device splits use the paper's
+    mod-hash: row ``nid`` belongs to shard ``nid % num_shards``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embed.profiler import (
+    ADAM_STATE_MULT,
+    HotnessProfile,
+    MissPenaltyProfile,
+    row_bytes,
+)
+
+__all__ = ["CacheAllocation", "allocate_cache", "FeatureCache"]
+
+
+# --------------------------------------------------------------------------
+# allocation policy
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheAllocation:
+    rows: Dict[str, int]  # ntype -> number of cached rows
+    bytes_: Dict[str, int]  # ntype -> bytes allotted
+    total_bytes: int
+    policy: str
+
+    def render(self) -> str:
+        lines = [f"  cache allocation ({self.policy}, {self.total_bytes/2**20:.0f} MiB):"]
+        for t in sorted(self.rows):
+            lines.append(
+                f"    {t:<18} rows={self.rows[t]:>9,}  {self.bytes_[t]/2**20:8.1f} MiB"
+            )
+        return "\n".join(lines)
+
+
+def allocate_cache(
+    hotness: HotnessProfile,
+    penalties: MissPenaltyProfile,
+    total_bytes: int,
+    num_nodes: Dict[str, int],
+    hotness_only: bool = False,
+    bytes_per_elem: int = 4,
+) -> CacheAllocation:
+    """Split ``total_bytes`` across node types ∝ count_a × o_a (paper §6).
+
+    ``hotness_only=True`` drops the o_a factor (ablation baseline).  Budgets
+    are capped at the type's full table size; freed budget is redistributed
+    proportionally among uncapped types.
+    """
+    types = sorted(penalties.ratios)
+    score = {
+        t: float(hotness.total(t)) * (1.0 if hotness_only else penalties.ratios[t])
+        for t in types
+    }
+    rbytes = {
+        t: row_bytes(penalties.dims[t], penalties.learnable[t], bytes_per_elem)
+        for t in types
+    }
+    cap = {t: num_nodes[t] * rbytes[t] for t in types}
+    alloc = {t: 0.0 for t in types}
+    remaining, active = float(total_bytes), set(t for t in types if score[t] > 0)
+    # waterfill: proportional split, capping saturated types and reflowing
+    while remaining > 1 and active:
+        tot = sum(score[t] for t in active)
+        newly_capped = set()
+        spent = 0.0
+        for t in active:
+            give = remaining * score[t] / tot
+            room = cap[t] - alloc[t]
+            take = min(give, room)
+            alloc[t] += take
+            spent += take
+            if alloc[t] >= cap[t] - 1e-6:
+                newly_capped.add(t)
+        remaining -= spent
+        active -= newly_capped
+        if not newly_capped:
+            break
+    rows = {t: int(alloc[t] // rbytes[t]) for t in types}
+    return CacheAllocation(
+        rows=rows,
+        bytes_={t: rows[t] * rbytes[t] for t in types},
+        total_bytes=total_bytes,
+        policy="hotness-only" if hotness_only else "hotness×miss-penalty",
+    )
+
+
+# --------------------------------------------------------------------------
+# the cache itself
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _TypeCache:
+    ids: np.ndarray  # [C] cached node ids (host copy for bookkeeping)
+    slot_of: np.ndarray  # [num_nodes] -> cache slot or -1
+    data: jnp.ndarray  # [C, d] cached rows (device)
+    m: Optional[jnp.ndarray]  # [C, d] Adam moment (learnable only)
+    v: Optional[jnp.ndarray]  # [C, d] Adam variance
+    shard_of: np.ndarray  # [C] mod-hash shard of each cached row
+    hits: int = 0
+    misses: int = 0
+
+
+class FeatureCache:
+    """Device cache over host tables with per-type budgets.
+
+    ``host_tables``: ntype -> np.ndarray features.  For learnable types the
+    host table *is* the learnable parameter store; its Adam states live in
+    ``host_m``/``host_v``.  ``fetch`` returns gathered rows (device), and for
+    learnable types :meth:`write_learnable` pushes updated rows + states back
+    to wherever each row lives (cache or host) — a single authoritative copy.
+    """
+
+    def __init__(
+        self,
+        host_tables: Dict[str, np.ndarray],
+        learnable_types: Dict[str, int],  # ntype -> dim
+        allocation: CacheAllocation,
+        hotness: HotnessProfile,
+        num_shards: int = 1,
+    ):
+        self.host = dict(host_tables)
+        self.learnable = dict(learnable_types)
+        self.num_shards = num_shards
+        self.host_m: Dict[str, np.ndarray] = {}
+        self.host_v: Dict[str, np.ndarray] = {}
+        self.caches: Dict[str, _TypeCache] = {}
+        for t, dim in learnable_types.items():
+            if t not in self.host:
+                raise ValueError(f"learnable type {t} missing host table")
+            self.host_m[t] = np.zeros_like(self.host[t])
+            self.host_v[t] = np.zeros_like(self.host[t])
+        for t, n_rows in allocation.rows.items():
+            if n_rows <= 0 or t not in self.host:
+                continue
+            ids = hotness.hottest(t, n_rows)
+            slot_of = np.full(self.host[t].shape[0], -1, dtype=np.int64)
+            slot_of[ids] = np.arange(len(ids))
+            self.caches[t] = _TypeCache(
+                ids=ids,
+                slot_of=slot_of,
+                data=jnp.asarray(self.host[t][ids]),
+                m=jnp.asarray(self.host_m[t][ids]) if t in self.learnable else None,
+                v=jnp.asarray(self.host_v[t][ids]) if t in self.learnable else None,
+                shard_of=ids % num_shards,
+            )
+
+    # -- reads --------------------------------------------------------------
+
+    def fetch(self, ntype: str, nids: np.ndarray) -> jnp.ndarray:
+        """Gather rows for ``nids``; cache hits read device memory, misses
+        transfer from host.  Returns a device array [len(nids), d]."""
+        c = self.caches.get(ntype)
+        if c is None:
+            return jnp.asarray(self.host[ntype][nids])
+        slots = c.slot_of[nids]
+        hit = slots >= 0
+        c.hits += int(hit.sum())
+        c.misses += int((~hit).sum())
+        if hit.all():
+            return c.data[jnp.asarray(slots)]
+        rows_miss = jnp.asarray(self.host[ntype][nids[~hit]])
+        rows_hit = c.data[jnp.asarray(slots[hit])]
+        out = jnp.zeros((len(nids), self.host[ntype].shape[1]), rows_hit.dtype)
+        out = out.at[jnp.asarray(np.nonzero(hit)[0])].set(rows_hit)
+        out = out.at[jnp.asarray(np.nonzero(~hit)[0])].set(rows_miss)
+        return out
+
+    def fetch_states(self, ntype: str, nids: np.ndarray):
+        """(rows, m, v) for a learnable type (row-aligned Adam states)."""
+        rows = self.fetch(ntype, nids)
+        c = self.caches.get(ntype)
+        if c is None or c.m is None:
+            return rows, jnp.asarray(self.host_m[ntype][nids]), jnp.asarray(self.host_v[ntype][nids])
+        slots = c.slot_of[nids]
+        hit = slots >= 0
+        m = np.asarray(self.host_m[ntype][nids])
+        v = np.asarray(self.host_v[ntype][nids])
+        m[hit] = np.asarray(c.m[jnp.asarray(slots[hit])])
+        v[hit] = np.asarray(c.v[jnp.asarray(slots[hit])])
+        return rows, jnp.asarray(m), jnp.asarray(v)
+
+    # -- writes (learnable rows + optimizer states) ---------------------------
+
+    def write_learnable(
+        self, ntype: str, nids: np.ndarray, rows: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray
+    ) -> None:
+        """Write updated learnable rows to their single authoritative copy."""
+        if ntype not in self.learnable:
+            raise ValueError(f"{ntype} is not learnable")
+        c = self.caches.get(ntype)
+        if c is None:
+            self.host[ntype][nids] = np.asarray(rows)
+            self.host_m[ntype][nids] = np.asarray(m)
+            self.host_v[ntype][nids] = np.asarray(v)
+            return
+        slots = c.slot_of[nids]
+        hit = slots >= 0
+        if hit.any():
+            sl = jnp.asarray(slots[hit])
+            sel = jnp.asarray(np.nonzero(hit)[0])
+            c.data = c.data.at[sl].set(rows[sel])
+            c.m = c.m.at[sl].set(m[sel])
+            c.v = c.v.at[sl].set(v[sel])
+        if (~hit).any():
+            miss = nids[~hit]
+            self.host[ntype][miss] = np.asarray(rows)[~hit]
+            self.host_m[ntype][miss] = np.asarray(m)[~hit]
+            self.host_v[ntype][miss] = np.asarray(v)[~hit]
+
+    # -- stats ----------------------------------------------------------------
+
+    def hit_rates(self) -> Dict[str, float]:
+        out = {}
+        for t, c in self.caches.items():
+            tot = c.hits + c.misses
+            out[t] = c.hits / tot if tot else 0.0
+        return out
+
+    def reset_stats(self) -> None:
+        for c in self.caches.values():
+            c.hits = c.misses = 0
+
+    def miss_time(self, penalties: MissPenaltyProfile, bytes_per_elem: int = 4) -> float:
+        """Estimated seconds spent on cache misses so far (penalty model)."""
+        t_total = 0.0
+        for t, c in self.caches.items():
+            rb = row_bytes(penalties.dims[t], penalties.learnable[t], bytes_per_elem)
+            t_total += c.misses * penalties.ratios[t] * rb
+        return t_total
+
+    def consistency_check(self) -> bool:
+        """Non-replicative invariant: a cached row's host copy is never read
+        or written — verify slots are unique and shard assignment follows the
+        mod-hash rule (paper §6)."""
+        for t, c in self.caches.items():
+            if len(np.unique(c.ids)) != len(c.ids):
+                return False
+            if not np.array_equal(c.shard_of, c.ids % self.num_shards):
+                return False
+        return True

@@ -1,0 +1,114 @@
+"""EmbedEngine — learnable feature tables behind the miss-penalty cache.
+
+Ties together the pieces of Heta's learnable-feature pipeline (paper §2.3
+Challenge 3 / §6): featureless node types get trainable rows + Adam states;
+a minibatch *fetches* the unique rows it touches (through the cache),
+the training step returns row gradients, and the engine applies a sparse
+Adam step and writes rows + states back to their single authoritative copy.
+
+This replaces the vanilla model's random host-DRAM read/modify/write storm
+(24-35% of DGL's epoch time, paper Fig. 4) with mostly device-resident
+traffic once the cache is warm.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embed.cache import CacheAllocation, FeatureCache, allocate_cache
+from repro.embed.profiler import HotnessProfile, MissPenaltyProfile
+from repro.graph.hetgraph import HetGraph
+from repro.optim.adam import AdamConfig, sparse_adam_rows
+
+__all__ = ["EmbedEngine"]
+
+
+class EmbedEngine:
+    def __init__(
+        self,
+        graph: HetGraph,
+        learnable_dim: int,
+        hotness: HotnessProfile,
+        penalties: MissPenaltyProfile,
+        cache_bytes: int,
+        adam: Optional[AdamConfig] = None,
+        hotness_only: bool = False,
+        num_shards: int = 1,
+        seed: int = 0,
+    ):
+        self.graph = graph
+        self.learnable_dim = learnable_dim
+        self.adam = adam or AdamConfig(lr=1e-2)
+        self.steps = {t: 0 for t in graph.num_nodes}
+        rng = np.random.default_rng(seed)
+
+        self.learnable_types = {
+            t: learnable_dim for t in graph.num_nodes if t not in graph.features
+        }
+        host: Dict[str, np.ndarray] = {
+            t: f.astype(np.float32, copy=False) for t, f in graph.features.items()
+        }
+        for t in self.learnable_types:
+            host[t] = (
+                rng.standard_normal((graph.num_nodes[t], learnable_dim)) * 0.1
+            ).astype(np.float32)
+
+        self.allocation: CacheAllocation = allocate_cache(
+            hotness, penalties, cache_bytes, graph.num_nodes, hotness_only
+        )
+        self.cache = FeatureCache(
+            host, self.learnable_types, self.allocation, hotness, num_shards
+        )
+        self.penalties = penalties
+
+    # -- table access ----------------------------------------------------------
+
+    def table(self, ntype: str) -> np.ndarray:
+        """Host view of a feature table.  For learnable types, cached rows
+        are authoritative on device; this materializes a coherent snapshot
+        (used by the test oracles and single-host executors)."""
+        tab = self.cache.host[ntype].copy()
+        c = self.cache.caches.get(ntype)
+        if c is not None:
+            tab[c.ids] = np.asarray(c.data)
+        return tab
+
+    def tables_snapshot(self) -> Dict[str, np.ndarray]:
+        return {t: self.table(t) for t in self.graph.num_nodes}
+
+    def fetch(self, ntype: str, nids: np.ndarray) -> jnp.ndarray:
+        return self.cache.fetch(ntype, np.asarray(nids))
+
+    # -- the sparse update path (paper Fig. 3 step 5, cache-accelerated) --------
+
+    def apply_row_grads(self, ntype: str, nids: np.ndarray, grads: jnp.ndarray) -> None:
+        """Sparse Adam on the unique rows of one type touched by a batch.
+
+        ``nids`` may contain duplicates (multiple branches sample the same
+        node); duplicates are summed into unique rows first, matching dense
+        autodiff semantics.
+        """
+        if ntype not in self.learnable_types:
+            raise ValueError(f"{ntype} has fixed features")
+        nids = np.asarray(nids)
+        uniq, inv = np.unique(nids, return_inverse=True)
+        g = np.zeros((len(uniq), grads.shape[-1]), np.float32)
+        np.add.at(g, inv, np.asarray(grads, np.float32).reshape(len(nids), -1))
+        rows, m, v = self.cache.fetch_states(ntype, uniq)
+        new_rows, new_m, new_v = sparse_adam_rows(
+            self.adam, rows, jnp.asarray(g), m, v, jnp.asarray(self.steps[ntype])
+        )
+        self.steps[ntype] += 1
+        self.cache.write_learnable(ntype, uniq, new_rows, new_m, new_v)
+
+    # -- reporting ---------------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "hit_rates": self.cache.hit_rates(),
+            "allocation": {t: r for t, r in self.allocation.rows.items()},
+            "miss_time_s": self.cache.miss_time(self.penalties),
+        }

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  * relation_agg   — fused masked-mean neighbor aggregation + projection
+                     (R-GCN AGG_r hotspot, paper Eq. 1)
+  * flash_attention — blocked online-softmax attention (R-GAT / LM stack;
+                     sliding-window mode enables the 500k decode shape)
+  * gather_rows    — scalar-prefetch embedding/feature row gather
+                     (cache fetch path, paper §6)
+
+Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with padding + backend dispatch) and ref.py (pure-jnp oracle).
+Kernels are validated in interpret mode on CPU; TPU is the target.
+"""

@@ -1,0 +1,66 @@
+"""Public op: flash attention with GQA, padding, and backend dispatch.
+
+``flash_attention(q, k, v, ...)`` takes [b, h, s, d] tensors with possibly
+fewer kv heads (GQA), pads sequence lengths to block multiples and dispatches
+to the Pallas kernel (interpret mode off-TPU).  Sequence padding requires
+causal masking (padded key positions fall strictly after every real query);
+non-causal unpadded inputs work too, anything else falls back to the oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [b, h, sq, d]
+    k: jnp.ndarray,  # [b, hk, sk, d]
+    v: jnp.ndarray,  # [b, hk, sk, d]
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if not use_pallas:
+        return attention_ref(q, k, v, causal, window, q_offset)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, sq, d = q.shape
+    hk, sk = k.shape[1], k.shape[2]
+    if h != hk:  # GQA -> repeat kv heads (production TPU path folds the
+        # group axis into the q block instead; see kernels/README)
+        k = jnp.repeat(k, h // hk, axis=1)
+        v = jnp.repeat(v, h // hk, axis=1)
+
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(sk, 8))
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if (pad_q or pad_k) and not causal:
+        return attention_ref(q, k, v, causal, window, q_offset)
+
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_pallas(
+        qf, kf, vf,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :sq].reshape(b, h, sq, d)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for blocked attention (causal / sliding-window / offset)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref", "attention_mask"]
+
+
+def attention_mask(
+    sq: int, sk: int, causal: bool, window: Optional[int], q_offset: int
+) -> np.ndarray:
+    """[sq, sk] bool mask.  Query i sits at global position q_offset + i;
+    causal allows keys ≤ that position; a window additionally restricts keys
+    to the last ``window`` positions (sliding-window attention)."""
+    qpos = np.arange(sq)[:, None] + q_offset
+    kpos = np.arange(sk)[None, :]
+    m = np.ones((sq, sk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [b, h, sq, d]
+    k: jnp.ndarray,  # [b, hk, sk, d]
+    v: jnp.ndarray,  # [b, hk, sk, d]
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    hk = k.shape[1]
+    if h != hk:  # GQA: repeat kv heads
+        k = jnp.repeat(k, h // hk, axis=1)
+        v = jnp.repeat(v, h // hk, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = attention_mask(sq, k.shape[2], causal, window, q_offset)
+    logits = jnp.where(mask[None, None], logits, jnp.finfo(logits.dtype).min)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p * mask[None, None]
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,24 @@
+"""Public op: row gather with backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_rows.kernel import gather_rows_pallas
+from repro.kernels.gather_rows.ref import gather_rows_ref
+
+__all__ = ["gather_rows"]
+
+
+def gather_rows(
+    table: jnp.ndarray,
+    idx: jnp.ndarray,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if not use_pallas:
+        return gather_rows_ref(table, idx)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return gather_rows_pallas(table, idx, interpret=interpret)

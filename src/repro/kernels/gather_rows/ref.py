@@ -1,0 +1,11 @@
+"""Oracle for the row-gather kernel: out[i] = table[idx[i]]."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gather_rows_ref"]
+
+
+def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return table[idx]

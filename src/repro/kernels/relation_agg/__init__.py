@@ -1,0 +1,4 @@
+from repro.kernels.relation_agg.ops import relation_agg
+from repro.kernels.relation_agg.ref import relation_agg_ref
+
+__all__ = ["relation_agg", "relation_agg_ref"]

@@ -1,0 +1,58 @@
+"""Public op: relation aggregation with automatic padding + backend dispatch.
+
+``relation_agg(h, mask, w, b)`` pads n/d_in/d_out up to block multiples,
+invokes the Pallas kernel (interpret mode off-TPU), and slices the result.
+``use_pallas=False`` falls back to the jnp oracle (same math, used by the
+SPMD executors where XLA fusion already handles it well).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.relation_agg.kernel import relation_agg_pallas
+from repro.kernels.relation_agg.ref import relation_agg_ref
+
+__all__ = ["relation_agg"]
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def relation_agg(
+    h: jnp.ndarray,
+    mask: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    use_pallas: bool = True,
+    block_n: int = 128,
+    block_out: int = 128,
+    block_in: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if not use_pallas:
+        return relation_agg_ref(h, mask, w, b)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, f, d_in = h.shape
+    d_out = w.shape[1]
+    bn = min(block_n, max(8, n))
+    bo = min(block_out, max(8, d_out))
+    bc = min(block_in, max(8, d_in))
+    hp = _pad_to(_pad_to(h, 0, bn), 2, bc)
+    mp = _pad_to(mask, 0, bn)
+    wp = _pad_to(_pad_to(w, 0, bc), 1, bo)
+    bp = _pad_to(b, 0, bo)
+    out = relation_agg_pallas(
+        hp, mp, wp, bp, block_n=bn, block_out=bo, block_in=bc, interpret=interpret
+    )
+    return out[:n, :d_out]

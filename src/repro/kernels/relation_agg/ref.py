@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused relation aggregation kernel.
+
+out[n] = ( Σ_f mask[n,f]·h[n,f,:] / max(Σ_f mask[n,f], 1) ) @ w + b
+
+This is AGG_r for R-GCN (paper Eq. 1): masked-mean over the sampled
+neighbors followed by the relation-specific projection.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["relation_agg_ref"]
+
+
+def relation_agg_ref(
+    h: jnp.ndarray,  # [n, f, d_in]
+    mask: jnp.ndarray,  # [n, f] bool
+    w: jnp.ndarray,  # [d_in, d_out]
+    b: jnp.ndarray,  # [d_out]
+) -> jnp.ndarray:
+    mw = mask.astype(h.dtype)
+    s = jnp.einsum("nfd,nf->nd", h, mw)
+    mean = s / jnp.maximum(mw.sum(-1, keepdims=True), 1.0)
+    return mean @ w + b

@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combination.
+
+The two lines above run before ANY other import (jax locks the device count
+on first init).  For each combination this script:
+
+  1. builds the production mesh (16×16 single-pod or 2×16×16 multi-pod),
+  2. constructs the jitted step (train/prefill/serve) with explicit
+     in/out shardings from ``launch.sharding``,
+  3. ``.lower()``s against ShapeDtypeStruct inputs (zero allocation),
+  4. ``.compile()``s — a sharding mismatch, OOM-at-compile or unsupported
+     collective here is a bug in the framework,
+  5. records ``memory_analysis()`` / ``cost_analysis()`` and the collective
+     mix parsed from the compiled HLO into results/dryrun/*.json for the
+     roofline report (EXPERIMENTS.md §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCHS, INPUT_SHAPES, ArchConfig, InputShape
+import repro.configs.all_archs  # noqa: F401
+from repro.launch.mesh import make_production_mesh, data_axes
+from repro.launch.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    named,
+    param_pspecs,
+    state_pspecs,
+)
+from repro.launch.specs import (
+    abstract_cache,
+    abstract_params,
+    abstract_state,
+    input_specs,
+    plan_step,
+)
+from repro.optim.adam import AdamConfig
+
+__all__ = ["run_one", "collective_bytes"]
+
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(f32|f16|bf16|s32|u32|s8|u8|pred|f64|s64|c64)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    This is the §Roofline ``collective_bytes`` source.  Result-shape bytes
+    are the standard proxy: for all-reduce it equals the payload (ring moves
+    2·(g-1)/g× that per device), for all-gather it is the gathered size.
+    """
+    out: Dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] = out.get(op, 0) + nbytes
+        out["total"] = out.get("total", 0) + nbytes
+        out[f"count_{op}"] = out.get(f"count_{op}", 0) + 1
+    return out
+
+
+def _build_lowered(cfg: ArchConfig, shape: InputShape, mesh, unroll: bool = False, variant: Optional[str] = None):
+    """Construct the jitted step + abstract args and lower it."""
+    from repro.models import transformer as tfm
+
+    plan = plan_step(cfg, shape)
+    specs = input_specs(cfg, shape)
+    dp = data_axes(mesh)
+
+    if plan.kind == "skip":
+        return None, plan
+
+    pctx = None
+    remat = True
+    if variant:  # §Perf variant string, e.g. "ep", "act", "q64", "ep,nr"
+        from repro.models.transformer import ParallelCtx
+
+        toks = set(variant.split(","))
+        kw = {}
+        if "ep" in toks:
+            kw["moe"] = "expert_parallel"
+        if "act" in toks:
+            kw["constrain_activations"] = True
+        if "sp" in toks:
+            kw["sp_attention"] = True
+        for t in toks:
+            if t.startswith("q") and t[1:].isdigit():
+                kw["ssd_chunk"] = int(t[1:])
+            if t.startswith("fa") and t[2:].isdigit():
+                kw["attn_chunk"] = int(t[2:])
+        if "ssdbf16" in toks:
+            kw["ssd_bf16"] = True
+        if "rp" in toks:
+            kw["remat_policy"] = "dots"
+        if "nr" in toks:
+            remat = False
+        pctx = ParallelCtx(mesh=mesh, dp_axes=tuple(dp), **kw)
+
+    if plan.kind == "train":
+        state = abstract_state(cfg)
+        st_specs = state_pspecs(cfg, state, mesh)
+        b_specs = batch_pspecs(cfg, shape, specs, mesh)
+        adam = AdamConfig(lr=3e-4, weight_decay=0.01, grad_clip=1.0)
+
+        def step(state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: tfm.loss_fn(cfg, p, batch, use_pallas=False,
+                                      unroll=unroll, pctx=pctx, remat=remat)
+            )(state["params"])
+            from repro.optim.adam import adam_update
+
+            params, opt = adam_update(adam, state["params"], grads, state["opt"])
+            return {"params": params, "opt": opt}, loss
+
+        fn = jax.jit(
+            step,
+            in_shardings=(named(mesh, st_specs), named(mesh, b_specs)),
+            out_shardings=(named(mesh, st_specs), None),
+            donate_argnums=(0,),
+        )
+        lowered = fn.lower(state, specs)
+
+    elif plan.kind == "prefill":
+        params = abstract_params(cfg)
+        p_specs = param_pspecs(cfg, params, mesh)
+        b_specs = batch_pspecs(cfg, shape, specs, mesh)
+        from repro.models.transformer import make_prefill_step
+
+        raw = make_prefill_step(cfg, use_pallas=False, unroll=unroll, pctx=pctx)
+        fn = jax.jit(
+            lambda p, b: raw(p, b),
+            in_shardings=(named(mesh, p_specs), named(mesh, b_specs)),
+        )
+        lowered = fn.lower(params, specs)
+
+    else:  # decode
+        params = abstract_params(cfg)
+        cache = abstract_cache(cfg, shape)
+        p_specs = param_pspecs(cfg, params, mesh)
+        c_specs = cache_pspecs(cfg, cache, mesh)
+        t_specs = {
+            "token": batch_pspecs(cfg, shape, {"token": specs["token"]}, mesh)["token"],
+            "pos": jax.sharding.PartitionSpec(),
+        }
+        from repro.models.transformer import make_serve_step
+
+        raw = make_serve_step(cfg, window=plan.window, donate=False, unroll=unroll)
+        fn = jax.jit(
+            lambda p, c, t, pos: raw(p, c, t, pos),
+            in_shardings=(
+                named(mesh, p_specs),
+                named(mesh, c_specs),
+                named(mesh, t_specs["token"]),
+                named(mesh, t_specs["pos"]),
+            ),
+            out_shardings=(None, named(mesh, c_specs)),
+        )
+        lowered = fn.lower(params, cache, specs["token"], specs["pos"])
+
+    return lowered, plan
+
+
+def _analyze(cfg, shape, mesh, unroll, variant=None):
+    lowered, plan = _build_lowered(cfg, shape, mesh, unroll=unroll, variant=variant)
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    return {
+        "plan": plan,
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "flops": cost.get("flops", 0.0) if isinstance(cost, dict) else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if isinstance(cost, dict) else 0.0,
+        "transcendentals": cost.get("transcendentals", 0.0) if isinstance(cost, dict) else 0.0,
+        "collectives": collective_bytes(hlo),
+    }
+
+
+def _extrapolate(r1, r2, n_periods: int):
+    """Exact linear-in-layers extrapolation from 1- and 2-period compiles:
+    total = f(1) + (n_periods - 1) · (f(2) - f(1)).  Valid because unrolled
+    periods are identical HLO; the constant term captures embed/head/loss.
+
+    Tiny decode steps can fuse non-monotonically (f(2) slightly below f(1)
+    for some counters); the per-period delta is clamped at ≥0 and the total
+    at ≥f(2) so the extrapolation never goes negative."""
+    out = {}
+    for k in ("flops", "bytes_accessed", "transcendentals"):
+        delta = max(r2[k] - r1[k], 0.0)
+        out[k] = max(r1[k] + (n_periods - 1) * delta, r2[k])
+    coll = {}
+    keys = set(r1["collectives"]) | set(r2["collectives"])
+    for k in keys:
+        a = r1["collectives"].get(k, 0)
+        b = r2["collectives"].get(k, 0)
+        coll[k] = max(a + (n_periods - 1) * max(b - a, 0), b)
+    out["collectives"] = coll
+    return out
+
+
+def run_one(
+    arch: str, shape_name: str, multi_pod: bool = False, out_dir: Optional[str] = None,
+    variant: Optional[str] = None,
+) -> Dict:
+    import dataclasses as dc
+
+    cfg = ARCHS[arch]
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if variant:
+        mesh_name += f"+{variant}"
+    rec: Dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "variant": variant,
+        "family": cfg.family,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "n_periods": cfg.n_periods,
+    }
+    plan = plan_step(cfg, shape)
+    if plan.kind == "skip":
+        rec.update(status="skip", reason=plan.skip_reason)
+        _save(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            # pass A: the FULL config with the compact layer loop — proves the
+            # (arch × shape × mesh) combination lowers + compiles, and gives
+            # the true memory analysis (all parameters/caches present).
+            full = _analyze(cfg, shape, mesh, unroll=False, variant=variant)
+            # pass B: 1-period and 2-period fully-unrolled variants; XLA:CPU
+            # cost analysis does not multiply while-loop bodies, so per-layer
+            # FLOPs/bytes/collectives are extrapolated exactly from these.
+            cfg1 = dc.replace(cfg, name=cfg.name + "@1", num_layers=cfg.period)
+            cfg2 = dc.replace(cfg, name=cfg.name + "@2", num_layers=2 * cfg.period)
+            r1 = _analyze(cfg1, shape, mesh, unroll=True, variant=variant)
+            r2 = _analyze(cfg2, shape, mesh, unroll=True, variant=variant)
+        ext = _extrapolate(r1, r2, cfg.n_periods)
+        rec.update(
+            status="ok",
+            step_kind=plan.kind,
+            window=plan.window,
+            total_s=round(time.time() - t0, 2),
+            compile_s=full["compile_s"],
+            memory=full["memory"],
+            flops=ext["flops"],
+            bytes_accessed=ext["bytes_accessed"],
+            transcendentals=ext["transcendentals"],
+            collectives=ext["collectives"],
+            loop_collectives=full["collectives"],
+            per_period={"flops_delta": r2["flops"] - r1["flops"]},
+            num_devices=mesh.size,
+        )
+    except Exception as e:  # a failure here is a framework bug — surface it
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    _save(rec, out_dir)
+    return rec
+
+
+def _save(rec: Dict, out_dir: Optional[str]):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default=None, help="e.g. 'ep' (expert-parallel MoE)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = sorted(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    fails = 0
+    for a, s, mp in combos:
+        rec = run_one(a, s, multi_pod=mp, out_dir=args.out, variant=args.variant)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (
+                f" kind={rec['step_kind']} total={rec['total_s']}s "
+                f"compile={rec['compile_s']}s flops={rec.get('flops'):.3e} "
+                f"coll={rec['collectives'].get('total', 0)/2**30:.2f}GiB"
+            )
+        elif status == "error":
+            fails += 1
+            extra = " " + rec["error"][:160]
+        elif status == "skip":
+            extra = " " + rec["reason"]
+        print(f"[{status:>5}] {a} × {s} × {rec['mesh']}{extra}", flush=True)
+    if fails:
+        raise SystemExit(f"{fails} combinations failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Single pod: 256 TPU v5e chips as (data=16, model=16).
+Multi-pod:  2 pods × 256 chips as (pod=2, data=16, model=16) — the ``pod``
+axis is pure data parallelism (per DESIGN.md §5), so cross-pod traffic is
+gradient all-reduce only.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import and only then calls these.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = [
+    "make_production_mesh",
+    "make_test_mesh",
+    "data_axes",
+    "MODEL_AXIS",
+]
+
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0) -> Mesh:
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch-parallel axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)

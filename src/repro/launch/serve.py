@@ -1,0 +1,84 @@
+"""Serving driver: batched prefill + decode for any assigned architecture.
+
+Production configs are exercised via the 512-device dry-run
+(``repro.launch.dryrun``); on a development host this driver runs the
+``--reduced`` variant end-to-end with real tensors.
+
+Usage:
+  python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --batch 4 --prompt-len 64 --new-tokens 32 [--window 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window size (0 = full attention)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs.all_archs  # noqa: F401
+    from repro.configs.base import ARCHS
+    from repro.models import init_decode_cache, init_params, make_prefill_step, make_serve_step
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    if not cfg.is_decoder:
+        raise SystemExit(f"{args.arch} is encoder-only (no decode step)")
+
+    rng = np.random.default_rng(args.seed)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    B, S, N = args.batch, args.prompt_len, args.new_tokens
+    window = args.window or None
+
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+    t0 = time.time()
+    if window:
+        # window mode: ring-buffer cache; feed the prompt token-by-token
+        cache = init_decode_cache(cfg, B, window)
+        serve = make_serve_step(cfg, window=window, donate=False)
+        logits = None
+        for pos in range(S):
+            logits, cache = serve(params, cache, prompts[:, pos:pos + 1],
+                                  jnp.asarray(pos, jnp.int32))
+    else:
+        prefill = make_prefill_step(cfg)
+        logits, cache = prefill(params, {"tokens": prompts})
+        pad = [(0, 0)] * 6
+        pad[3] = (0, N)
+        if "k" in cache:
+            cache["k"] = jnp.pad(cache["k"], pad)
+            cache["v"] = jnp.pad(cache["v"], pad)
+        serve = make_serve_step(cfg, donate=False)
+    jax.block_until_ready(logits)
+    print(f"prefill {B}x{S}: {(time.time()-t0)*1e3:.0f} ms")
+
+    token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for pos in range(S, S + N):
+        logits, cache = serve(params, cache, token, jnp.asarray(pos, jnp.int32))
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(token)
+    dt = time.time() - t0
+    print(f"decode {N} tokens: {dt*1e3:.0f} ms ({dt/N*1e3:.1f} ms/token, "
+          f"window={window})")
+
+
+if __name__ == "__main__":
+    main()

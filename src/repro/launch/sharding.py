@@ -1,0 +1,175 @@
+"""Sharding rules: parameter, batch, and cache PartitionSpecs per arch.
+
+Baseline layout (hillclimbs in EXPERIMENTS.md §Perf modify these):
+
+  * batch over (pod, data); sequence unsharded in training.
+  * tensor parallelism over "model": attention heads, FFN hidden, vocab.
+  * MoE experts over "model" (expert parallelism — the RAF mapping,
+    DESIGN.md §4).
+  * Mamba heads over "model" (B/C projections replicated; ngroups=1).
+  * decode KV caches: batch over (pod, data) when divisible, sequence over
+    "model" (and over everything for the batch-1 long-context shape).
+
+Every rule guards on divisibility and falls back to replication — a 512-way
+mesh must lower every architecture, including kv-head counts smaller than
+the model axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import MODEL_AXIS, data_axes
+
+__all__ = [
+    "param_pspecs",
+    "state_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "named",
+]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _shard_if(mesh: Mesh, dim: int, axis) -> Optional[str]:
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Sharding rule by parameter name (leaf of the params pytree)."""
+    m = MODEL_AXIS
+    name = path.split("/")[-1]
+    none = (None,) * len(shape)
+
+    def spec_at(i: int, axis=m) -> P:
+        ax = _shard_if(mesh, shape[i], axis)
+        out = list(none)
+        out[i] = ax
+        return P(*out)
+
+    if name == "embed":
+        return spec_at(0)  # vocab-sharded embedding table
+    if name == "head":
+        return spec_at(1)
+    if name in ("final_norm", "frontend_proj"):
+        return P(*none)
+    # stacked block leaves: leading dims [n_periods, n_slots, ...]
+    if name in ("wq", "w1", "w3", "wz", "wx", "wdt", "conv_w"):
+        return spec_at(len(shape) - 1)
+    if name in ("wk", "wv"):
+        return spec_at(len(shape) - 1)
+    if name in ("wo", "w2"):
+        return spec_at(len(shape) - 2)
+    if name in ("bq", "bk", "bv", "conv_b", "gnorm", "dt_bias", "A_log", "D_skip"):
+        return spec_at(len(shape) - 1)
+    if name == "router":
+        return P(*none)
+    if name in ("norm", "b"):
+        return P(*none)
+    if name in ("wB", "wC"):
+        return P(*none)  # ngroups=1: B/C shared across heads
+    return P(*none)
+
+
+def _moe_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> Optional[P]:
+    """MoE expert stacks [np, ns, E, D, F]: shard the expert axis (RAF-style
+    expert parallelism) — takes precedence over the dense w1/w2/w3 rules."""
+    if "/moe/" not in path:
+        return None
+    name = path.split("/")[-1]
+    if name in ("w1", "w2", "w3"):
+        ax = _shard_if(mesh, shape[2], MODEL_AXIS)
+        return P(None, None, ax, None, None)
+    if name == "router":
+        return P(None, None, None, None)
+    if name == "norm":
+        return P(None, None, None)
+    return None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspecs(cfg: ArchConfig, params: Any, mesh: Mesh) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in leaves:
+        ps = _path_str(path)
+        spec = _moe_spec(ps, leaf.shape, mesh) or _leaf_spec(ps, leaf.shape, mesh)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_pspecs(cfg: ArchConfig, state: Any, mesh: Mesh) -> Any:
+    """Train state {params, opt{m, v, step}} — optimizer moments shard with
+    their parameters (ZeRO-free model parallelism: each shard's optimizer
+    slice lives with its weights, as Heta co-locates optimizer states §6)."""
+    pspec = param_pspecs(cfg, state["params"], mesh)
+    return {
+        "params": pspec,
+        "opt": {
+            "m": pspec,
+            "v": pspec,
+            "step": P(),
+        },
+    }
+
+
+def batch_pspecs(
+    cfg: ArchConfig, shape: InputShape, batch: Dict, mesh: Mesh
+) -> Dict:
+    dp = data_axes(mesh)
+    specs = {}
+    for k, v in batch.items():
+        bdim = v.shape[0]
+        ax = dp if bdim % _axis_size(mesh, dp) == 0 else None
+        specs[k] = P(ax, *([None] * (len(v.shape) - 1)))
+    return specs
+
+
+def cache_pspecs(cfg: ArchConfig, cache: Dict, mesh: Mesh) -> Dict:
+    """Decode caches: [np, ns, B, S, KV, hd] (attn) / [np, ns, B, ...] (ssm)."""
+    dp = data_axes(mesh)
+    specs = {}
+    for k, v in cache.items():
+        B = v.shape[2]
+        b_ax = dp if B % _axis_size(mesh, dp) == 0 else None
+        if k in ("k", "v"):
+            S = v.shape[3]
+            if b_ax is None:
+                # batch-1 long-context: spread the sequence over every axis
+                s_ax = ("pod", "data", MODEL_AXIS) if "pod" in mesh.axis_names else ("data", MODEL_AXIS)
+                s_ax = s_ax if S % _axis_size(mesh, s_ax) == 0 else _shard_if(mesh, S, MODEL_AXIS)
+            else:
+                s_ax = _shard_if(mesh, S, MODEL_AXIS)
+            specs[k] = P(None, None, b_ax, s_ax, None, None)
+        elif k == "ssm":  # [np, ns, B, nh, hp, N]
+            h_ax = _shard_if(mesh, v.shape[3], MODEL_AXIS)
+            specs[k] = P(None, None, b_ax, h_ax, None, None)
+        elif k == "conv":  # [np, ns, B, k-1, di]
+            d_ax = _shard_if(mesh, v.shape[4], MODEL_AXIS)
+            specs[k] = P(None, None, b_ax, None, d_ax)
+        else:
+            specs[k] = P(*([None] * len(v.shape)))
+    return specs
+
+
+def named(mesh: Mesh, tree_specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,108 @@
+"""Abstract input specs for every (architecture × input shape) pair.
+
+``input_specs`` returns ShapeDtypeStructs only (weak-type-correct, shardable,
+zero allocation) — the dry-run lowers against these; smoke tests materialize
+small real arrays with the same structure.
+
+Shape semantics (assignment brief):
+  * train_4k / prefill_32k lower ``train_step`` / ``prefill_step`` on the
+    full sequence;
+  * decode_32k / long_500k lower ``serve_step`` — ONE token against a cache
+    of ``seq_len`` context;
+  * encoder-only archs (hubert) have no decode step → decode shapes are
+    SKIPPED (reported, not silent);
+  * long_500k requires sub-quadratic attention: SSM/hybrid run natively;
+    pure-attention archs run the sliding-window variant (window 8192), the
+    permitted dense path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+__all__ = ["StepPlan", "plan_step", "input_specs", "abstract_state", "abstract_cache",
+           "DENSE_WINDOW"]
+
+DENSE_WINDOW = 8192  # sliding window for pure-attention archs at 500k context
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    kind: str  # train | prefill | decode | skip
+    window: Optional[int] = None
+    cache_len: int = 0
+    skip_reason: str = ""
+
+
+def plan_step(cfg: ArchConfig, shape: InputShape) -> StepPlan:
+    if shape.kind in ("decode",) and not cfg.is_decoder:
+        return StepPlan(
+            "skip",
+            skip_reason=f"{cfg.name} is encoder-only: no decode step (DESIGN.md §4)",
+        )
+    if shape.kind == "decode":
+        window = None
+        cache_len = shape.seq_len
+        if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+            window = DENSE_WINDOW  # sub-quadratic requirement: sliding window
+            cache_len = DENSE_WINDOW
+        return StepPlan("decode", window=window, cache_len=cache_len)
+    return StepPlan(shape.kind)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict:
+    """Batch ShapeDtypeStructs for train/prefill; (token, pos) for decode."""
+    B, S = shape.global_batch, shape.seq_len
+    plan = plan_step(cfg, shape)
+    if plan.kind == "skip":
+        return {}
+    if plan.kind == "decode":
+        return {"token": _sds((B, 1), jnp.int32), "pos": _sds((), jnp.int32)}
+    if cfg.frontend == "audio":
+        return {
+            "frames": _sds((B, S, cfg.frontend_dim), cfg.dtype),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        Pt = cfg.frontend_tokens
+        return {
+            "tokens": _sds((B, S - Pt), jnp.int32),
+            "patch_embeds": _sds((B, Pt, cfg.frontend_dim), cfg.dtype),
+            "labels": _sds((B, S - Pt), jnp.int32),
+        }
+    return {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+
+
+def abstract_state(cfg: ArchConfig):
+    """Shape-only train state (params + Adam moments) — no allocation."""
+    from repro.models.transformer import init_train_state
+
+    return jax.eval_shape(lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_params(cfg: ArchConfig):
+    from repro.models.transformer import init_params
+
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_cache(cfg: ArchConfig, shape: InputShape):
+    from repro.models.transformer import init_decode_cache
+
+    plan = plan_step(cfg, shape)
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, shape.global_batch, plan.cache_len)
+    )

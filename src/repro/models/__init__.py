@@ -1,0 +1,21 @@
+from repro.models.transformer import (
+    forward,
+    init_decode_cache,
+    init_params,
+    init_train_state,
+    loss_fn,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "forward",
+    "init_decode_cache",
+    "init_params",
+    "init_train_state",
+    "loss_fn",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+]

@@ -1,0 +1,238 @@
+"""GQA attention: training/prefill (full-sequence) and cached decode.
+
+Two execution paths:
+
+  * ``use_pallas=True`` — the flash-attention Pallas kernel (interpret mode
+    on CPU); used by the smoke tests and the TPU production path.
+  * ``use_pallas=False`` — pure-XLA einsum attention; used by the dry-run so
+    GSPMD can partition it (Pallas interpret mode is not partitionable), and
+    as a numerically identical fallback.
+
+Decode attends one new token against a KV cache laid out [B, S, KV, hd];
+``long_500k`` shards the cache's sequence axis, and the baseline lets GSPMD
+insert the collectives (§Perf hillclimbs this with a manual flash-decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, he_init, rms_norm
+
+__all__ = ["attn_params", "attention_block", "decode_attention_block"]
+
+
+def attn_params(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": he_init(ks[0], (D, H * hd), dtype, fan_in=D),
+        "wk": he_init(ks[1], (D, KV * hd), dtype, fan_in=D),
+        "wv": he_init(ks[2], (D, KV * hd), dtype, fan_in=D),
+        "wo": he_init(ks[3], (H * hd, D), dtype, fan_in=H * hd),
+        "norm": jnp.ones((D,), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _qkv(p: Dict, cfg: ArchConfig, x: jnp.ndarray, positions) -> Tuple:
+    b, s, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, H, hd)
+    k = k.reshape(b, s, KV, hd)
+    v = v.reshape(b, s, KV, hd)
+    if cfg.causal or cfg.rope_fraction > 0:
+        # encoder-only (hubert) uses learned-free sinusoid-free attention;
+        # we still apply RoPE for positional structure unless disabled
+        q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+def _xla_attention(
+    q, k, v, causal: bool, window: Optional[int], q_offset: int = 0,
+    kv_len_mask: Optional[jnp.ndarray] = None,
+):
+    """einsum attention; [b, s, h, hd] layout, GQA via head grouping."""
+    b, sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(b, sq, KV, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits *= 1.0 / np.sqrt(hd)
+    sk = k.shape[1]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len_mask is not None:  # [b, sk] valid-cache mask for decode
+        mask = mask[None] & kv_len_mask[:, None, :]
+        mask = mask[:, None, None]
+    else:
+        mask = mask[None, None, None]
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, H, hd)
+
+
+def _xla_attention_chunked(
+    q, k, v, causal: bool, window: Optional[int], chunk: int = 4096,
+    unroll: bool = True,
+):
+    """Flash-attention expressed in jnp: scan over key chunks with an online
+    softmax so the [sq, sk] score matrix never materializes in HBM.  This is
+    the XLA-partitionable stand-in for the Pallas kernel (which is the TPU
+    production path but cannot be SPMD-partitioned in interpret mode); it
+    cuts the attention memory term by ~sk/chunk (EXPERIMENTS.md §Perf).
+
+    ``unroll=True`` keeps the chunk loop out of a while op so the dry-run's
+    cost analysis sees every chunk.
+    """
+    b, sq, H, hd = q.shape
+    KV, sk = k.shape[2], k.shape[1]
+    g = H // KV
+    ck = min(chunk, sk)
+    n = sk // ck
+    if sk % ck:
+        return _xla_attention(q, k, v, causal, window)
+    qg = q.reshape(b, sq, KV, g, hd)
+    scale = 1.0 / np.sqrt(hd)
+    kc = k.reshape(b, n, ck, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n, ck, KV, hd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, j = inp
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb).astype(jnp.float32)
+        logits = logits * scale
+        kpos = j * ck + jnp.arange(ck)
+        mask = jnp.ones((sq, ck), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        palpha = jnp.exp(m - m_new)
+        probs = jnp.exp(logits - m_new[..., None])
+        l_new = palpha * l + probs.sum(-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", probs.astype(vb.dtype), vb)
+        acc_new = acc * palpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, KV, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, KV, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, KV, g, sq, hd), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n)), unroll=True if unroll else 1
+    )
+    out = acc / jnp.maximum(l, 1e-20)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, H, hd)
+
+
+def attention_block(
+    p: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # [b, s, D]
+    positions: jnp.ndarray,
+    window: Optional[int] = None,
+    use_pallas: bool = False,
+    return_kv: bool = False,
+    pctx=None,
+):
+    """Pre-norm attention block with residual (training / prefill).
+
+    ``pctx.sp_attention`` switches to *sequence-parallel attention*: queries
+    are sharded along the sequence over the model axis and the (small, GQA)
+    K/V are replicated across it.  This avoids the pathological score-matrix
+    all-reduce GSPMD emits when the head count does not divide the model axis
+    (llava's 56 heads on a 16-wide axis — EXPERIMENTS.md §Perf): per-layer
+    wire cost becomes one K/V broadcast + one activation gather instead of an
+    O(S²) score reduction.
+    """
+    b, s, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h, positions)
+    if pctx is not None and getattr(pctx, "sp_attention", False):
+        from jax.sharding import PartitionSpec as P
+
+        dp, ma = pctx.dp_axes, pctx.model_axis
+        q = jax.lax.with_sharding_constraint(q, P(dp, ma, None, None))
+        k = jax.lax.with_sharding_constraint(k, P(dp, None, None, None))
+        v = jax.lax.with_sharding_constraint(v, P(dp, None, None, None))
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=cfg.causal, window=window,
+        ).transpose(0, 2, 1, 3)
+    elif pctx is not None and getattr(pctx, "attn_chunk", 0):
+        out = _xla_attention_chunked(
+            q, k, v, cfg.causal, window, chunk=pctx.attn_chunk
+        )
+    else:
+        out = _xla_attention(q, k, v, cfg.causal, window)
+    out = out.reshape(b, s, cfg.num_heads * cfg.hd) @ p["wo"]
+    y = x + out
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def decode_attention_block(
+    p: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # [b, 1, D]
+    k_cache: jnp.ndarray,  # [b, S, KV, hd]
+    v_cache: jnp.ndarray,  # [b, S, KV, hd]
+    pos: jnp.ndarray,  # scalar int32: index of the new token
+    window: Optional[int] = None,
+):
+    """One-token cached decode.  Returns (y, new_k_cache, new_v_cache).
+
+    With a sliding window the cache is ring-buffered at ``window`` slots, so
+    the 500k-context shape holds O(window) state for dense architectures
+    (DESIGN.md §4); otherwise the cache holds the full sequence.
+    """
+    b, _, D = x.shape
+    S = k_cache.shape[1]
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    q, k, v = _qkv(p, cfg, h, positions)
+    slot = (pos % S) if window else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    kpos = jnp.arange(S)[None, :]
+    if window:
+        # ring buffer: slot i currently holds position p_i ≡ i (mod S), the
+        # latest such position ≤ pos
+        offset = pos - slot
+        real_pos = jnp.where(kpos <= slot, kpos + offset, kpos + offset - S)
+        valid = (real_pos >= 0) & (real_pos <= pos) & (real_pos > pos - window)
+    else:
+        valid = kpos <= pos
+    valid = jnp.broadcast_to(valid, (b, S))
+    out = _xla_attention(q, k_cache, v_cache, False, None, kv_len_mask=valid)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.hd) @ p["wo"]
+    return x + out, k_cache, v_cache

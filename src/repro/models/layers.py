@@ -1,0 +1,57 @@
+"""Shared transformer layers: RMSNorm, RoPE variants, init helpers."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "apply_rope", "rope_frequencies", "he_init", "embed_init"]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float) -> int:
+    """Number of head dims that get rotated (even).  ``fraction=0.5`` is the
+    ChatGLM '2d RoPE': only the first half of each head rotates."""
+    rot = int(head_dim * fraction)
+    return rot - (rot % 2)
+
+
+def apply_rope(
+    x: jnp.ndarray,  # [b, s, h, hd]
+    positions: jnp.ndarray,  # [b, s] or [s]
+    fraction: float = 1.0,
+    theta: float = 500_000.0,
+) -> jnp.ndarray:
+    b, s, h, hd = x.shape
+    rot = rope_frequencies(hd, fraction, theta)
+    if rot == 0:
+        return x
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (b, s))
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [b, s, half]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated, xp], axis=-1)
+
+
+def he_init(key: jax.Array, shape: Tuple[int, ...], dtype, fan_in: Optional[int] = None):
+    fan = fan_in or shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / np.sqrt(fan)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...], dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

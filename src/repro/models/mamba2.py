@@ -1,0 +1,178 @@
+"""Mamba-2 block: chunked SSD (state-space duality) + recurrent decode.
+
+Training/prefill uses the SSD chunked algorithm [arXiv:2405.21060]: the
+sequence is split into chunks; within a chunk the recurrence is evaluated as
+a masked, decay-weighted attention-like quadratic form (MXU-friendly), and
+chunk-crossing state is carried by a short ``lax.scan`` over chunks:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t · x_t ⊗ B_t          (per head, [hp, N])
+    y_t = C_t · h_t + D ⊙ x_t
+
+Decode is the O(1) recurrence on a cached state.  Heads are the model-
+parallel axis (DESIGN.md §4: the technique itself is inapplicable to the
+scan — there is no relation decomposition — so the arch runs *without* it,
+with heads sharded over ``"model"`` and sequence/batch over data axes).
+
+Simplifications vs the reference implementation (documented): ngroups=1
+(B/C shared across heads), depthwise conv applied to x only, no bias on
+projections.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import he_init, rms_norm
+
+__all__ = ["mamba_params", "mamba_block", "decode_mamba_block"]
+
+
+def mamba_params(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    D, di, nh, N = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": he_init(ks[0], (D, di), dtype, fan_in=D),
+        "wx": he_init(ks[1], (D, di), dtype, fan_in=D),
+        "wB": he_init(ks[2], (D, N), dtype, fan_in=D),
+        "wC": he_init(ks[3], (D, N), dtype, fan_in=D),
+        "wdt": he_init(ks[4], (D, nh), dtype, fan_in=D),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) ∈ (-∞, 0)
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "conv_w": he_init(ks[5], (cfg.ssm_conv, di), dtype, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "gnorm": jnp.ones((di,), dtype),
+        "norm": jnp.ones((D,), dtype),
+        "wo": he_init(ks[6], (di, D), dtype, fan_in=di),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time.  x [b, s, di], w [k, di]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssd_chunked(
+    x: jnp.ndarray,  # [b, s, nh, hp]
+    dt: jnp.ndarray,  # [b, s, nh] (post-softplus)
+    A: jnp.ndarray,  # [nh] negative
+    B_: jnp.ndarray,  # [b, s, N]
+    C_: jnp.ndarray,  # [b, s, N]
+    chunk: int = 128,
+    return_state: bool = False,
+    compute_dtype=jnp.float32,
+):
+    b, s, nh, hp = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, s)
+    nc = s // Q
+    assert s % Q == 0, "sequence must divide the SSD chunk"
+    # decay/cumsum math stays f32 (exp of sums); the large tensors (xb, the
+    # QxQ score block, state outer products) follow compute_dtype — the
+    # mixed-precision SSD is the §Perf memory-term iteration for mamba2
+    xb = x.reshape(b, nc, Q, nh, hp).astype(compute_dtype)
+    dtb = dt.reshape(b, nc, Q, nh)
+    Bb = B_.reshape(b, nc, Q, N).astype(compute_dtype)
+    Cb = C_.reshape(b, nc, Q, N).astype(compute_dtype)
+
+    dA = dtb * A  # [b, nc, Q, nh]
+    cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk: y_i += Σ_{j≤i} (C_i·B_j) exp(cum_i - cum_j) dt_j x_j
+    # mask in log space: the upper triangle has positive exponents (future
+    # positions) that overflow exp() before the mask would zero them
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,Q,Q,nh]
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(tri, diff, -jnp.inf)).astype(compute_dtype)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cb, Bb)[..., None]  # [b,nc,Q,Q,1]
+    scores = cb * decay * dtb[:, :, None, :, :].astype(compute_dtype)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", scores, xb)
+
+    # chunk-final states S_c = Σ_j exp(cum_last - cum_j) dt_j x_j ⊗ B_j
+    last = cum[:, :, -1:, :]  # [b, nc, 1, nh]
+    w = (jnp.exp(last - cum) * dtb).astype(compute_dtype)  # [b, nc, Q, nh]
+    Sc = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", w, xb, Bb)  # [b,nc,nh,hp,N]
+
+    # inter-chunk scan: H entering chunk c
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # [b, nc, nh]
+
+    def f(carry, inp):
+        dec, S = inp  # [b, nh], [b, nh, hp, N]
+        out = carry
+        new = dec[..., None, None].astype(carry.dtype) * carry + S
+        return new.astype(carry.dtype), out
+
+    H0 = jnp.zeros((b, nh, hp, N), compute_dtype)
+    Hfinal, Hprev = jax.lax.scan(
+        f, H0, (chunk_decay.swapaxes(0, 1), Sc.swapaxes(0, 1))
+    )  # [nc, b, nh, hp, N]
+    Hprev = Hprev.swapaxes(0, 1)  # [b, nc, nh, hp, N]
+
+    y = y + jnp.einsum("bcin,bchpn->bcihp", Cb, Hprev) * jnp.exp(cum)[
+        ..., None
+    ].astype(compute_dtype)
+    y = y.reshape(b, s, nh, hp).astype(x.dtype)
+    if return_state:
+        return y, Hfinal
+    return y
+
+
+def mamba_block(
+    p: Dict, cfg: ArchConfig, x: jnp.ndarray, chunk: int = 128,
+    compute_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Pre-norm Mamba-2 block with residual (training / prefill)."""
+    b, s, D = x.shape
+    di, nh, hp, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z = h @ p["wz"]
+    xin = jax.nn.silu(_causal_conv(h @ p["wx"], p["conv_w"], p["conv_b"]))
+    B_ = h @ p["wB"]
+    C_ = h @ p["wC"]
+    dt = jax.nn.softplus((h @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(b, s, nh, hp)
+    y = _ssd_chunked(xh, dt, A, B_, C_, chunk, compute_dtype=compute_dtype)
+    y = y + (p["D_skip"][:, None].astype(compute_dtype)
+             * xh.astype(compute_dtype)).astype(y.dtype)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y, p["gnorm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["wo"]
+
+
+def decode_mamba_block(
+    p: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # [b, 1, D]
+    conv_state: jnp.ndarray,  # [b, k-1, di]
+    ssm_state: jnp.ndarray,  # [b, nh, hp, N] float32
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent decode step; returns (y, conv_state, ssm_state)."""
+    b, _, D = x.shape
+    di, nh, hp, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    h = rms_norm(x, p["norm"], cfg.norm_eps)[:, 0]  # [b, D]
+    z = h @ p["wz"]
+    xproj = h @ p["wx"]  # [b, di]
+    window = jnp.concatenate([conv_state, xproj[:, None, :]], axis=1)  # [b,k,di]
+    conv = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xin = jax.nn.silu(conv)
+    new_conv_state = window[:, 1:]
+    B_ = (h @ p["wB"]).astype(jnp.float32)
+    C_ = (h @ p["wC"]).astype(jnp.float32)
+    dt = jax.nn.softplus((h @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])  # [b,nh]
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(b, nh, hp).astype(jnp.float32)
+    decay = jnp.exp(dt * A)  # [b, nh]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, B_)
+    new_ssm = decay[..., None, None] * ssm_state + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_, new_ssm) + p["D_skip"][:, None] * xh
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rms_norm(y, p["gnorm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + (y @ p["wo"])[:, None], new_conv_state, new_ssm

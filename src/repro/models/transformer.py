@@ -1,0 +1,469 @@
+"""Period-structured transformer LM: one implementation, ten architectures.
+
+The layer stack is ``lax.scan`` over *periods* (repeating layer groups, see
+``configs/base.py``) with parameters stacked on the period axis — the 72-layer
+398B Jamba lowers to the same small HLO as a 2-layer smoke model.  Block
+kinds inside a period (attention / Mamba, dense-MLP / MoE) are static Python
+structure.
+
+Entry points:
+  * ``init_params``      — materialize parameters (smoke tests) or shape-only
+                           via ``jax.eval_shape`` (dry-run).
+  * ``forward``          — training/prefill forward to logits.
+  * ``make_train_step``  — CE loss + AdamW, donate-friendly.
+  * ``init_decode_cache``/``make_serve_step`` — single-token decode against
+                           KV / SSM caches (sliding-window ring buffer for
+                           the 500k dense shape).
+
+Batch dicts by family: decoder LMs take {tokens, labels}; VLM adds
+``patch_embeds`` (vision frontend stub); audio takes {frames, labels}
+(conv/mel frontend stub) — per the assignment brief, frontends provide
+precomputed embeddings and the backbone is real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import attn_params, attention_block, decode_attention_block
+from repro.models.layers import embed_init, he_init, rms_norm
+from repro.models.mamba2 import decode_mamba_block, mamba_block, mamba_params
+from repro.models.moe import mlp_block, mlp_params, moe_block, moe_block_ep, moe_params
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+__all__ = [
+    "ParallelCtx",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "make_train_step",
+    "init_train_state",
+    "init_decode_cache",
+    "make_serve_step",
+    "make_prefill_step",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Optional explicit-parallelism context for beyond-GSPMD block variants
+    (EXPERIMENTS.md §Perf).  ``moe='expert_parallel'`` switches MoE blocks to
+    the shard_map all_to_all implementation (RAF-style expert parallelism)."""
+
+    mesh: object
+    dp_axes: tuple
+    model_axis: str = "model"
+    moe: str = "gspmd"  # gspmd | expert_parallel
+    sp_attention: bool = False  # sequence-parallel attention (§Perf)
+    attn_chunk: int = 0  # >0: chunked (flash-style) XLA attention (§Perf)
+    ssd_chunk: int = 128  # SSD chunk length (memory/compute trade, §Perf)
+    ssd_bf16: bool = False  # mixed-precision SSD (§Perf)
+    remat_policy: str = "full"  # full | dots | none
+    constrain_activations: bool = False  # pin residual stream to P(dp, ...)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _stacked(fn, key: jax.Array, n_periods: int, n_slots: int):
+    if n_slots == 0:
+        return None
+    ks = jax.random.split(key, n_periods * n_slots)
+    flat = jax.vmap(fn)(ks)
+    return jax.tree.map(
+        lambda a: a.reshape((n_periods, n_slots) + a.shape[1:]), flat
+    )
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    n_attn = len(cfg.attn_slots)
+    n_mamba = len(cfg.mamba_slots)
+    n_moe = len(cfg.moe_slots)
+    n_mlp = (cfg.period - n_moe) if cfg.d_ff > 0 else 0
+
+    blocks: Dict = {}
+    if n_attn:
+        blocks["attn"] = _stacked(
+            lambda k: attn_params(k, cfg, dtype), ks[0], cfg.n_periods, n_attn
+        )
+    if n_mamba:
+        blocks["mamba"] = _stacked(
+            lambda k: mamba_params(k, cfg, dtype), ks[1], cfg.n_periods, n_mamba
+        )
+    if n_mlp:
+        blocks["mlp"] = _stacked(
+            lambda k: mlp_params(k, cfg, dtype), ks[2], cfg.n_periods, n_mlp
+        )
+    if n_moe:
+        blocks["moe"] = _stacked(
+            lambda k: moe_params(k, cfg, dtype), ks[3], cfg.n_periods, n_moe
+        )
+
+    params: Dict = {
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.frontend != "audio":
+        params["embed"] = embed_init(ks[4], (cfg.vocab, cfg.d_model), dtype)
+    params["head"] = he_init(ks[5], (cfg.d_model, cfg.vocab), dtype, fan_in=cfg.d_model)
+    if cfg.frontend:
+        params["frontend_proj"] = he_init(
+            ks[6], (cfg.frontend_dim, cfg.d_model), dtype, fan_in=cfg.frontend_dim
+        )
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ArchConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    if cfg.frontend == "audio":
+        return batch["frames"].astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"]
+    x = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision":
+        patches = batch["patch_embeds"].astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def _period_body(
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    period: Dict,
+    positions: jnp.ndarray,
+    window: Optional[int],
+    use_pallas: bool,
+    pctx: Optional["ParallelCtx"] = None,
+) -> jnp.ndarray:
+    i = {"attn": 0, "mamba": 0, "mlp": 0, "moe": 0}
+
+    def take(kind):
+        p = jax.tree.map(lambda a: a[i[kind]], period[kind])
+        i[kind] += 1
+        return p
+
+    for slot in range(cfg.period):
+        if pctx is not None and pctx.constrain_activations:
+            # keep the residual stream batch-sharded: without this GSPMD can
+            # lose the batch axis through the layer stack and all-gather full
+            # activations (the llava prefill pathology, §Perf)
+            from jax.sharding import PartitionSpec as P
+
+            x = jax.lax.with_sharding_constraint(
+                x, P(pctx.dp_axes, None, None)
+            )
+        if slot in cfg.attn_slots:
+            x = attention_block(
+                take("attn"), cfg, x, positions, window=window,
+                use_pallas=use_pallas, pctx=pctx,
+            )
+        else:
+            import jax.numpy as _jnp
+
+            x = mamba_block(
+                take("mamba"), cfg, x,
+                chunk=pctx.ssd_chunk if pctx is not None else 128,
+                compute_dtype=(
+                    _jnp.bfloat16
+                    if pctx is not None and pctx.ssd_bf16
+                    else _jnp.float32
+                ),
+            )
+        if slot in cfg.moe_slots:
+            if pctx is not None and pctx.moe == "expert_parallel":
+                x = moe_block_ep(
+                    take("moe"), cfg, x, pctx.mesh, pctx.dp_axes, pctx.model_axis
+                )
+            else:
+                x = moe_block(take("moe"), cfg, x)
+        elif cfg.d_ff > 0:
+            x = mlp_block(take("mlp"), cfg, x)
+    return x
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Dict,
+    batch: Dict,
+    window: Optional[int] = None,
+    use_pallas: bool = False,
+    remat: bool = True,
+    unroll: bool = False,
+    pctx: Optional[ParallelCtx] = None,
+) -> jnp.ndarray:
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, period):
+        out = _period_body(cfg, carry, period, positions, window, use_pallas, pctx)
+        return out, None
+
+    if remat:
+        policy = None
+        if pctx is not None and pctx.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(body, policy=policy)
+    # unroll=True removes the while loop so XLA cost_analysis sees every
+    # layer (CPU cost analysis does not multiply loop bodies by trip count);
+    # the dry-run/roofline path uses it, training keeps the compact loop.
+    x, _ = jax.lax.scan(
+        body, x, params["blocks"], unroll=True if unroll else 1
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["head"]
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict, **kw) -> jnp.ndarray:
+    logits = forward(cfg, params, batch, **kw)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        logits = logits[:, cfg.frontend_tokens :]  # loss on text positions only
+    if cfg.is_decoder and cfg.frontend != "audio":
+        logits, labels = logits[:, :-1], labels[:, 1:]  # next-token prediction
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+
+def init_train_state(cfg: ArchConfig, key: jax.Array) -> Dict:
+    params = init_params(cfg, key)
+    return {"params": params, "opt": adam_init(params)}
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    adam_cfg: Optional[AdamConfig] = None,
+    use_pallas: bool = False,
+    donate: bool = True,
+):
+    adam_cfg = adam_cfg or AdamConfig(lr=3e-4, weight_decay=0.01, grad_clip=1.0)
+
+    def step(state: Dict, batch: Dict) -> Tuple[Dict, jnp.ndarray]:
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, use_pallas=use_pallas)
+        )(state["params"])
+        params, opt = adam_update(adam_cfg, state["params"], grads, state["opt"])
+        return {"params": params, "opt": opt}, loss
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+# --------------------------------------------------------------------------
+# decode (serve)
+# --------------------------------------------------------------------------
+
+
+def init_decode_cache(
+    cfg: ArchConfig,
+    batch_size: int,
+    cache_len: int,
+    dtype=None,
+) -> Dict:
+    """Allocate the decode cache.  ``cache_len`` is the KV span: full context
+    for exact attention, ``window`` for the sliding-window ring buffer."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    np_, B = cfg.n_periods, batch_size
+    cache: Dict = {}
+    n_attn = len(cfg.attn_slots)
+    n_mamba = len(cfg.mamba_slots)
+    if n_attn:
+        shape = (np_, n_attn, B, cache_len, cfg.num_kv_heads, cfg.hd)
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+    if n_mamba:
+        cache["conv"] = jnp.zeros(
+            (np_, n_mamba, B, cfg.ssm_conv - 1, cfg.d_inner), dtype
+        )
+        cache["ssm"] = jnp.zeros(
+            (np_, n_mamba, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        )
+    return cache
+
+
+def _decode_period(
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    period: Dict,
+    cache_slice: Dict,
+    pos: jnp.ndarray,
+    window: Optional[int],
+) -> Tuple[jnp.ndarray, Dict]:
+    i = {"attn": 0, "mamba": 0, "mlp": 0, "moe": 0}
+    new_cache = {k: [] for k in cache_slice}
+
+    def take(kind):
+        p = jax.tree.map(lambda a: a[i[kind]], period[kind])
+        return p
+
+    for slot in range(cfg.period):
+        if slot in cfg.attn_slots:
+            p = take("attn")
+            kc = cache_slice["k"][i["attn"]]
+            vc = cache_slice["v"][i["attn"]]
+            x, kc, vc = decode_attention_block(p, cfg, x, kc, vc, pos, window=window)
+            new_cache["k"].append(kc)
+            new_cache["v"].append(vc)
+            i["attn"] += 1
+        else:
+            p = take("mamba")
+            cs = cache_slice["conv"][i["mamba"]]
+            ss = cache_slice["ssm"][i["mamba"]]
+            x, cs, ss = decode_mamba_block(p, cfg, x, cs, ss)
+            new_cache["conv"].append(cs)
+            new_cache["ssm"].append(ss)
+            i["mamba"] += 1
+        if slot in cfg.moe_slots:
+            x = moe_block(take("moe"), cfg, x)
+            i["moe"] += 1
+        elif cfg.d_ff > 0:
+            x = mlp_block(take("mlp"), cfg, x)
+            i["mlp"] += 1
+    return x, {k: jnp.stack(v) for k, v in new_cache.items()}
+
+
+def make_serve_step(cfg: ArchConfig, window: Optional[int] = None, donate: bool = True,
+                    unroll: bool = False):
+    """One-token decode: (params, cache, token [B,1], pos) -> (logits, cache)."""
+    if not cfg.is_decoder:
+        raise ValueError(f"{cfg.name} is encoder-only; no decode step (DESIGN.md §4)")
+
+    def step(params: Dict, cache: Dict, token: jnp.ndarray, pos: jnp.ndarray):
+        x = params["embed"][token]  # [B, 1, D]
+
+        def body(carry, xs):
+            period, cache_slice = xs
+            out, new_slice = _decode_period(cfg, carry, period, cache_slice, pos, window)
+            return out, new_slice
+
+        x, new_cache = jax.lax.scan(
+            body, x, (params["blocks"], cache),
+            unroll=True if unroll else 1,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["head"]
+        return logits, new_cache
+
+    return jax.jit(step, donate_argnums=(1,) if donate else ())
+
+
+# --------------------------------------------------------------------------
+# prefill: forward + cache construction
+# --------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ArchConfig, use_pallas: bool = False, unroll: bool = False,
+                      pctx: Optional[ParallelCtx] = None):
+    """(params, batch) -> (last-position logits, decode cache)."""
+    if not cfg.is_decoder:
+        # encoder-only: "prefill" degenerates to a full forward (classification
+        # per frame); no cache exists.
+        def enc_step(params: Dict, batch: Dict):
+            return (
+                forward(cfg, params, batch, use_pallas=use_pallas, remat=False,
+                        unroll=unroll),
+                {},
+            )
+
+        return jax.jit(enc_step)
+
+    def step(params: Dict, batch: Dict):
+        x = _embed_inputs(cfg, params, batch)
+        b, s, _ = x.shape
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def body(carry, period):
+            i = {"attn": 0, "mamba": 0}
+            kv, conv, ssm = [], [], []
+            x_ = carry
+            for slot in range(cfg.period):
+                if pctx is not None and pctx.constrain_activations:
+                    from jax.sharding import PartitionSpec as P
+
+                    x_ = jax.lax.with_sharding_constraint(
+                        x_, P(pctx.dp_axes, None, None)
+                    )
+                if slot in cfg.attn_slots:
+                    p = jax.tree.map(lambda a: a[i["attn"]], period["attn"])
+                    x_, (k, v) = attention_block(
+                        p, cfg, x_, positions, use_pallas=use_pallas,
+                        return_kv=True, pctx=pctx,
+                    )
+                    kv.append((k, v))
+                    i["attn"] += 1
+                else:
+                    p = jax.tree.map(lambda a: a[i["mamba"]], period["mamba"])
+                    x_, st = _mamba_prefill(p, cfg, x_)
+                    conv.append(st[0])
+                    ssm.append(st[1])
+                    i["mamba"] += 1
+                if slot in cfg.moe_slots:
+                    idx = cfg.moe_slots.index(slot)
+                    pm = jax.tree.map(lambda a: a[idx], period["moe"])
+                    if pctx is not None and pctx.moe == "expert_parallel":
+                        x_ = moe_block_ep(
+                            pm, cfg, x_, pctx.mesh, pctx.dp_axes, pctx.model_axis
+                        )
+                    else:
+                        x_ = moe_block(pm, cfg, x_)
+                elif cfg.d_ff > 0:
+                    mlp_idx = [t for t in range(cfg.period) if t not in cfg.moe_slots].index(slot)
+                    x_ = mlp_block(jax.tree.map(lambda a: a[mlp_idx], period["mlp"]), cfg, x_)
+            out_cache = {}
+            if kv:
+                out_cache["k"] = jnp.stack([k for k, _ in kv])
+                out_cache["v"] = jnp.stack([v for _, v in kv])
+            if conv:
+                out_cache["conv"] = jnp.stack(conv)
+                out_cache["ssm"] = jnp.stack(ssm)
+            return x_, out_cache
+
+        x, cache = jax.lax.scan(
+            body, x, params["blocks"], unroll=True if unroll else 1
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1:] @ params["head"]
+        return logits, cache
+
+    return jax.jit(step)
+
+
+def _mamba_prefill(p: Dict, cfg: ArchConfig, x: jnp.ndarray):
+    """Mamba block that also returns (conv_state, final ssm state)."""
+    from repro.models.mamba2 import _causal_conv, _ssd_chunked  # internals
+
+    b, s, D = x.shape
+    di, nh, hp, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z = h @ p["wz"]
+    xproj = h @ p["wx"]
+    xin = jax.nn.silu(_causal_conv(xproj, p["conv_w"], p["conv_b"]))
+    B_ = h @ p["wB"]
+    C_ = h @ p["wC"]
+    dt = jax.nn.softplus((h @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(b, s, nh, hp)
+    y, H = _ssd_chunked(xh, dt, A, B_, C_, return_state=True)
+    y = y + (p["D_skip"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y, p["gnorm"], cfg.norm_eps) * jax.nn.silu(z)
+    conv_state = xproj[:, -(cfg.ssm_conv - 1) :, :]
+    return x + y @ p["wo"], (conv_state, H)

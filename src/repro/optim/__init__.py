@@ -1,0 +1,18 @@
+from repro.optim.adam import (
+    AdamConfig,
+    adam_init,
+    adam_update,
+    sparse_adam_rows,
+    global_norm,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+__all__ = [
+    "AdamConfig",
+    "adam_init",
+    "adam_update",
+    "sparse_adam_rows",
+    "global_norm",
+    "cosine_schedule",
+    "linear_warmup",
+]

@@ -1,0 +1,109 @@
+"""AdamW from scratch (dense pytrees + sparse row updates).
+
+Two entry points:
+
+  * :func:`adam_update` — dense AdamW over an arbitrary pytree (model params,
+    stacked relation weights, transformer stacks).  States are stored with the
+    same sharding as the params, so model-parallel shards carry only their
+    slice of optimizer state.
+
+  * :func:`sparse_adam_rows` — per-row Adam for learnable feature tables
+    (paper §2.2/§6): only the rows touched by a minibatch are updated, and the
+    row-aligned moment/variance states travel with the rows through the cache
+    engine.  This is the "learnable features + optimizer states" payload whose
+    DRAM traffic Heta's cache eliminates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamConfig", "adam_init", "adam_update", "sparse_adam_rows", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0  # 0 disables clipping
+
+
+def adam_init(params: Any) -> Dict[str, Any]:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+
+
+def adam_update(
+    cfg: AdamConfig, params: Any, grads: Any, state: Dict[str, Any], lr_scale=1.0
+) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    if cfg.grad_clip > 0:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        update = (m / b1t) / (jnp.sqrt(v / b2t) + cfg.eps)
+        if cfg.weight_decay:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * lr_scale * update).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "m": jax.tree.unflatten(treedef, new_m),
+            "v": jax.tree.unflatten(treedef, new_v),
+            "step": step,
+        },
+    )
+
+
+def sparse_adam_rows(
+    cfg: AdamConfig,
+    rows: jnp.ndarray,  # [n, d] current values of the touched rows
+    grads: jnp.ndarray,  # [n, d]
+    m: jnp.ndarray,  # [n, d] row-aligned first moment
+    v: jnp.ndarray,  # [n, d] row-aligned second moment
+    step: jnp.ndarray,  # scalar int (table-global step count)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One Adam step on a *row slice* of a learnable feature table.
+
+    The caller (cache engine) fetched ``rows``/``m``/``v`` for the unique node
+    ids of a minibatch, and scatters the returned values back — device-cached
+    rows never touch host memory (paper §6's non-replicative mutable cache).
+    """
+    g32 = grads.astype(jnp.float32)
+    t = step.astype(jnp.float32) + 1.0
+    m = cfg.b1 * m + (1 - cfg.b1) * g32
+    v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+    mhat = m / (1.0 - cfg.b1**t)
+    vhat = v / (1.0 - cfg.b2**t)
+    new = rows.astype(jnp.float32) - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+    return new.astype(rows.dtype), m, v

@@ -1,0 +1,65 @@
+"""Token pipeline: determinism, sharding arithmetic, prefetch liveness."""
+
+import numpy as np
+
+from repro.data import SyntheticCorpus, TokenPipeline
+
+
+def test_corpus_deterministic_and_shifted():
+    c = SyntheticCorpus(vocab=1000, seq_len=32, num_shards=4, seed=7)
+    a = c.sequence(1, 5)
+    b = c.sequence(1, 5)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(c.sequence(1, 6), a)
+    batch = c.batch(0, 0, 4)
+    np.testing.assert_array_equal(batch["tokens"][:, 1:], batch["labels"][:, :-1])
+    assert batch["tokens"].max() < 1000
+
+
+def test_pipeline_shapes_and_progress():
+    c = SyntheticCorpus(vocab=512, seq_len=16, num_shards=4)
+    pipe = TokenPipeline(c, global_batch=8, prefetch=2)
+    try:
+        b1 = next(pipe)
+        b2 = next(pipe)
+        assert b1["tokens"].shape == (8, 16)
+        assert b1["labels"].shape == (8, 16)
+        assert not np.array_equal(b1["tokens"], b2["tokens"])
+    finally:
+        pipe.close()
+
+
+def test_pipeline_multi_host_split():
+    c = SyntheticCorpus(vocab=512, seq_len=16, num_shards=4)
+    p0 = TokenPipeline(c, global_batch=8, host_id=0, num_hosts=2)
+    p1 = TokenPipeline(c, global_batch=8, host_id=1, num_hosts=2)
+    try:
+        b0, b1 = next(p0), next(p1)
+        assert b0["tokens"].shape == (4, 16)  # half the global batch each
+        assert not np.array_equal(b0["tokens"], b1["tokens"])  # disjoint shards
+    finally:
+        p0.close()
+        p1.close()
+
+
+def test_pipeline_feeds_training():
+    import jax
+
+    import repro.configs.all_archs  # noqa: F401
+    from repro.configs.base import ARCHS
+    from repro.models import init_train_state, make_train_step
+
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    c = SyntheticCorpus(vocab=cfg.vocab, seq_len=32, num_shards=2)
+    pipe = TokenPipeline(c, global_batch=2)
+    try:
+        state = init_train_state(cfg, jax.random.PRNGKey(0))
+        step = make_train_step(cfg, donate=False)
+        import jax.numpy as jnp
+
+        for _ in range(2):
+            b = next(pipe)
+            state, loss = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+            assert np.isfinite(float(loss))
+    finally:
+        pipe.close()

@@ -1,0 +1,106 @@
+"""Unit tests for the dry-run tooling: HLO collective parser, extrapolation,
+plan logic, and the roofline math (no 512-device environment needed)."""
+
+import sys
+import os
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _import_dryrun_tools():
+    """Import parser/extrapolator without triggering the module's XLA_FLAGS
+    512-device override (jax is already initialized by other tests)."""
+    import importlib
+
+    saved = os.environ.get("XLA_FLAGS")
+    mod = importlib.import_module("repro.launch.dryrun")
+    if saved is None:
+        os.environ.pop("XLA_FLAGS", None)
+    else:
+        os.environ["XLA_FLAGS"] = saved
+    return mod
+
+
+HLO = """
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %ag = bf16[4,256]{1,0} all-gather(%y), dimensions={0}
+  %aa = f32[8,8]{1,0} all-to-all(%z), dimensions={0}
+  %cp = s32[10]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %rs = f32[2,64]{1,0} reduce-scatter(%v), dimensions={0}, to_apply=%sum
+  %dead = f32[999,999]{1,0} add(%a, %b)
+"""
+
+
+def test_collective_parser():
+    dr = _import_dryrun_tools()
+    got = dr.collective_bytes(HLO)
+    assert got["all-reduce"] == 16 * 128 * 4
+    assert got["all-gather"] == 4 * 256 * 2
+    assert got["all-to-all"] == 8 * 8 * 4
+    assert got["collective-permute"] == 10 * 4
+    assert got["reduce-scatter"] == 2 * 64 * 4
+    assert got["count_all-reduce"] == 1
+    expected_total = 16 * 128 * 4 + 4 * 256 * 2 + 8 * 8 * 4 + 40 + 2 * 64 * 4
+    assert got["total"] == expected_total
+
+
+def test_extrapolation_linear_and_clamped():
+    dr = _import_dryrun_tools()
+    r1 = {"flops": 10.0, "bytes_accessed": 100.0, "transcendentals": 1.0,
+          "collectives": {"all-reduce": 8, "total": 8}}
+    r2 = {"flops": 16.0, "bytes_accessed": 150.0, "transcendentals": 1.5,
+          "collectives": {"all-reduce": 12, "total": 12}}
+    out = dr._extrapolate(r1, r2, 10)
+    assert out["flops"] == 10 + 9 * 6  # f(1) + (n-1)·delta
+    assert out["collectives"]["all-reduce"] == 8 + 9 * 4
+    # non-monotone counters clamp at ≥ f(2), never negative
+    r2b = dict(r2, flops=9.0)
+    out2 = dr._extrapolate(r1, r2b, 10)
+    assert out2["flops"] == 10.0  # max(r1 + 0, r2)
+
+
+def test_roofline_math():
+    from benchmarks.roofline import roofline_row
+
+    rec = {
+        "status": "ok", "arch": "x", "shape": "train_4k", "mesh": "pod16x16",
+        "step_kind": "train", "num_devices": 256,
+        "active_params": 1e9,
+        "flops": 197e12,  # exactly one second of compute
+        "bytes_accessed": 819e9,  # one second of HBM
+        "collectives": {"total": 100e9},  # two seconds of ICI
+        "memory": {},
+    }
+    row = roofline_row(rec)
+    assert row["compute_s"] == pytest.approx(1.0)
+    assert row["memory_s"] == pytest.approx(1.0)
+    assert row["collective_s"] == pytest.approx(2.0)
+    assert row["dominant"] == "collective"
+    # 6·N·T / (flops × devices)
+    from repro.configs.base import INPUT_SHAPES
+
+    t = INPUT_SHAPES["train_4k"].tokens
+    assert row["useful_ratio"] == pytest.approx(6 * 1e9 * t / (197e12 * 256))
+
+
+def test_plan_windows_and_cache_lengths():
+    import repro.configs.all_archs  # noqa: F401
+    from repro.configs.base import ARCHS, INPUT_SHAPES
+    from repro.launch.specs import DENSE_WINDOW, plan_step
+
+    for name, cfg in ARCHS.items():
+        for sh in INPUT_SHAPES.values():
+            p = plan_step(cfg, sh)
+            if p.kind == "skip":
+                assert not cfg.is_decoder
+                continue
+            if sh.kind == "decode":
+                if sh.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+                    assert p.window == DENSE_WINDOW
+                    assert p.cache_len == DENSE_WINDOW
+                else:
+                    assert p.window is None
+                    assert p.cache_len == sh.seq_len

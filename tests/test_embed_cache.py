@@ -1,0 +1,133 @@
+"""Miss-penalty cache (paper §6): allocation policy, hit accounting,
+non-replicative consistency, sparse-Adam-through-cache correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metatree import build_metatree
+from repro.embed import (
+    EmbedEngine,
+    allocate_cache,
+    analytic_miss_penalty,
+    presample_hotness,
+    profile_miss_penalties,
+)
+from repro.embed.profiler import row_bytes
+from repro.graph.sampler import SampleSpec
+from repro.graph.synthetic import donor_like, ogbn_mag_like
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+
+@pytest.fixture(scope="module")
+def mag_setup():
+    g = ogbn_mag_like(scale=0.002)
+    tree = build_metatree(g.metagraph(), g.target_type, 2)
+    spec = SampleSpec.from_metatree(tree, [4, 3])
+    hot = presample_hotness(g, spec, batch_size=64, epochs=2, max_batches=20)
+    pen = profile_miss_penalties(g, measured=False)
+    return g, spec, hot, pen
+
+
+def test_miss_penalty_shape_matches_paper(mag_setup):
+    """Paper Fig. 7: smaller dims ⇒ larger o_a; learnable > read-only at the
+    same dim."""
+    assert analytic_miss_penalty(7, False) > analytic_miss_penalty(789, False)
+    assert analytic_miss_penalty(128, True) > analytic_miss_penalty(128, False)
+
+
+def test_allocation_proportional_to_count_times_penalty(mag_setup):
+    g, spec, hot, pen = mag_setup
+    total = 1 << 20
+    alloc = allocate_cache(hot, pen, total, g.num_nodes)
+    # un-capped types get bytes ∝ count × o_a
+    scores = {t: hot.total(t) * pen.ratios[t] for t in g.num_nodes}
+    rb = {t: row_bytes(pen.dims[t], pen.learnable[t]) for t in g.num_nodes}
+    uncapped = [
+        t for t in g.num_nodes
+        if alloc.rows[t] < g.num_nodes[t] and scores[t] > 0
+    ]
+    if len(uncapped) >= 2:
+        a, b = uncapped[:2]
+        ratio_alloc = (alloc.bytes_[a] + rb[a]) / (alloc.bytes_[b] + rb[b])
+        ratio_score = scores[a] / scores[b]
+        assert ratio_alloc == pytest.approx(ratio_score, rel=0.35)
+
+
+def test_allocation_respects_budget_and_caps(mag_setup):
+    g, spec, hot, pen = mag_setup
+    total = 1 << 20
+    alloc = allocate_cache(hot, pen, total, g.num_nodes)
+    assert sum(alloc.bytes_.values()) <= total * 1.01
+    for t in g.num_nodes:
+        assert alloc.rows[t] <= g.num_nodes[t]
+
+
+def test_hotness_only_differs(mag_setup):
+    g, spec, hot, pen = mag_setup
+    a = allocate_cache(hot, pen, 1 << 20, g.num_nodes)
+    b = allocate_cache(hot, pen, 1 << 20, g.num_nodes, hotness_only=True)
+    assert a.rows != b.rows  # the ablation changes the split (paper Fig. 11)
+
+
+def test_cache_hit_rate_and_consistency(mag_setup):
+    g, spec, hot, pen = mag_setup
+    eng = EmbedEngine(g, 32, hot, pen, cache_bytes=1 << 18)
+    # hot nodes should hit; the engine snapshot must reflect cached writes
+    t = "author"
+    hot_ids = hot.hottest(t, 8)
+    eng.fetch(t, hot_ids)
+    assert eng.cache.hit_rates()[t] > 0.9
+    assert eng.cache.consistency_check()
+
+
+def test_sparse_update_through_cache_matches_dense_adam(mag_setup):
+    """Updating learnable rows through the cache must equal a dense Adam step
+    on the full table restricted to the touched rows."""
+    g, spec, hot, pen = mag_setup
+    dim = 16
+    adam = AdamConfig(lr=0.05)
+    eng = EmbedEngine(g, dim, hot, pen, cache_bytes=1 << 16, adam=adam)
+    t = "field_of_study"
+    table0 = eng.table(t).copy()
+
+    nids = np.array([1, 3, 3, 7])
+    grads = np.stack([np.full(dim, 1.0), np.full(dim, 2.0),
+                      np.full(dim, 2.0), np.full(dim, -1.0)]).astype(np.float32)
+    eng.apply_row_grads(t, nids, jnp.asarray(grads))
+    got = eng.table(t)
+
+    # dense oracle: grad rows summed into unique ids, adam on the full table
+    dense_g = np.zeros_like(table0)
+    np.add.at(dense_g, nids, grads)
+    params = {"w": jnp.asarray(table0)}
+    state = adam_init(params)
+    newp, _ = adam_update(adam, params, {"w": jnp.asarray(dense_g)}, state)
+    want = np.asarray(newp["w"])
+
+    touched = np.unique(nids)
+    np.testing.assert_allclose(got[touched], want[touched], atol=1e-5)
+    untouched = np.setdiff1d(np.arange(table0.shape[0]), touched)[:10]
+    np.testing.assert_array_equal(got[untouched], table0[untouched])
+
+
+def test_cache_write_hits_device_copy_not_host(mag_setup):
+    """Non-replicative invariant: writing a cached row must not touch the
+    host copy (single authoritative version, paper §6)."""
+    g, spec, hot, pen = mag_setup
+    eng = EmbedEngine(g, 8, hot, pen, cache_bytes=1 << 18)
+    t = "author"
+    c = eng.cache.caches[t]
+    nid = int(c.ids[0])  # definitely cached
+    host_before = eng.cache.host[t][nid].copy()
+    eng.apply_row_grads(t, np.array([nid]), jnp.ones((1, 8)))
+    assert np.array_equal(eng.cache.host[t][nid], host_before)  # host untouched
+    assert not np.array_equal(np.asarray(eng.table(t)[nid]), host_before)
+
+
+def test_varying_dims_profile():
+    g = donor_like(scale=0.001)
+    pen = profile_miss_penalties(g, measured=False)
+    # teacher (dim 7) must have a larger ratio than project (dim 789)
+    assert pen.ratios["teacher"] > pen.ratios["project"]

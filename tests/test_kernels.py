@@ -1,0 +1,143 @@
+"""Pallas kernel validation: shape/dtype sweeps against the jnp oracles
+(interpret mode on CPU; TPU is the target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.gather_rows import gather_rows, gather_rows_ref
+from repro.kernels.relation_agg import relation_agg, relation_agg_ref
+
+rng = np.random.default_rng(42)
+
+
+# --------------------------------------------------------------------------
+# relation_agg: fused masked-mean + projection
+# --------------------------------------------------------------------------
+
+AGG_SHAPES = [
+    (200, 25, 128, 64),   # ogbn-mag layer-1 (paper fanout 25, feat 128)
+    (64, 20, 64, 64),     # hidden layer (fanout 20, hidden 64)
+    (64, 4, 789, 64),     # donor's widest feature type
+    (128, 20, 64, 349),   # output classes
+    (5, 3, 7, 16),        # tiny/ragged — exercises padding
+    (256, 10, 1024, 64),  # IGB-HET feature dim
+]
+
+
+@pytest.mark.parametrize("n,f,di,do", AGG_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_relation_agg_sweep(n, f, di, do, dtype):
+    h = jnp.asarray(rng.standard_normal((n, f, di)), dtype)
+    m = jnp.asarray(rng.random((n, f)) > 0.3)
+    w = jnp.asarray(rng.standard_normal((di, do)) * 0.1, dtype)
+    b = jnp.asarray(rng.standard_normal(do) * 0.1, dtype)
+    out = relation_agg(h, m, w, b)
+    ref = relation_agg_ref(h, m, w, b)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_relation_agg_all_masked_rows():
+    h = jnp.asarray(rng.standard_normal((16, 5, 32)), jnp.float32)
+    m = jnp.zeros((16, 5), bool)
+    w = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    b = jnp.zeros(8, jnp.float32)
+    out = relation_agg(h, m, w, b)
+    np.testing.assert_allclose(np.asarray(out), np.zeros((16, 8)), atol=1e-6)
+
+
+@given(
+    n=st.integers(1, 64), f=st.integers(1, 8),
+    di=st.integers(1, 96), do=st.integers(1, 96),
+)
+@settings(max_examples=15, deadline=None)
+def test_relation_agg_property(n, f, di, do):
+    r = np.random.default_rng(n * 1000 + f * 100 + di)
+    h = jnp.asarray(r.standard_normal((n, f, di)), jnp.float32)
+    m = jnp.asarray(r.random((n, f)) > 0.5)
+    w = jnp.asarray(r.standard_normal((di, do)) * 0.1, jnp.float32)
+    b = jnp.asarray(r.standard_normal(do) * 0.1, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(relation_agg(h, m, w, b)),
+        np.asarray(relation_agg_ref(h, m, w, b)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+
+ATTN_CASES = [
+    dict(b=2, h=4, hk=2, sq=256, sk=256, d=64, causal=True, window=None, off=0),
+    dict(b=1, h=8, hk=8, sq=300, sk=300, d=64, causal=True, window=None, off=0),
+    dict(b=1, h=4, hk=4, sq=256, sk=256, d=128, causal=True, window=64, off=0),
+    dict(b=2, h=4, hk=2, sq=1, sk=512, d=64, causal=True, window=None, off=511),
+    dict(b=1, h=2, hk=2, sq=1, sk=1024, d=64, causal=True, window=256, off=1023),
+    dict(b=1, h=2, hk=2, sq=128, sk=128, d=64, causal=False, window=None, off=0),
+    dict(b=1, h=16, hk=16, sq=160, sk=160, d=80, causal=False, window=None, off=0),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_sweep(case):
+    c = case
+    q = jnp.asarray(rng.standard_normal((c["b"], c["h"], c["sq"], c["d"])), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((c["b"], c["hk"], c["sk"], c["d"])), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((c["b"], c["hk"], c["sk"], c["d"])), jnp.float32)
+    out = flash_attention(q, k, v, causal=c["causal"], window=c["window"], q_offset=c["off"])
+    ref = attention_ref(q, k, v, causal=c["causal"], window=c["window"], q_offset=c["off"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_flash_attention_window_equals_full_when_wide():
+    """A window ≥ sequence length must equal unwindowed causal attention."""
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 32)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, window=4096)
+    b = flash_attention(q, k, v, causal=True, window=None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# gather_rows
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,d,n", [(100, 128, 32), (1000, 64, 256), (37, 8, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_rows_sweep(rows, d, n, dtype):
+    tab = jnp.asarray(rng.standard_normal((rows, d)), dtype)
+    idx = jnp.asarray(rng.integers(0, rows, n))
+    np.testing.assert_array_equal(
+        np.asarray(gather_rows(tab, idx)), np.asarray(gather_rows_ref(tab, idx))
+    )
+
+
+@given(st.integers(1, 200), st.integers(1, 64), st.integers(1, 100))
+@settings(max_examples=15, deadline=None)
+def test_gather_rows_property(rows, d, n):
+    r = np.random.default_rng(rows + d + n)
+    tab = jnp.asarray(r.standard_normal((rows, d)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, rows, n))
+    np.testing.assert_array_equal(
+        np.asarray(gather_rows(tab, idx)), np.asarray(gather_rows_ref(tab, idx))
+    )

@@ -1,0 +1,157 @@
+"""Meta-partitioning (paper §5, Algorithm 2) + Prop 2/3 property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.meta_partition import (
+    boundary_nodes,
+    cross_edges,
+    greedy_edge_cut,
+    meta_partition,
+    random_edge_cut,
+)
+from repro.core.metatree import build_metatree, build_metatree_from_metapaths
+from repro.graph.hetgraph import CSR, HetGraph, Relation
+from repro.graph.synthetic import donor_like, freebase_like, ogbn_mag_like
+
+
+@pytest.fixture(scope="module")
+def mag():
+    return ogbn_mag_like(scale=0.002, seed=0)
+
+
+def test_metatree_matches_paper_figure(mag):
+    """ogbn-mag's 2-hop metatree has 3 root children (writes, rev_has_topic,
+    cites) — paper Fig. 6 Step 1."""
+    tree = build_metatree(mag.metagraph(), "paper", 2)
+    etypes = sorted(c.rel.etype for c in tree.children)
+    assert etypes == ["cites", "rev_has_topic", "writes"]
+    assert tree.max_depth() == 2
+
+
+def test_metatree_from_metapaths(mag):
+    meta = mag.metagraph()
+    pap = Relation("author", "writes", "paper")
+    aui = Relation("institution", "rev_affiliated_with", "author")
+    tree = build_metatree_from_metapaths(meta, "paper", [[pap, aui], [pap]])
+    assert len(tree.children) == 1  # shared prefix merged
+    assert tree.children[0].children[0].rel == aui
+
+
+def test_partitions_all_contain_target_nodes(mag):
+    """§5 Step 2: every partition holds ALL target nodes, confining boundary
+    nodes to the target type."""
+    mp = meta_partition(mag, 2, num_layers=2)
+    for p in mp.partitions:
+        assert "paper" in p.graph.num_nodes
+        assert p.graph.num_nodes["paper"] == mag.num_nodes["paper"]
+    assert mp.max_boundary_nodes() == mag.num_nodes["paper"]
+
+
+def test_partitions_cover_metatree_relations(mag):
+    mp = meta_partition(mag, 2, num_layers=2)
+    tree_rels = set(build_metatree(mag.metagraph(), "paper", 2).relations())
+    part_rels = set()
+    for p in mp.partitions:
+        part_rels.update(p.relations)
+    assert part_rels == tree_rels
+
+
+def test_partition_subgraphs_are_complete_mono_relation(mag):
+    """§5 Step 4: each partition materializes COMPLETE mono-relation
+    subgraphs (same edge counts as the full graph)."""
+    mp = meta_partition(mag, 2, num_layers=2)
+    for p in mp.partitions:
+        for rel in p.relations:
+            assert p.graph.relations[rel].num_edges == mag.relations[rel].num_edges
+
+
+def test_dedup_within_partition(mag):
+    mp = meta_partition(mag, 1, num_layers=2)
+    rels = mp.partitions[0].relations
+    assert len(rels) == len(set(rels))
+
+
+def test_lpt_balance(mag):
+    """LPT assignment: max load ≤ 2× min load on this schema (greedy bound)."""
+    mp = meta_partition(mag, 2, num_layers=2)
+    weights = [p.weight for p in mp.partitions]
+    assert max(weights) <= 2 * max(min(weights), 1)
+
+
+def test_replication_when_more_partitions_than_subtrees(mag):
+    mp = meta_partition(mag, 8, num_layers=2)
+    assert mp.replicated
+    assert len(mp.partitions) == 8
+    # replicas share a replica_group
+    groups = {}
+    for p in mp.partitions:
+        groups.setdefault(p.replica_group, []).append(p.index)
+    assert any(len(v) > 1 for v in groups.values())
+
+
+def test_meta_partitioning_is_metagraph_sized(mag):
+    """Complexity claim: partitioning time must not scale with graph size —
+    it runs on the metagraph (paper Table 2: 20.6 min vs hours)."""
+    mp = meta_partition(mag, 2, num_layers=2, materialize=False)
+    assert mp.elapsed_s < 0.5  # milliseconds in practice
+
+
+def test_works_on_all_schemas():
+    for g in (freebase_like(scale=0.0005), donor_like(scale=0.001)):
+        mp = meta_partition(g, 4, num_layers=2)
+        assert len(mp.partitions) == 4
+        total = set()
+        for p in mp.partitions:
+            total.update(p.relations)
+        assert total  # non-empty coverage
+
+
+# --------------------------------------------------------------------------
+# Prop 3: max boundary nodes ≤ cross-partition edges (property-based)
+# --------------------------------------------------------------------------
+
+
+@st.composite
+def _random_hetg(draw):
+    n_types = draw(st.integers(2, 4))
+    types = [f"t{i}" for i in range(n_types)]
+    num_nodes = {t: draw(st.integers(4, 40)) for t in types}
+    n_rels = draw(st.integers(1, 5))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    relations = {}
+    for i in range(n_rels):
+        src = draw(st.sampled_from(types))
+        dst = draw(st.sampled_from(types))
+        ne = draw(st.integers(1, 120))
+        s = rng.integers(0, num_nodes[src], ne)
+        d = rng.integers(0, num_nodes[dst], ne)
+        relations[Relation(src, f"e{i}", dst)] = CSR.from_edges(s, d, num_nodes[dst])
+    # ensure the target type has at least one in-relation
+    tgt = next(iter(relations)).dst
+    return HetGraph(
+        num_nodes=num_nodes, relations=relations, target_type=tgt, num_classes=2
+    )
+
+
+@given(_random_hetg(), st.integers(2, 4), st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_prop3_boundary_leq_cross_edges(graph, p, seed):
+    cut = random_edge_cut(graph, p, seed=seed)
+    b = boundary_nodes(graph, cut)
+    e = cross_edges(graph, cut)
+    # Prop 3: max_i |B(G_i)| ≤ E(cross) — each cross edge contributes at most
+    # one boundary node to each partition
+    assert max(b) <= e if e else max(b) == 0
+
+
+@given(_random_hetg(), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_greedy_cut_no_worse_than_random_on_avg(graph, seed):
+    """LDG-style greedy should not exceed random cut size by much (sanity of
+    the METIS stand-in)."""
+    rc = cross_edges(graph, random_edge_cut(graph, 2, seed))
+    gc = cross_edges(graph, greedy_edge_cut(graph, 2, seed))
+    total = sum(c.num_edges for c in graph.relations.values())
+    assert gc <= max(rc, int(0.9 * total) + 1)
