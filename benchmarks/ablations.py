@@ -3,33 +3,37 @@
 All three reduce to the same quantity the paper varies: per-batch
 communication volume under each execution model.  Heta's is Θ(B·hidden) —
 independent of partition count, fanout and hops (meta-partitioning confines
-boundary nodes to targets); the vanilla model's grows with all of them."""
+boundary nodes to targets); the vanilla model's grows with all of them.
+Each point is one ``Heta`` session driven to the partition stage; bytes come
+from ``PartitionReport.raf_bytes`` / ``session.comm_report``."""
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks._util import emit
-from repro.core.comm import vanilla_comm_bytes
-from repro.core.meta_partition import meta_partition, random_edge_cut
-from repro.core.raf import assign_branches, raf_comm_bytes
-from repro.graph.sampler import NeighborSampler, SampleSpec
-from repro.graph.synthetic import igb_het_like, ogbn_mag_like
+from repro.api import DataConfig, Heta, HetaConfig, PartitionConfig
+
+
+def _partitioned(dataset: str, scale: float, fanouts, batch: int, parts: int = 2,
+                 graph=None):
+    """One session driven to the partition stage; pass ``graph`` to reuse a
+    built HetG across sweep points instead of re-synthesizing it."""
+    sess = Heta(HetaConfig(
+        data=DataConfig(dataset=dataset, scale=scale, fanouts=fanouts,
+                        batch_size=batch),
+        partition=PartitionConfig(num_partitions=parts),
+    ))
+    sess.build_graph(graph=graph)
+    return sess, sess.partition()
 
 
 def hidden_dim(batch: int = 1024):
     """Fig. 13: Heta comm grows linearly in hidden; stays far below feature
     fetching until hidden ≈ feature dims."""
-    g = ogbn_mag_like(scale=0.01)
-    mp = meta_partition(g, 2, num_layers=2)
-    spec = SampleSpec.from_metatree(mp.metatree, (25, 20))
-    b = NeighborSampler(g, spec, batch, seed=0).sample_batch(g.train_nodes[:batch])
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
-    v = vanilla_comm_bytes(b, random_edge_cut(g, 2), feat_dims, bytes_per_elem=2)
-    assign = assign_branches(spec, mp)
+    sess, part = _partitioned("ogbn-mag", 0.01, (25, 20), batch)
+    v = sess.comm_report(bytes_per_elem=2)["vanilla_feat"]
     out = {}
     for h in (64, 128, 256, 512, 1024):
-        m = raf_comm_bytes(spec, assign, batch, h, 2)
+        m = part.raf_bytes(batch, h, 2)
         out[h] = m
         emit(f"ablation/hidden{h}/heta_MB", 0.0,
              f"{m/1e6:.2f}MB vs vanilla {v/1e6:.1f}MB ({v/m:.0f}x)")
@@ -40,31 +44,29 @@ def hidden_dim(batch: int = 1024):
 def scalability():
     """Fig. 14: Heta's comm per step is constant in the number of partitions
     (boundary = target nodes); vanilla's remote-feature share grows."""
-    g = ogbn_mag_like(scale=0.01)
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
     batch = 1024
+    g = None
     for p in (2, 3, 4):
-        mp = meta_partition(g, p, num_layers=2)
-        spec = SampleSpec.from_metatree(mp.metatree, (25, 20))
-        b = NeighborSampler(g, spec, batch, seed=0).sample_batch(g.train_nodes[:batch])
-        heta_per_worker = raf_comm_bytes(spec, assign_branches(spec, mp), batch, 64, 2) / p
-        v = vanilla_comm_bytes(b, random_edge_cut(g, p), feat_dims, bytes_per_elem=2) / p
+        sess, part = _partitioned("ogbn-mag", 0.01, (25, 20), batch, parts=p,
+                                  graph=g)
+        g = sess.graph  # build once, repartition per sweep point
+        comm = sess.comm_report(bytes_per_elem=2)
+        heta_per_worker = comm["raf_meta"] / p
+        v = comm["vanilla_feat"] / p
         emit(f"ablation/parts{p}/per_worker_MB", 0.0,
              f"heta={heta_per_worker/1e6:.3f}MB vanilla={v/1e6:.2f}MB")
 
 
 def fanout():
     """Fig. 15: larger fanouts / more hops grow vanilla comm; Heta constant."""
-    g = igb_het_like(scale=0.0005)
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
     batch = 256
     prev_v = 0
+    g = None
     for fanouts in ((10, 10), (25, 20), (25, 20, 20)):
-        mp = meta_partition(g, 2, num_layers=len(fanouts))
-        spec = SampleSpec.from_metatree(mp.metatree, fanouts)
-        b = NeighborSampler(g, spec, batch, seed=0).sample_batch(g.train_nodes[:batch])
-        h = raf_comm_bytes(spec, assign_branches(spec, mp), batch, 64, 2)
-        v = vanilla_comm_bytes(b, random_edge_cut(g, 2), feat_dims, bytes_per_elem=2)
+        sess, part = _partitioned("igb-het", 0.0005, fanouts, batch, graph=g)
+        g = sess.graph  # build once, re-spec per fanout
+        comm = sess.comm_report(bytes_per_elem=2)
+        h, v = comm["raf_meta"], comm["vanilla_feat"]
         emit(f"ablation/fanout{'x'.join(map(str, fanouts))}", 0.0,
              f"heta={h/1e6:.3f}MB vanilla={v/1e6:.1f}MB ({v/max(h,1):.0f}x)")
         assert h == 2 * batch * 64 * 2  # constant: Θ(B·hidden), fanout-free

@@ -20,7 +20,7 @@ from repro.core.raf import assign_branches
 from repro.embed import EmbedEngine, presample_hotness, profile_miss_penalties
 from repro.graph.sampler import NeighborSampler, SampleSpec
 from repro.graph.synthetic import ogbn_mag_like
-from repro.launch.train import _apply_feature_grads
+from repro.api.executors import _apply_feature_grads
 from repro.optim.adam import AdamConfig, adam_init
 
 import jax
@@ -49,7 +49,6 @@ def run(scale: float = 0.002, batch: int = 32, fanouts=(5, 4), steps: int = 4):
     stages = {"sample": 0.0, "fetch": 0.0, "step": 0.0, "update": 0.0}
     cut = random_edge_cut(g, 2)
     v_fetch = v_upd = 0.0
-    learnable = set(engine.learnable_types)
     it = sampler.epoch()
     for i in range(steps):
         t0 = time.perf_counter()
@@ -67,7 +66,7 @@ def run(scale: float = 0.002, batch: int = 32, fanouts=(5, 4), steps: int = 4):
         stages["step"] += time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        _apply_feature_grads(engine, plan, b, gf, learnable)
+        _apply_feature_grads(engine, plan, b, gf)
         stages["update"] += time.perf_counter() - t0
 
         v_fetch += net_time(vanilla_comm_bytes(b, cut, feat_dims, bytes_per_elem=2), 16)

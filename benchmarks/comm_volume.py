@@ -4,40 +4,30 @@ Setting mirrors the paper: 2-layer R-GCN, hidden 64, fanout {25, 20}, batch
 1024 training nodes, fp16 payloads, 2 partitions, MAG240M-like schema (paper
 feature dim 768, learnable dim 64).  The paper reports 92.3 MB (vanilla
 feature fetching) → 8.0 MB (RAF, naive relation placement) → 0.5 MB
-(RAF + meta-partitioning).  Bytes here are counted exactly from a sampled
-batch and the partition assignment — same accounting as the paper.
-"""
+(RAF + meta-partitioning).  Bytes are counted exactly by the session's
+``comm_report`` stage — same accounting as the paper."""
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks._util import emit, net_time
-from repro.core.comm import vanilla_comm_bytes, vanilla_update_bytes
-from repro.core.meta_partition import meta_partition, random_edge_cut
-from repro.core.raf import assign_branches, raf_comm_bytes, random_branch_assignment
-from repro.graph.sampler import NeighborSampler, SampleSpec
-from repro.graph.synthetic import mag240m_like
+from repro.api import DataConfig, Heta, HetaConfig, ModelConfig, PartitionConfig, RunConfig
 
 
 def run(scale: float = 0.0005, batch: int = 1024, hidden: int = 64,
         fanouts=(25, 20), seed: int = 0):
-    g = mag240m_like(scale=scale, seed=seed)
-    mp = meta_partition(g, 2, num_layers=len(fanouts))
-    spec = SampleSpec.from_metatree(mp.metatree, fanouts)
-    sampler = NeighborSampler(g, spec, batch, seed=seed)
-    b = sampler.sample_batch(g.train_nodes[:batch])
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
+    sess = Heta(HetaConfig(
+        data=DataConfig(dataset="mag240m", scale=scale, fanouts=fanouts,
+                        batch_size=batch),
+        partition=PartitionConfig(num_partitions=2),
+        model=ModelConfig(hidden=hidden, learnable_dim=64),
+        run=RunConfig(seed=seed),
+    ))
+    sess.build_graph()
+    sess.partition()
+    comm = sess.comm_report(bytes_per_elem=2)
 
-    cut = random_edge_cut(g, 2, seed=seed)
-    v_feat = vanilla_comm_bytes(b, cut, feat_dims, learnable_dim=64, bytes_per_elem=2)
-    v_upd = vanilla_update_bytes(b, cut, g, learnable_dim=64, bytes_per_elem=2)
-    vanilla = v_feat + v_upd
-
-    naive = raf_comm_bytes(
-        spec, random_branch_assignment(spec, 2, seed=seed + 1), batch, hidden, 2
-    )
-    meta = raf_comm_bytes(spec, assign_branches(spec, mp), batch, hidden, 2)
+    vanilla = comm["vanilla_feat"] + comm["vanilla_update"]
+    naive, meta = comm["raf_naive"], comm["raf_meta"]
 
     emit("comm_volume/vanilla_MB", net_time(vanilla) * 1e6,
          f"{vanilla/1e6:.1f}MB (paper: 92.3MB at full scale)")

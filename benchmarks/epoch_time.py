@@ -5,6 +5,11 @@ Two readings:
   * measured — actual per-step wall time of the SPMD executor on this CPU
     host for Heta (meta placement) vs the naive-placement ablation (the
     communication difference shows up as extra work in the inner psum).
+    Driven through the session API with a fixed batch and learnable-feature
+    training frozen (``ModelConfig(train_learnable=False)``), so the timed
+    region is the jitted device step alone — the same quantity the
+    pre-session-API benchmark measured (host staging and the cache's sparse
+    write-back are measured separately in breakdown.py).
   * projected — the α-β model over exact per-batch byte counts at the
     paper's testbed constants (100 Gbps, PCIe3), giving the epoch-time
     split the paper measures on 2×g4dn.metal.  Heta's speedup there comes
@@ -15,77 +20,53 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks._util import dram_random_time, emit, net_time, pcie_time
-from repro.core.comm import vanilla_comm_bytes, vanilla_update_bytes
-from repro.core.meta_partition import meta_partition, random_edge_cut
-from repro.core.raf import assign_branches, raf_comm_bytes, random_branch_assignment
-from repro.graph.sampler import NeighborSampler, SampleSpec
-from repro.graph.synthetic import make_dataset
-from repro.launch.train import train_hgnn
+from benchmarks._util import dram_random_time, emit, net_time
+from repro.api import (
+    CacheConfig, DataConfig, Heta, HetaConfig, ModelConfig, PartitionConfig,
+    RunConfig,
+)
 
 
 def projected_epoch(dataset: str, scale, batch: int, fanouts, hidden: int = 64):
     """α-β projection of one epoch's comm/update time, vanilla vs Heta."""
-    g = make_dataset(dataset, scale=scale)
-    mp = meta_partition(g, 2, num_layers=len(fanouts))
-    spec = SampleSpec.from_metatree(mp.metatree, fanouts)
-    sampler = NeighborSampler(g, spec, batch, seed=0)
-    b = sampler.sample_batch(g.train_nodes[:batch])
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
-    cut = random_edge_cut(g, 2)
+    sess = Heta(HetaConfig(
+        data=DataConfig(dataset=dataset, scale=scale, fanouts=fanouts,
+                        batch_size=batch),
+        partition=PartitionConfig(num_partitions=2),
+        model=ModelConfig(hidden=hidden),
+    ))
+    g = sess.build_graph()
+    sess.partition()
+    comm = sess.comm_report(bytes_per_elem=2)
     steps = max(1, len(g.train_nodes) // batch)
 
-    v_bytes = vanilla_comm_bytes(b, cut, feat_dims, bytes_per_elem=2)
-    v_upd = vanilla_update_bytes(b, cut, g, bytes_per_elem=2)
-    h_bytes = raf_comm_bytes(spec, assign_branches(spec, mp), batch, hidden, 2)
-    t_vanilla = steps * (net_time(v_bytes, 64) + net_time(v_upd, 16)
-                         + dram_random_time(v_upd))
-    t_heta = steps * net_time(h_bytes, 4)
+    t_vanilla = steps * (net_time(comm["vanilla_feat"], 64)
+                         + net_time(comm["vanilla_update"], 16)
+                         + dram_random_time(comm["vanilla_update"]))
+    t_heta = steps * net_time(comm["raf_meta"], 4)
     return t_vanilla, t_heta, steps
 
 
 def _measured_step(model: str, local: bool) -> float:
-    """Warm, fixed-batch step time of the SPMD executor (device compute only;
-    the host pipeline stages are measured separately in breakdown.py)."""
-    import time
-
-    import jax
-
-    from repro.core import raf_spmd
-    from repro.core.hgnn import HGNNConfig, init_embed_tables, init_hgnn_params
-    from repro.core.raf import assign_branches, random_branch_assignment
-    from repro.optim.adam import AdamConfig, adam_init
-
-    g = make_dataset("ogbn-mag", scale=0.002)
-    mp = meta_partition(g, 2, num_layers=2)
-    spec = SampleSpec.from_metatree(mp.metatree, (5, 4))
-    batch = NeighborSampler(g, spec, 32, seed=1).sample_batch(g.train_nodes[:32])
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
-    cfg = HGNNConfig(model=model, hidden=64, num_layers=2,
-                     num_classes=g.num_classes)
-    params = init_hgnn_params(jax.random.PRNGKey(0), cfg, spec, feat_dims)
-    emb = init_embed_tables(jax.random.PRNGKey(1), cfg, g.num_nodes, feat_dims)
-    tables = {t: np.asarray(f) for t, f in g.features.items()}
-    tables.update({t: np.asarray(v) for t, v in emb.items()})
-    assignment = (
-        assign_branches(spec, mp) if local
-        else random_branch_assignment(spec, 2, seed=0)
-    ).fold(1, spec)
-    plan = raf_spmd.build_plan(spec, assignment, cfg, feat_dims)
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
-    stacks = raf_spmd.shard_stacks(
-        plan, mesh, raf_spmd.stack_params_from_dict(plan, params))
-    arrays = raf_spmd.shard_arrays(plan, mesh, raf_spmd.stack_batch(plan, batch, tables))
-    step = raf_spmd.make_train_step(plan, mesh, AdamConfig(), data_axes=("data",),
-                                    local_combine=local)
-    opt = adam_init(stacks)
-    ts = []
-    for i in range(6):
-        t0 = time.perf_counter()
-        stacks, opt, loss = step(stacks, opt, arrays)
-        jax.block_until_ready(loss)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts[2:]))
+    """Warm, fixed-batch device step time of the SPMD executor through the
+    session (learnable features frozen: device compute only, as before)."""
+    sess = Heta(HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(5, 4),
+                        batch_size=32),
+        partition=PartitionConfig(num_partitions=2,
+                                  placement="meta" if local else "naive"),
+        model=ModelConfig(model=model, hidden=64, train_learnable=False),
+        cache=CacheConfig(cache_mb=2),
+        run=RunConfig(executor="raf_spmd", mesh_shape=(1, 1), seed=1),
+    ))
+    g = sess.build_graph()
+    sess.partition()
+    sess.profile_and_cache()
+    sess.compile()
+    batch = sess.sampler.sample_batch(g.train_nodes[:32])
+    for _ in range(6):
+        sess.step(batch)
+    return float(np.median(sess.step_times[2:]))
 
 
 def run():

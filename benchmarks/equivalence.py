@@ -1,82 +1,36 @@
 """Paper Fig. 16 — accuracy equivalence: RAF trains the *same model* as the
 vanilla execution (Prop 1 end-to-end).
 
-Both executors start from identical parameters, share one logical copy of
-the learnable features and classifier head (as Alg. 1 places them), and see
-identical batches; the loss curves must match to float tolerance
-step-for-step (the paper shows overlapping accuracy curves — here the check
-is exact, not statistical)."""
+Both executors are driven through the uniform registry protocol
+(``repro.api.executors``): one base config, ``with_executor()`` swaps the
+execution model, and the two sessions see identical seeds — hence identical
+initial parameters, learnable tables and batch sequences.  The loss curves
+must match to float tolerance step-for-step (the paper shows overlapping
+accuracy curves — here the check is exact, not statistical)."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from benchmarks._util import emit
-from repro.core.hgnn import (
-    HGNNConfig, batch_to_arrays, hgnn_loss, init_embed_tables, init_hgnn_params,
-)
-from repro.core.meta_partition import meta_partition
-from repro.core.raf import assign_branches, raf_loss
-from repro.graph.sampler import NeighborSampler, SampleSpec
-from repro.graph.synthetic import ogbn_mag_like
-from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.api import DataConfig, Heta, HetaConfig, ModelConfig, PartitionConfig, RunConfig
+
+EXECUTORS = ("vanilla", "raf")
 
 
 def run(steps: int = 8, model: str = "rgcn"):
-    g = ogbn_mag_like(scale=0.002)
-    mp = meta_partition(g, 2, num_layers=2)
-    spec = SampleSpec.from_metatree(mp.metatree, (4, 3))
-    sampler = NeighborSampler(g, spec, 32, seed=0)
-    cfg = HGNNConfig(model=model, hidden=32, num_layers=2, num_classes=g.num_classes)
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
-    tables = {t: jnp.asarray(f) for t, f in g.features.items()}
-    assignment = assign_branches(spec, mp)
-
-    key = jax.random.PRNGKey(0)
-    full = init_hgnn_params(key, cfg, spec, feat_dims)
-    embed = init_embed_tables(jax.random.PRNGKey(1), cfg, g.num_nodes, feat_dims)
-    head = full["head"]
-
-    # one logical copy of shared leaves in both executors
-    bundle_v = {"rel": full["rel"], "ntype": full["ntype"], "etype": full["etype"],
-                "embed": embed, "head": head}
-    rel_parts = [
-        {k: init_hgnn_params(key, cfg, spec, feat_dims,
-                             restrict_rels=assignment.relations_of(p, spec))[k]
-         for k in ("rel", "ntype", "etype")}
-        for p in range(2)
-    ]
-    bundle_r = {"parts": rel_parts, "embed": embed, "head": head}
-
-    def vanilla_loss(bundle, a):
-        return hgnn_loss(cfg, bundle, tables, a, spec)
-
-    def raf_loss2(bundle, a):
-        parts = [
-            {**bundle["parts"][p], "embed": bundle["embed"], "head": bundle["head"]}
-            for p in range(2)
-        ]
-        return raf_loss(cfg, parts, tables, a, spec, assignment)
-
-    adam = AdamConfig(lr=1e-2)
-    st_v = adam_init(bundle_v)
-    st_r = adam_init(bundle_r)
-    vgrad = jax.jit(jax.value_and_grad(vanilla_loss))
-    rgrad = jax.jit(jax.value_and_grad(raf_loss2))
+    base = HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(4, 3),
+                        batch_size=32),
+        partition=PartitionConfig(num_partitions=2),
+        model=ModelConfig(model=model, hidden=32),
+        run=RunConfig(steps=steps, lr=1e-2, seed=0),
+    )
+    losses = {ex: Heta(base.with_executor(ex)).run()["losses"] for ex in EXECUTORS}
 
     max_diff = 0.0
-    it = sampler.epoch(shuffle=True, seed=7)
     for i in range(steps):
-        b = batch_to_arrays(next(it))
-        lv, gv = vgrad(bundle_v, b)
-        bundle_v, st_v = adam_update(adam, bundle_v, gv, st_v)
-        lr_, gr = rgrad(bundle_r, b)
-        bundle_r, st_r = adam_update(adam, bundle_r, gr, st_r)
-        max_diff = max(max_diff, abs(float(lv) - float(lr_)))
-        emit(f"equivalence/step{i}", 0.0,
-             f"vanilla={float(lv):.6f} raf={float(lr_):.6f}")
+        lv, lr_ = losses["vanilla"][i], losses["raf"][i]
+        max_diff = max(max_diff, abs(lv - lr_))
+        emit(f"equivalence/step{i}", 0.0, f"vanilla={lv:.6f} raf={lr_:.6f}")
     emit("equivalence/max_loss_diff", 0.0, f"{max_diff:.2e} (Prop 1, trained)")
     assert max_diff < 5e-4, max_diff
     return max_diff

@@ -6,30 +6,34 @@ ablation baselines the paper isolates —
   * ``hotness-only`` cache (GNNLab/GraphLearn-style allocation);
   * full Heta: meta-partitioning + miss-penalty cache.
 
-Prints measured step time, exact per-batch comm bytes and cache hit rates.
+All three are one HetaConfig apart — placement / cache policy are config
+strings, the executor protocol is shared.  Prints measured step time and
+cache hit rates.
 
 Run:  PYTHONPATH=src python examples/compare_baselines.py
 """
 
-import numpy as np
+from repro.api import Heta, HetaConfig, DataConfig, ModelConfig, PartitionConfig, RunConfig
 
-from repro.launch.train import train_hgnn
+BASE = HetaConfig(
+    data=DataConfig(dataset="ogbn-mag", scale=0.005, fanouts=(10, 10), batch_size=64),
+    partition=PartitionConfig(num_partitions=2),
+    model=ModelConfig(model="rgcn"),
+    run=RunConfig(executor="raf_spmd", steps=6),
+)
 
 CONFIGS = [
-    ("vanilla-like", dict(naive_placement=True, cache_mb=0)),
-    ("hotness-cache", dict(hotness_only=True)),
-    ("heta", dict()),
+    ("vanilla-like", BASE.updated(partition=dict(placement="naive"),
+                                  cache=dict(cache_mb=0))),
+    ("hotness-cache", BASE.updated(cache=dict(cache_mb=8, policy="hotness"))),
+    ("heta", BASE.updated(cache=dict(cache_mb=8))),
 ]
 
 
 def main():
     print(f"{'config':<16} {'step ms':>9} {'meta-local':>10}  hit rates")
-    for name, kw in CONFIGS:
-        m = train_hgnn(
-            dataset="ogbn-mag", scale=0.005, model="rgcn", num_partitions=2,
-            batch_size=64, fanouts=(10, 10), steps=6, cache_mb=kw.pop("cache_mb", 8),
-            **kw,
-        )
+    for name, cfg in CONFIGS:
+        m = Heta(cfg).run()
         hits = {t: round(r, 2) for t, r in m["hit_rates"].items()}
         print(f"{name:<16} {m['step_time_s']*1e3:9.1f} "
               f"{str(m['meta_local']):>10}  {hits}")

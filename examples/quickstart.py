@@ -1,54 +1,59 @@
-"""Quickstart: the Heta pipeline end-to-end on a laptop-sized HetG.
+"""Quickstart: the Heta pipeline end-to-end on a laptop-sized HetG,
+stage by stage through the :class:`repro.api.Heta` session.
 
 Builds an ogbn-mag-like heterogeneous graph, meta-partitions it (paper §5),
 shows the metatree and the communication-volume comparison against the
-vanilla execution model (§4), then trains a 2-layer R-GCN with the RAF
-executor and the miss-penalty cache (§6).
+vanilla execution model (§4), allocates the miss-penalty cache (§6), then
+trains a 2-layer R-GCN with the SPMD RAF executor.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+(or after `pip install -e .`:  python examples/quickstart.py)
 """
 
-import numpy as np
-
-from repro.core.comm import vanilla_comm_bytes
-from repro.core.meta_partition import meta_partition, random_edge_cut
-from repro.core.raf import assign_branches, raf_comm_bytes
-from repro.graph.sampler import NeighborSampler, SampleSpec
-from repro.graph.synthetic import ogbn_mag_like
-from repro.launch.train import train_hgnn
+from repro.api import CacheConfig, DataConfig, Heta, HetaConfig, PartitionConfig, RunConfig
 
 
 def main():
-    g = ogbn_mag_like(scale=0.01)
+    cfg = HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=0.01, fanouts=(10, 10),
+                        batch_size=64),
+        partition=PartitionConfig(num_partitions=2),
+        cache=CacheConfig(cache_mb=8),
+        run=RunConfig(executor="raf_spmd", steps=10, log_every=2),
+    )
+    sess = Heta(cfg)
+
+    # --- stage 1: the graph ------------------------------------------------
+    g = sess.build_graph()
     print(f"graph: {g.name}  nodes={g.total_nodes:,}  edges={g.total_edges:,}")
     print(f"node types: {g.node_types}  target: {g.target_type!r}\n")
 
-    # --- §5 meta-partitioning --------------------------------------------
-    mp = meta_partition(g, num_partitions=2, num_layers=2)
+    # --- stage 2: §5 meta-partitioning --------------------------------------
+    part = sess.partition()
     print("metatree (HGNN computation dependency):")
-    print(mp.metatree.render())
+    print(part.metatree.render())
     print()
-    print(mp.summary(), "\n")
+    print(part.summary, "\n")
 
-    # --- §4 communication comparison --------------------------------------
-    spec = SampleSpec.from_metatree(mp.metatree, (25, 20))
-    batch = NeighborSampler(g, spec, 1024, seed=0).sample_batch(
-        g.train_nodes[:1024]
-    )
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
-    vanilla = vanilla_comm_bytes(batch, random_edge_cut(g, 2), feat_dims,
-                                 bytes_per_elem=2)
-    heta = raf_comm_bytes(spec, assign_branches(spec, mp), 1024, 64, 2)
-    print(f"per-batch communication (batch=1024, fanout 25x20, fp16):")
+    # --- §4 communication comparison (inspectable before training) ----------
+    comm = sess.comm_report(bytes_per_elem=2)
+    vanilla = comm["vanilla_feat"]
+    heta = comm["raf_meta"]
+    print(f"per-batch communication (batch={cfg.data.batch_size}, "
+          f"fanout {'x'.join(map(str, cfg.data.fanouts))}, fp16):")
     print(f"  vanilla feature fetching : {vanilla/1e6:8.2f} MB")
+    print(f"  RAF, naive placement     : {comm['raf_naive']/1e6:8.2f} MB")
     print(f"  Heta RAF + meta-partition: {heta/1e6:8.2f} MB"
           f"   ({vanilla/max(heta,1):.0f}x less)\n")
 
-    # --- train -------------------------------------------------------------
-    print("training R-GCN with the RAF executor (10 steps)...")
-    m = train_hgnn(dataset="ogbn-mag", scale=0.01, model="rgcn",
-                   num_partitions=2, batch_size=64, fanouts=(10, 10),
-                   steps=10, cache_mb=8, log_every=2)
+    # --- stage 3: §6 cache ---------------------------------------------------
+    cache = sess.profile_and_cache()
+    print(f"cache rows per type: {cache.allocation_rows}\n")
+
+    # --- stages 4+5: compile + train ----------------------------------------
+    print(f"training R-GCN with the {cfg.run.executor!r} executor "
+          f"({cfg.run.steps} steps)...")
+    m = sess.compile().fit()
     print(f"\ncache hit rates: "
           f"{ {k: round(v, 2) for k, v in m['hit_rates'].items()} }")
     print(f"median step time: {m['step_time_s']*1e3:.1f} ms")

@@ -14,8 +14,10 @@ import time
 
 import numpy as np
 
-from repro.graph.synthetic import freebase_like
-from repro.launch.train import train_hgnn
+from repro.api import (
+    CacheConfig, DataConfig, Heta, HetaConfig, ModelConfig, PartitionConfig,
+    RunConfig,
+)
 
 
 def main():
@@ -24,7 +26,16 @@ def main():
     ap.add_argument("--batch-size", type=int, default=128)
     args = ap.parse_args()
 
-    g = freebase_like(scale=0.001)
+    sess = Heta(HetaConfig(
+        data=DataConfig(dataset="freebase", scale=0.001, fanouts=(10, 5),
+                        batch_size=args.batch_size),
+        partition=PartitionConfig(num_partitions=4),
+        model=ModelConfig(model="rgat", hidden=64),
+        cache=CacheConfig(cache_mb=32),
+        run=RunConfig(executor="raf_spmd", steps=args.steps, log_every=10),
+    ))
+
+    g = sess.build_graph()
     learnable_rows = sum(g.num_nodes.values())
     print(f"graph: {g.total_nodes:,} nodes / {g.total_edges:,} edges, "
           f"{len(g.relations)} relations")
@@ -32,11 +43,7 @@ def main():
           f"(+ Adam states ×2)\n")
 
     t0 = time.time()
-    m = train_hgnn(
-        dataset="freebase", scale=0.001, model="rgat",
-        num_partitions=4, batch_size=args.batch_size, fanouts=(10, 5),
-        hidden=64, steps=args.steps, cache_mb=32, log_every=10,
-    )
+    m = sess.run()
     dt = time.time() - t0
     losses = m["losses"]
     k = max(1, len(losses) // 10)

@@ -1,0 +1,352 @@
+"""HetaConfig — the typed, validated configuration tree of the public API.
+
+One config object describes a complete Heta run.  It composes five section
+dataclasses mirroring the pipeline stages:
+
+  * :class:`DataConfig`      — dataset, scale, fanouts, batch size
+  * :class:`PartitionConfig` — partition count + relation placement policy
+  * :class:`ModelConfig`     — HGNN architecture (wraps ``HGNNConfig``)
+  * :class:`CacheConfig`     — miss-penalty cache budget + profiling knobs
+  * :class:`RunConfig`       — executor, mesh, steps, lr, seed
+
+Three interchange formats round-trip losslessly:
+
+  * nested dicts          — ``to_dict()`` / ``from_dict()`` (JSON-friendly)
+  * the legacy kwargs blob — ``from_flat_kwargs()`` / ``to_flat_kwargs()``
+    (the historical ``train_hgnn(...)`` surface)
+  * CLI flags             — ``add_config_args(parser)`` /
+    ``config_from_args(args)``; ``python -m repro.launch.train`` flags are
+    *derived* from the dataclass fields below, not duplicated by hand.
+
+This module is deliberately jax-free so CLI/arg handling stays cheap.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+__all__ = [
+    "DataConfig",
+    "PartitionConfig",
+    "ModelConfig",
+    "CacheConfig",
+    "RunConfig",
+    "HetaConfig",
+    "add_config_args",
+    "config_from_args",
+]
+
+PLACEMENTS = ("meta", "naive")
+CACHE_POLICIES = ("miss_penalty", "hotness")
+HGNN_MODELS = ("rgcn", "rgat", "hgt")
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    """What to train on and how to sample it."""
+
+    dataset: str = "ogbn-mag"
+    scale: Optional[float] = None  # None = the dataset's default scale
+    fanouts: Tuple[int, ...] = (4, 3)  # per-hop fanouts; len == num HGNN layers
+    batch_size: int = 32
+
+    def __post_init__(self):
+        object.__setattr__(self, "fanouts", tuple(int(f) for f in self.fanouts))
+        if not self.fanouts or any(f < 1 for f in self.fanouts):
+            raise ValueError(f"fanouts must be non-empty positive ints, got {self.fanouts}")
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    """§5 meta-partitioning: how many partitions, and how relations land."""
+
+    num_partitions: int = 4
+    placement: str = "meta"  # meta (Alg. 2) | naive (random, the ablation)
+
+    def __post_init__(self):
+        if self.num_partitions < 1:
+            raise ValueError(f"num_partitions must be >= 1, got {self.num_partitions}")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}, got {self.placement!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """HGNN architecture.  ``num_layers`` / ``num_classes`` are derived from
+    the data (fanouts length, graph label count) when the session builds the
+    underlying :class:`repro.core.hgnn.HGNNConfig`."""
+
+    model: str = "rgcn"  # rgcn | rgat | hgt
+    hidden: int = 64
+    num_heads: int = 4
+    learnable_dim: int = 64
+    # False freezes the learnable feature tables (no sparse updates) — used
+    # by device-compute-only benchmarks and feature-transfer experiments
+    train_learnable: bool = True
+
+    def __post_init__(self):
+        if self.model not in HGNN_MODELS:
+            raise ValueError(f"model must be one of {HGNN_MODELS}, got {self.model!r}")
+        if self.hidden < 1 or self.hidden % self.num_heads:
+            raise ValueError(
+                f"hidden ({self.hidden}) must be positive and divisible by "
+                f"num_heads ({self.num_heads})"
+            )
+        if self.learnable_dim < 1:
+            raise ValueError(f"learnable_dim must be >= 1, got {self.learnable_dim}")
+
+    def to_hgnn_config(self, num_layers: int, num_classes: int):
+        from repro.core.hgnn import HGNNConfig
+
+        return HGNNConfig(
+            model=self.model,
+            hidden=self.hidden,
+            num_layers=num_layers,
+            num_heads=self.num_heads,
+            num_classes=num_classes,
+            learnable_dim=self.learnable_dim,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """§6 miss-penalty cache + the pre-training profilers that feed it."""
+
+    cache_mb: int = 4
+    policy: str = "miss_penalty"  # miss_penalty (Heta) | hotness (GNNLab-style)
+    presample_epochs: int = 2
+    presample_max_batches: int = 20
+    measured_penalties: bool = False  # measure real copies vs analytic model
+
+    def __post_init__(self):
+        if self.cache_mb < 0:
+            raise ValueError(f"cache_mb must be >= 0, got {self.cache_mb}")
+        if self.policy not in CACHE_POLICIES:
+            raise ValueError(f"policy must be one of {CACHE_POLICIES}, got {self.policy!r}")
+
+    @property
+    def cache_bytes(self) -> int:
+        return self.cache_mb << 20
+
+    @property
+    def hotness_only(self) -> bool:
+        return self.policy == "hotness"
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Execution: which executor, on what mesh, for how long."""
+
+    executor: str = "raf_spmd"  # a name registered in repro.api.executors
+    mesh_shape: Tuple[int, int] = (1, 1)  # (data, model) mesh axes
+    steps: int = 20
+    lr: float = 5e-3
+    seed: int = 0
+    log_every: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "mesh_shape", tuple(int(x) for x in self.mesh_shape))
+        if len(self.mesh_shape) != 2 or any(x < 1 for x in self.mesh_shape):
+            raise ValueError(f"mesh_shape must be 2 positive ints, got {self.mesh_shape}")
+        if self.steps < 0:
+            raise ValueError(f"steps must be >= 0, got {self.steps}")
+        if self.lr <= 0:
+            raise ValueError(f"lr must be > 0, got {self.lr}")
+
+
+@dataclasses.dataclass(frozen=True)
+class HetaConfig:
+    """The full run description; the single argument of :class:`repro.api.Heta`."""
+
+    data: DataConfig = dataclasses.field(default_factory=DataConfig)
+    partition: PartitionConfig = dataclasses.field(default_factory=PartitionConfig)
+    model: ModelConfig = dataclasses.field(default_factory=ModelConfig)
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    run: RunConfig = dataclasses.field(default_factory=RunConfig)
+
+    SECTIONS = ("data", "partition", "model", "cache", "run")
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.data.fanouts)
+
+    # -- functional updates --------------------------------------------------
+
+    def updated(self, **sections: Dict[str, Any]) -> "HetaConfig":
+        """Replace fields inside sections: ``cfg.updated(run=dict(steps=5))``."""
+        repl = {}
+        for name, kw in sections.items():
+            if name not in self.SECTIONS:
+                raise TypeError(f"unknown config section {name!r}; sections: {self.SECTIONS}")
+            repl[name] = dataclasses.replace(getattr(self, name), **kw)
+        return dataclasses.replace(self, **repl)
+
+    def with_executor(self, name: str) -> "HetaConfig":
+        """The one-liner benchmarks use to sweep the executor registry."""
+        return self.updated(run=dict(executor=name))
+
+    # -- dict round-trip ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Dict[str, Any]]:
+        d = dataclasses.asdict(self)
+        for sec in d.values():
+            for k, v in sec.items():
+                if isinstance(v, tuple):
+                    sec[k] = list(v)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Dict[str, Any]]) -> "HetaConfig":
+        sections = {}
+        for name, sec in d.items():
+            if name not in cls.SECTIONS:
+                raise TypeError(f"unknown config section {name!r}; sections: {cls.SECTIONS}")
+            sec_cls = {"data": DataConfig, "partition": PartitionConfig,
+                       "model": ModelConfig, "cache": CacheConfig, "run": RunConfig}[name]
+            known = {f.name for f in dataclasses.fields(sec_cls)}
+            bad = set(sec) - known
+            if bad:
+                raise TypeError(f"unknown {name} config fields: {sorted(bad)}")
+            sections[name] = sec_cls(**sec)
+        return cls(**sections)
+
+    # -- the legacy train_hgnn kwargs blob ------------------------------------
+
+    @classmethod
+    def from_flat_kwargs(cls, **kwargs: Any) -> "HetaConfig":
+        """Build a config from the historical ``train_hgnn(...)`` keyword
+        surface (plus ``executor=``/``placement=``).  Unknown keys raise."""
+        sections: Dict[str, Dict[str, Any]] = {s: {} for s in cls.SECTIONS}
+        for key, value in kwargs.items():
+            if key not in _FLAT_MAP:
+                raise TypeError(
+                    f"unknown train_hgnn kwarg {key!r}; known: {sorted(_FLAT_MAP)}"
+                )
+            section, field, to_cfg, _ = _FLAT_MAP[key]
+            sections[section][field] = to_cfg(value)
+        return cls().updated(**{s: kw for s, kw in sections.items() if kw})
+
+    def to_flat_kwargs(self) -> Dict[str, Any]:
+        """Inverse of :meth:`from_flat_kwargs` (lossless round-trip)."""
+        out = {}
+        for key, (section, field, _, to_flat) in _FLAT_MAP.items():
+            out[key] = to_flat(getattr(getattr(self, section), field))
+        return out
+
+
+def _parse_fanouts(s) -> Tuple[int, ...]:
+    if isinstance(s, (tuple, list)):
+        return tuple(int(x) for x in s)
+    return tuple(int(x) for x in str(s).split(","))
+
+
+def _parse_mesh(s) -> Tuple[int, int]:
+    if isinstance(s, (tuple, list)):
+        return tuple(int(x) for x in s)
+    return tuple(int(x) for x in str(s).lower().split("x"))
+
+
+_FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
+    "dataset": ("data", "dataset", str, str),
+    "scale": ("data", "scale", lambda v: v, lambda v: v),
+    "fanouts": ("data", "fanouts", _parse_fanouts, tuple),
+    "batch_size": ("data", "batch_size", int, int),
+    "num_partitions": ("partition", "num_partitions", int, int),
+    "naive_placement": (
+        "partition", "placement",
+        lambda v: "naive" if v else "meta", lambda v: v == "naive",
+    ),
+    "model": ("model", "model", str, str),
+    "hidden": ("model", "hidden", int, int),
+    "num_heads": ("model", "num_heads", int, int),
+    "learnable_dim": ("model", "learnable_dim", int, int),
+    "train_learnable": ("model", "train_learnable", bool, bool),
+    "cache_mb": ("cache", "cache_mb", int, int),
+    "hotness_only": (
+        "cache", "policy",
+        lambda v: "hotness" if v else "miss_penalty", lambda v: v == "hotness",
+    ),
+    "presample_epochs": ("cache", "presample_epochs", int, int),
+    "presample_max_batches": ("cache", "presample_max_batches", int, int),
+    "measured_penalties": ("cache", "measured_penalties", bool, bool),
+    "executor": ("run", "executor", str, str),
+    "mesh_shape": ("run", "mesh_shape", _parse_mesh, tuple),
+    "steps": ("run", "steps", int, int),
+    "lr": ("run", "lr", float, float),
+    "seed": ("run", "seed", int, int),
+    "log_every": ("run", "log_every", int, int),
+}
+
+
+# --------------------------------------------------------------------------
+# CLI generation — flags are derived from the dataclass fields above
+# --------------------------------------------------------------------------
+
+# (section, field) -> (flag override, parse fn, help); fields not listed get
+# --<field-with-dashes> and their annotated scalar type.
+_CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Callable, str]] = {
+    ("data", "fanouts"): ("--fanouts", _parse_fanouts, "per-hop fanouts, e.g. 4,3"),
+    ("partition", "num_partitions"): ("--partitions", int, "number of meta-partitions"),
+    ("partition", "placement"): ("--placement", str, f"relation placement {PLACEMENTS}"),
+    ("cache", "policy"): ("--cache-policy", str, f"cache allocation policy {CACHE_POLICIES}"),
+    ("run", "mesh_shape"): ("--mesh", _parse_mesh, "DATAxMODEL mesh, e.g. 2x4"),
+}
+
+_SCALAR_PARSERS = {int: int, float: float, str: str, Optional[float]: float, bool: None}
+
+
+def _cli_specs():
+    """Yield (section, field_name, flag, parse_fn, is_bool, help)."""
+    import typing
+
+    for section, sec_cls in (("data", DataConfig), ("partition", PartitionConfig),
+                             ("model", ModelConfig), ("cache", CacheConfig),
+                             ("run", RunConfig)):
+        hints = typing.get_type_hints(sec_cls)
+        for f in dataclasses.fields(sec_cls):
+            default = getattr(sec_cls(), f.name)
+            if (section, f.name) in _CLI_OVERRIDES:
+                flag, parse, help_ = _CLI_OVERRIDES[(section, f.name)]
+                yield section, f.name, flag, parse, False, f"{help_} (default: {default})"
+                continue
+            hint = hints[f.name]
+            if hint is bool:
+                yield (section, f.name, "--" + f.name.replace("_", "-"), None, True,
+                       f"[{section}] (default: {default})")
+                continue
+            parse = _SCALAR_PARSERS.get(hint, None)
+            if parse is None:  # Optional[float] etc: unwrap
+                args = typing.get_args(hint)
+                parse = next((a for a in args if a in (int, float, str)), str)
+            yield (section, f.name, "--" + f.name.replace("_", "-"), parse, False,
+                   f"[{section}] (default: {default})")
+
+
+def add_config_args(parser: argparse.ArgumentParser) -> None:
+    """Add one flag per HetaConfig field (defaults deferred to the config, so
+    only explicitly-passed flags override)."""
+    for _, _, flag, parse, is_bool, help_ in _cli_specs():
+        if is_bool:
+            parser.add_argument(flag, action=argparse.BooleanOptionalAction,
+                                default=None, help=help_)
+        else:
+            parser.add_argument(flag, type=parse, default=None, help=help_)
+
+
+def config_from_args(args: argparse.Namespace,
+                     base: Optional[HetaConfig] = None) -> HetaConfig:
+    """Merge explicitly-passed CLI flags onto ``base`` (default HetaConfig())."""
+    cfg = base or HetaConfig()
+    sections: Dict[str, Dict[str, Any]] = {}
+    for section, field, flag, _, _, _ in _cli_specs():
+        dest = flag.lstrip("-").replace("-", "_")
+        value = getattr(args, dest, None)
+        if value is not None:
+            sections.setdefault(section, {})[field] = value
+    return cfg.updated(**sections) if sections else cfg

@@ -1,0 +1,355 @@
+"""Executor registry — one protocol, three execution models.
+
+Every way of running an HGNN training step in this repo satisfies the same
+four-method protocol, so executor choice is a config string
+(``RunConfig.executor``) and callers — the session, benchmarks, equivalence
+tests — iterate executors uniformly:
+
+  * ``vanilla``  — the baseline execution model: one dense parameter bundle,
+    full-batch forward (``hgnn_loss``).  The correctness oracle.
+  * ``raf``      — simulated multi-partition RAF (paper §4 Alg. 1): explicit
+    per-partition parameter dicts, partial aggregations summed in Python.
+    Supports all three HGNN models (rgcn/rgat/hgt).
+  * ``raf_spmd`` — the production SPMD executor: relation branches stacked
+    along the ``"model"`` mesh axis, learnable features updated sparsely
+    through the §6 miss-penalty cache engine.
+
+Protocol (all methods take the owning :class:`repro.api.Heta` session, which
+exposes graph / spec / assignment / engine / hgnn_cfg):
+
+  ``build_plan(sess) -> plan``            static artifacts (jitted fns, plans)
+  ``init_state(sess, plan) -> state``     parameters + optimizer state
+  ``step(sess, plan, state, batch) -> (state, loss, step_time_s)``
+      one training step; ``step_time_s`` times the compute + sparse-update
+      region only (host batch staging excluded), so reported step times stay
+      comparable with the historical ``train_hgnn`` accounting
+  ``loss_and_metrics(sess, plan, state, batch) -> (loss, metrics)``  eval only
+
+Register your own with ``@executors.register("name")``.
+"""
+
+from __future__ import annotations
+
+import time
+from types import SimpleNamespace
+from typing import Dict, Tuple, Type
+
+import numpy as np
+
+__all__ = ["Executor", "register", "get", "available"]
+
+_REGISTRY: Dict[str, Type["Executor"]] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("myexec")`` adds it to the registry."""
+
+    def deco(cls: Type["Executor"]) -> Type["Executor"]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get(name: str) -> "Executor":
+    """Instantiate the executor registered under ``name``."""
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown executor {name!r}; available: {available()}"
+        )
+    return _REGISTRY[name]()
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+class Executor:
+    """Base protocol.  Stateless: everything mutable lives in ``state``."""
+
+    name = "?"
+
+    def build_plan(self, sess):
+        raise NotImplementedError
+
+    def init_state(self, sess, plan):
+        raise NotImplementedError
+
+    def step(self, sess, plan, state, batch):
+        raise NotImplementedError
+
+    def loss_and_metrics(self, sess, plan, state, batch):
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+
+def _init_full_params(sess):
+    """Dense parameter bundle seeded identically across executors (the
+    name-derived keys in ``init_hgnn_params`` make partition-restricted inits
+    bit-identical — Prop 1)."""
+    import jax
+
+    from repro.core.hgnn import init_hgnn_params
+
+    return init_hgnn_params(
+        jax.random.PRNGKey(sess.config.run.seed), sess.hgnn_cfg, sess.spec,
+        sess.feat_dims,
+    )
+
+
+def _engine_embed(sess):
+    """Learnable tables as jnp arrays from the cache engine's authoritative
+    copy, so every executor starts from the same rows."""
+    import jax.numpy as jnp
+
+    return {t: jnp.asarray(sess.engine.table(t)) for t in sess.engine.learnable_types}
+
+
+# --------------------------------------------------------------------------
+# vanilla — the single-bundle oracle
+# --------------------------------------------------------------------------
+
+
+def _lookup_tables(sess):
+    """Feature tables visible to the dense executors: fixed features, plus —
+    when learnable training is frozen — the engine's learnable rows as
+    constants (otherwise those travel in the bundle and stay trainable)."""
+    if sess.config.model.train_learnable:
+        return sess.fixed_tables
+    return {**sess.fixed_tables, **_engine_embed(sess)}
+
+
+@register("vanilla")
+class VanillaExecutor(Executor):
+    def build_plan(self, sess):
+        import jax
+
+        from repro.core.hgnn import batch_to_arrays, hgnn_loss
+
+        cfg, spec, tables = sess.hgnn_cfg, sess.spec, _lookup_tables(sess)
+
+        def loss(bundle, arrs):
+            return hgnn_loss(cfg, bundle, tables, arrs, spec)
+
+        return SimpleNamespace(
+            to_arrays=batch_to_arrays,
+            grad=jax.jit(jax.value_and_grad(loss)),
+            loss=jax.jit(loss),
+        )
+
+    def init_state(self, sess, plan):
+        from repro.optim.adam import adam_init
+
+        bundle = _init_full_params(sess)
+        if sess.config.model.train_learnable:
+            bundle["embed"] = _engine_embed(sess)
+        return {"bundle": bundle, "opt": adam_init(bundle)}
+
+    def step(self, sess, plan, state, batch):
+        return _bundle_step(sess, plan, state, batch)
+
+    def loss_and_metrics(self, sess, plan, state, batch):
+        loss = float(plan.loss(state["bundle"], plan.to_arrays(batch)))
+        return loss, {"loss": loss}
+
+
+def _bundle_step(sess, plan, state, batch):
+    """Shared dense-bundle step: staging (to_arrays) untimed, grad + Adam
+    timed — mirrors the historical step-time accounting."""
+    from repro.optim.adam import adam_update
+
+    arrs = plan.to_arrays(batch)
+    t0 = time.perf_counter()
+    loss, grads = plan.grad(state["bundle"], arrs)
+    bundle, opt = adam_update(sess.adam_cfg, state["bundle"], grads, state["opt"])
+    loss = float(loss)
+    return {"bundle": bundle, "opt": opt}, loss, time.perf_counter() - t0
+
+
+# --------------------------------------------------------------------------
+# raf — simulated multi-partition execution (Alg. 1, explicit partitions)
+# --------------------------------------------------------------------------
+
+
+@register("raf")
+class RafSimExecutor(Executor):
+    def build_plan(self, sess):
+        import jax
+
+        from repro.core.hgnn import batch_to_arrays
+        from repro.core.raf import raf_loss
+
+        cfg, spec, tables = sess.hgnn_cfg, sess.spec, _lookup_tables(sess)
+        assignment = sess.assignment
+        P = assignment.num_partitions
+
+        def loss(bundle, arrs):
+            # one logical copy of the shared leaves (embed tables + head),
+            # merged into every partition's local relation parameters
+            parts = [
+                {**bundle["parts"][p], "embed": bundle.get("embed", {}),
+                 "head": bundle["head"]}
+                for p in range(P)
+            ]
+            return raf_loss(cfg, parts, tables, arrs, spec, assignment)
+
+        return SimpleNamespace(
+            to_arrays=batch_to_arrays,
+            grad=jax.jit(jax.value_and_grad(loss)),
+            loss=jax.jit(loss),
+            num_partitions=P,
+        )
+
+    def init_state(self, sess, plan):
+        import jax
+
+        from repro.core.hgnn import init_hgnn_params
+        from repro.optim.adam import adam_init
+
+        full = _init_full_params(sess)
+        key = jax.random.PRNGKey(sess.config.run.seed)
+        parts = [
+            {k: init_hgnn_params(
+                key, sess.hgnn_cfg, sess.spec, sess.feat_dims,
+                restrict_rels=sess.assignment.relations_of(p, sess.spec),
+            )[k] for k in ("rel", "ntype", "etype")}
+            for p in range(plan.num_partitions)
+        ]
+        bundle = {"parts": parts, "head": full["head"]}
+        if sess.config.model.train_learnable:
+            bundle["embed"] = _engine_embed(sess)
+        return {"bundle": bundle, "opt": adam_init(bundle)}
+
+    def step(self, sess, plan, state, batch):
+        return _bundle_step(sess, plan, state, batch)
+
+    def loss_and_metrics(self, sess, plan, state, batch):
+        loss = float(plan.loss(state["bundle"], plan.to_arrays(batch)))
+        return loss, {"loss": loss}
+
+
+# --------------------------------------------------------------------------
+# raf_spmd — the production mesh executor + cache-mediated feature updates
+# --------------------------------------------------------------------------
+
+
+@register("raf_spmd")
+class RafSpmdExecutor(Executor):
+    def build_plan(self, sess):
+        import jax
+
+        from repro.core import raf_spmd
+
+        run = sess.config.run
+        assignment = sess.assignment
+        if assignment.num_partitions != run.mesh_shape[1]:
+            # mesh model axis ≠ partition count: fold partitions onto shards
+            # (p % shards) — meta-locality is preserved (BranchAssignment.fold)
+            assignment = assignment.fold(run.mesh_shape[1], sess.spec)
+        plan = raf_spmd.build_plan(sess.spec, assignment, sess.hgnn_cfg, sess.feat_dims)
+        mesh = jax.make_mesh(run.mesh_shape, ("data", "model"))
+        local_combine = sess.config.partition.placement == "meta"
+        learn = (bool(sess.engine.learnable_types)
+                 and sess.config.model.train_learnable)
+        return SimpleNamespace(
+            plan=plan,
+            mesh=mesh,
+            learn_feats=learn,
+            step=raf_spmd.make_train_step(
+                plan, mesh, sess.adam_cfg, data_axes=("data",),
+                local_combine=local_combine, learn_feats=learn,
+            ),
+            loss=raf_spmd.make_loss_fn(
+                plan, mesh, data_axes=("data",), local_combine=local_combine,
+            ),
+        )
+
+    def init_state(self, sess, plan):
+        from repro.core import raf_spmd
+        from repro.optim.adam import adam_init
+
+        params = _init_full_params(sess)
+        stacks = raf_spmd.shard_stacks(
+            plan.plan, plan.mesh, raf_spmd.stack_params_from_dict(plan.plan, params)
+        )
+        return {"stacks": stacks, "opt": adam_init(stacks)}
+
+    def _stage(self, sess, plan, batch):
+        from repro.core import raf_spmd
+
+        if not plan.learn_feats:
+            # tables are static when features are frozen -> re-staging the
+            # same batch (fixed-batch timing loops) would rebuild identical
+            # arrays; memoize the last one
+            cached = getattr(plan, "_stage_cache", None)
+            if cached is not None and cached[0] is batch:
+                return cached[1]
+        tables = sess.engine.tables_snapshot()
+        arrays = raf_spmd.shard_arrays(
+            plan.plan, plan.mesh, raf_spmd.stack_batch(plan.plan, batch, tables)
+        )
+        if not plan.learn_feats:
+            plan._stage_cache = (batch, arrays)
+        return arrays
+
+    def step(self, sess, plan, state, batch):
+        arrays = self._stage(sess, plan, batch)
+        t0 = time.perf_counter()
+        if plan.learn_feats:
+            stacks, opt, loss, gf = plan.step(state["stacks"], state["opt"], arrays)
+            _apply_feature_grads(sess.engine, plan.plan, batch, gf)
+        else:
+            stacks, opt, loss = plan.step(state["stacks"], state["opt"], arrays)
+        loss = float(loss)
+        return {"stacks": stacks, "opt": opt}, loss, time.perf_counter() - t0
+
+    def loss_and_metrics(self, sess, plan, state, batch):
+        loss = float(plan.loss(state["stacks"], self._stage(sess, plan, batch)))
+        return loss, {"loss": loss, "hit_rates": sess.engine.cache.hit_rates()}
+
+
+def _apply_feature_grads(engine, plan, batch, gf: Dict) -> None:
+    """Route gradients of the gathered feature arrays back to the learnable
+    tables (paper Fig. 3 step 5, via the §6 cache)."""
+    learnable = set(engine.learnable_types)
+    spec = plan.spec
+    k = spec.num_layers
+    for d in range(1, k + 1):
+        lp = plan.levels[d - 1]
+        for key, types, get_ids in (
+            (f"hfeat{d}", plan.src_types[d - 1], lambda b: batch.levels[d - 1].nids[b]),
+            (
+                f"qfeat{d}",
+                plan.dst_types[d - 1],
+                lambda b: (
+                    batch.seeds if d == 1
+                    else batch.levels[d - 2].nids[spec.levels[d - 1][b].parent]
+                ),
+            ),
+        ):
+            if key not in gf:
+                continue
+            grad = np.asarray(gf[key])  # [P*rb, N, d_pad]
+            grad = grad.reshape(plan.num_shards, lp.rb, *grad.shape[1:])
+            per_type: Dict[str, list] = {}
+            for p in range(plan.num_shards):
+                for s in range(lp.rb):
+                    b = lp.slot_branch[p, s]
+                    if b < 0:
+                        continue
+                    t = types[b]
+                    if t not in learnable:
+                        continue
+                    dim = engine.learnable_dim
+                    per_type.setdefault(t, []).append(
+                        (get_ids(b), grad[p, s][:, :dim])
+                    )
+            for t, chunks in per_type.items():
+                ids = np.concatenate([c[0] for c in chunks])
+                gr = np.concatenate([c[1] for c in chunks])
+                engine.apply_row_grads(t, ids, gr)

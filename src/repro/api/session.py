@@ -1,0 +1,361 @@
+"""The ``Heta`` session — explicit, resumable pipeline stages.
+
+One session wires the paper's full pipeline (Fig. 5) behind five stages,
+each individually runnable and inspectable:
+
+    sess = Heta(config)
+    g      = sess.build_graph()        # HetG (synthetic dataset family)
+    part   = sess.partition()          # §5 meta-partitioning -> PartitionReport
+    cache  = sess.profile_and_cache()  # §6 hotness/penalty profiling -> CacheReport
+    sess.compile(executor="raf_spmd")  # §4 executor via the registry
+    result = sess.fit()                # train; same keys as train_hgnn
+
+Calling a stage out of order raises :class:`HetaStageError` with the missing
+prerequisite; ``run()`` executes whatever stages remain and then ``fit()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api import executors as _executors
+from repro.api.config import HetaConfig
+
+__all__ = ["Heta", "HetaStageError", "PartitionReport", "CacheReport"]
+
+
+class HetaStageError(RuntimeError):
+    """A lifecycle method was called before its prerequisite stage."""
+
+
+@dataclasses.dataclass
+class PartitionReport:
+    """Inspectable result of the §5 partitioning stage."""
+
+    summary: str
+    meta_local: bool
+    num_partitions: int
+    metatree: object  # MetaTreeNode (render() for the figure-style tree)
+    mp: object  # MetaPartitioning
+    spec: object  # SampleSpec
+    assignment: object  # BranchAssignment (pre-fold)
+
+    def raf_bytes(self, batch_size: int, hidden: int, bytes_per_elem: int = 2,
+                  style: str = "designated") -> int:
+        """Per-batch RAF exchange bytes under this assignment (paper §4)."""
+        from repro.core.raf import raf_comm_bytes
+
+        return raf_comm_bytes(self.spec, self.assignment, batch_size, hidden,
+                              bytes_per_elem, style=style)
+
+
+@dataclasses.dataclass
+class CacheReport:
+    """Inspectable result of the §6 profiling + cache-allocation stage."""
+
+    allocation_rows: Dict[str, int]
+    learnable_types: Dict[str, int]
+    hotness: object  # HotnessProfile
+    penalties: object  # MissPenaltyProfile
+    engine: object  # EmbedEngine
+
+
+class Heta:
+    """Session over one :class:`HetaConfig` (see module docstring)."""
+
+    def __init__(self, config: Optional[HetaConfig] = None, **sections):
+        if config is None:
+            config = HetaConfig().updated(**sections) if sections else HetaConfig()
+        elif sections:
+            config = config.updated(**sections)
+        self.config = config
+        from repro.optim.adam import AdamConfig
+
+        self.adam_cfg = AdamConfig(lr=config.run.lr)
+        self.stage_times: Dict[str, float] = {}
+        # stage products
+        self.graph = None
+        self.hgnn_cfg = None
+        self.feat_dims = None
+        self.fixed_tables = None
+        self.mp = None
+        self.spec = None
+        self.assignment = None
+        self.meta_local = None
+        self.engine = None
+        self.executor = None
+        self.plan = None
+        self.state = None
+        self.sampler = None
+        self.losses: List[float] = []
+        self.step_times: List[float] = []
+        self._steps_done = 0
+
+    # -- stage guards --------------------------------------------------------
+
+    def _require(self, attr: str, stage: str, needed_by: str):
+        if getattr(self, attr) is None:
+            raise HetaStageError(
+                f"{needed_by}() requires the {stage}() stage; "
+                f"run session.{stage}() first (or session.run() for all stages)"
+            )
+
+    # -- stage 1: data ------------------------------------------------------
+
+    def build_graph(self, graph=None):
+        """Materialize the HetG and the model config derived from it.
+
+        Pass ``graph`` to reuse a pre-built :class:`HetGraph` (sweeps over
+        partition counts / fanouts, or real datasets loaded elsewhere)
+        instead of synthesizing from ``DataConfig``."""
+        import jax.numpy as jnp
+
+        from repro.graph.synthetic import make_dataset
+
+        t0 = time.perf_counter()
+        cfg = self.config
+        self.graph = graph if graph is not None else make_dataset(
+            cfg.data.dataset, scale=cfg.data.scale, seed=cfg.run.seed)
+        self.feat_dims = {
+            t: self.graph.feat_dim(t)
+            for t in self.graph.num_nodes if self.graph.feat_dim(t)
+        }
+        self.fixed_tables = {t: jnp.asarray(f) for t, f in self.graph.features.items()}
+        self.hgnn_cfg = cfg.model.to_hgnn_config(cfg.num_layers, self.graph.num_classes)
+        self.stage_times["build_graph"] = time.perf_counter() - t0
+        return self.graph
+
+    # -- stage 2: §5 meta-partitioning ---------------------------------------
+
+    def partition(self) -> PartitionReport:
+        """Meta-partition the graph and place relation branches."""
+        from repro.core.meta_partition import meta_partition
+        from repro.core.raf import assign_branches, random_branch_assignment
+        from repro.graph.sampler import SampleSpec
+
+        self._require("graph", "build_graph", "partition")
+        t0 = time.perf_counter()
+        cfg = self.config
+        self.mp = meta_partition(self.graph, cfg.partition.num_partitions,
+                                 num_layers=cfg.num_layers)
+        self.spec = SampleSpec.from_metatree(self.mp.metatree, cfg.data.fanouts)
+        self.assignment = (
+            random_branch_assignment(self.spec, cfg.partition.num_partitions,
+                                     seed=cfg.run.seed)
+            if cfg.partition.placement == "naive"
+            else assign_branches(self.spec, self.mp)
+        )
+        self.meta_local = self.assignment.meta_local
+        self.stage_times["partition"] = time.perf_counter() - t0
+        return PartitionReport(
+            summary=self.mp.summary(),
+            meta_local=self.meta_local,
+            num_partitions=cfg.partition.num_partitions,
+            metatree=self.mp.metatree,
+            mp=self.mp,
+            spec=self.spec,
+            assignment=self.assignment,
+        )
+
+    def comm_report(self, bytes_per_elem: int = 2, hidden: Optional[int] = None,
+                    include_topology: bool = True) -> Dict[str, int]:
+        """Per-batch communication accounting, all three execution models
+        (the paper's §4 worked example: 92.3 → 8.0 → 0.5 MB).
+
+        Returns bytes for: ``vanilla_feat`` (edge-cut feature fetching),
+        ``vanilla_update`` (remote learnable-row read+write), ``raf_naive``
+        (RAF, random placement) and ``raf_meta`` (RAF under the §5 meta
+        placement — computed from ``assign_branches`` even when this
+        session's configured placement is naive, so the comparison always
+        shows the meta-partitioning gain).
+        """
+        from repro.core.comm import vanilla_comm_bytes, vanilla_update_bytes
+        from repro.core.meta_partition import random_edge_cut
+        from repro.core.raf import assign_branches, raf_comm_bytes, random_branch_assignment
+        from repro.graph.sampler import NeighborSampler
+
+        self._require("spec", "partition", "comm_report")
+        cfg = self.config
+        B = cfg.data.batch_size
+        h = hidden or cfg.model.hidden
+        P = cfg.partition.num_partitions
+        seed = cfg.run.seed
+        batch = NeighborSampler(self.graph, self.spec, B, seed=seed).sample_batch(
+            self.graph.train_nodes[:B]
+        )
+        cut = random_edge_cut(self.graph, P, seed=seed)
+        ld = cfg.model.learnable_dim
+        return {
+            "vanilla_feat": vanilla_comm_bytes(
+                batch, cut, self.feat_dims, learnable_dim=ld,
+                bytes_per_elem=bytes_per_elem, include_topology=include_topology,
+            ),
+            "vanilla_update": vanilla_update_bytes(
+                batch, cut, self.graph, learnable_dim=ld,
+                bytes_per_elem=bytes_per_elem,
+            ),
+            "raf_naive": raf_comm_bytes(
+                self.spec, random_branch_assignment(self.spec, P, seed=seed + 1),
+                B, h, bytes_per_elem,
+            ),
+            "raf_meta": raf_comm_bytes(
+                self.spec,
+                self.assignment if self.meta_local
+                else assign_branches(self.spec, self.mp),
+                B, h, bytes_per_elem,
+            ),
+        }
+
+    # -- stage 3: §6 profiling + cache ---------------------------------------
+
+    def profile_and_cache(self) -> CacheReport:
+        """Pre-sample hotness, profile miss penalties, allocate the cache."""
+        from repro.embed import EmbedEngine, presample_hotness, profile_miss_penalties
+
+        self._require("spec", "partition", "profile_and_cache")
+        t0 = time.perf_counter()
+        cfg = self.config
+        hotness = presample_hotness(
+            self.graph, self.spec, cfg.data.batch_size,
+            epochs=cfg.cache.presample_epochs,
+            max_batches=cfg.cache.presample_max_batches, seed=cfg.run.seed,
+        )
+        penalties = profile_miss_penalties(
+            self.graph, learnable_dim=cfg.model.learnable_dim,
+            measured=cfg.cache.measured_penalties,
+        )
+        self.engine = EmbedEngine(
+            self.graph, cfg.model.learnable_dim, hotness, penalties,
+            cache_bytes=cfg.cache.cache_bytes, adam=self.adam_cfg,
+            hotness_only=cfg.cache.hotness_only,
+            num_shards=int(np.prod(cfg.run.mesh_shape)), seed=cfg.run.seed,
+        )
+        self.stage_times["profile_and_cache"] = time.perf_counter() - t0
+        return CacheReport(
+            allocation_rows=dict(self.engine.allocation.rows),
+            learnable_types=dict(self.engine.learnable_types),
+            hotness=hotness,
+            penalties=penalties,
+            engine=self.engine,
+        )
+
+    # -- stage 4: executor compilation ----------------------------------------
+
+    def compile(self, executor: Optional[str] = None) -> "Heta":
+        """Build the executor plan + initial state via the registry."""
+        from repro.graph.sampler import NeighborSampler
+
+        self._require("engine", "profile_and_cache", "compile")
+        t0 = time.perf_counter()
+        name = executor or self.config.run.executor
+        self.executor = _executors.get(name)  # raises KeyError w/ available list
+        self.plan = self.executor.build_plan(self)
+        self.state = self.executor.init_state(self, self.plan)
+        self.sampler = NeighborSampler(
+            self.graph, self.spec, self.config.data.batch_size,
+            seed=self.config.run.seed + 1,
+        )
+        self.stage_times["compile"] = time.perf_counter() - t0
+        return self
+
+    # -- stage 5: training / evaluation ---------------------------------------
+
+    def step(self, batch=None) -> float:
+        """One optimization step (samples the next batch when none given).
+
+        Recorded step times come from the executor's own timed region —
+        compute + sparse update, host staging excluded — matching the
+        historical ``train_hgnn`` accounting."""
+        self._require("state", "compile", "step")
+        if batch is None:
+            batch = self._next_batch()
+        self.state, loss, dt = self.executor.step(self, self.plan, self.state, batch)
+        self.step_times.append(dt)
+        self.losses.append(loss)
+        self._steps_done += 1
+        return loss
+
+    def fit(self, steps: Optional[int] = None) -> Dict:
+        """Train for ``steps`` (default ``RunConfig.steps``); returns the
+        result dict (same keys the legacy ``train_hgnn`` returned)."""
+        self._require("state", "compile", "fit")
+        steps = self.config.run.steps if steps is None else steps
+        log_every = self.config.run.log_every
+        for _ in range(steps):
+            loss = self.step()
+            i = self._steps_done - 1
+            if log_every and i % log_every == 0:
+                print(f"step {i:4d} loss {loss:.4f} "
+                      f"({self.step_times[-1]*1e3:.1f} ms)")
+        return self.results()
+
+    def evaluate(self, num_batches: int = 1) -> Dict:
+        """Mean held-out-batch loss via the executor's eval path (no update)."""
+        from repro.graph.sampler import NeighborSampler
+
+        self._require("state", "compile", "evaluate")
+        sampler = NeighborSampler(
+            self.graph, self.spec, self.config.data.batch_size,
+            seed=self.config.run.seed + 9999,
+        )
+        it = sampler.epoch(shuffle=True, seed=self.config.run.seed + 9999)
+        losses, metrics = [], {}
+        for _ in range(num_batches):
+            try:
+                b = next(it)
+            except StopIteration:
+                break
+            loss, metrics = self.executor.loss_and_metrics(self, self.plan,
+                                                           self.state, b)
+            losses.append(loss)
+        return {"loss": float(np.mean(losses)), "num_batches": len(losses),
+                **{k: v for k, v in metrics.items() if k != "loss"}}
+
+    # -- convenience -----------------------------------------------------------
+
+    def run(self) -> Dict:
+        """Execute whatever stages remain, then ``fit()``."""
+        if self.graph is None:
+            self.build_graph()
+        if self.spec is None:
+            self.partition()
+        if self.engine is None:
+            self.profile_and_cache()
+        if self.state is None:
+            self.compile()
+        return self.fit()
+
+    def results(self) -> Dict:
+        """The legacy ``train_hgnn`` result dict."""
+        self._require("engine", "profile_and_cache", "results")
+        # exclude jit-compile warmup from the reported step time
+        timed = (self.step_times[2:] if len(self.step_times) > 4
+                 else self.step_times) or [0.0]
+        setup = sum(self.stage_times.values())
+        return {
+            "losses": list(self.losses),
+            "step_time_s": float(np.median(timed)),
+            "setup_s": setup,
+            "hit_rates": self.engine.cache.hit_rates(),
+            "partitioning": self.mp.summary(),
+            "meta_local": self.meta_local,
+            "cache_allocation": dict(self.engine.allocation.rows),
+            "executor": self.executor.name if self.executor else None,
+        }
+
+    # -- internal ---------------------------------------------------------------
+
+    def _next_batch(self):
+        it = getattr(self, "_epoch_iter", None)
+        if it is None:
+            it = iter([])
+        try:
+            return next(it)
+        except StopIteration:
+            seed = self.config.run.seed + 2 + self._steps_done
+            self._epoch_iter = self.sampler.epoch(shuffle=True, seed=seed)
+            return next(self._epoch_iter)

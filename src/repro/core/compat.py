@@ -1,0 +1,25 @@
+"""jax version-portability shims shared across subsystems.
+
+The repo targets current jax but must run on 0.4.x images; the handful of
+renamed surfaces live here so HGNN executors, LLM models and tests don't
+each carry their own try/except.
+"""
+
+from __future__ import annotations
+
+try:  # jax >= 0.5: top-level export, replication check renamed to check_vma
+    from jax import shard_map as _shard_map
+
+    _SHARD_MAP_NOCHECK = {"check_vma": False}
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_NOCHECK = {"check_rep": False}
+
+__all__ = ["shard_map_nocheck"]
+
+
+def shard_map_nocheck(body, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checking disabled."""
+    return _shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **_SHARD_MAP_NOCHECK)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map_nocheck
 from repro.core.hgnn import HGNNConfig, Params, masked_mean, masked_softmax
 from repro.core.raf import BranchAssignment
 from repro.graph.sampler import SampledBatch, SampleSpec
@@ -43,7 +44,9 @@ __all__ = [
     "stack_params_from_dict",
     "stack_batch",
     "raf_spmd_forward",
+    "make_loss_fn",
     "make_train_step",
+    "shard_map_nocheck",
 ]
 
 
@@ -408,6 +411,72 @@ def _stack_specs(plan: StackedPlan):
     return specs
 
 
+def _build_loss_fn(
+    plan: StackedPlan,
+    mesh: Mesh,
+    model_axis: str,
+    data_axes: Tuple[str, ...],
+    local_combine: bool,
+):
+    """Shared closure of the train and eval steps: ``(loss_fn, split_arrays)``
+    where ``loss_fn(stacks, feats, rest)`` is the scalar SPMD loss."""
+    da = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    arr_specs = _array_specs(plan, da, model_axis)
+    stack_specs = _stack_specs(plan)
+    rel_specs = {k2: v for k2, v in stack_specs.items() if k2 != "head"}
+
+    def split_arrays(arrays):
+        feats = {k2: v for k2, v in arrays.items() if "feat" in k2}
+        rest = {k2: v for k2, v in arrays.items() if "feat" not in k2}
+        return feats, rest
+
+    def root_fn(rel_stacks, feats, rest):
+        def body(stacks_s, feats_s, rest_s):
+            return raf_spmd_forward(
+                plan, stacks_s, {**feats_s, **rest_s}, model_axis, local_combine
+            )
+
+        return shard_map_nocheck(
+            body,
+            mesh=mesh,
+            in_specs=(
+                rel_specs,
+                {k2: arr_specs[k2] for k2 in feats},
+                {k2: arr_specs[k2] for k2 in rest},
+            ),
+            out_specs=P(da, None),
+        )(rel_stacks, feats, rest)
+
+    def loss_fn(stacks, feats, rest):
+        rel_stacks = {k2: v for k2, v in stacks.items() if k2 != "head"}
+        root = root_fn(rel_stacks, feats, rest)
+        h = jax.nn.relu(root)
+        logits = h @ stacks["head"]["w"] + stacks["head"]["b"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, rest["labels"][:, None], axis=-1)
+        return jnp.mean(nll)
+
+    return loss_fn, split_arrays
+
+
+def make_loss_fn(
+    plan: StackedPlan,
+    mesh: Mesh,
+    model_axis: str = "model",
+    data_axes=("data",),
+    local_combine: bool = True,
+):
+    """Jitted evaluation-only loss: ``loss(stacks, arrays) -> scalar``."""
+    loss_fn, split_arrays = _build_loss_fn(plan, mesh, model_axis, data_axes, local_combine)
+
+    @jax.jit
+    def eval_loss(stacks, arrays):
+        feats, rest = split_arrays(arrays)
+        return loss_fn(stacks, feats, rest)
+
+    return eval_loss
+
+
 def make_train_step(
     plan: StackedPlan,
     mesh: Mesh,
@@ -427,47 +496,9 @@ def make_train_step(
     returns gradients w.r.t. the gathered feature arrays (``qfeat*``/``hfeat*``)
     for the embed engine's sparse row updates.
     """
-    from jax import shard_map
-
     from repro.optim.adam import adam_update
 
-    cfg = plan.cfg
-    da = data_axes if isinstance(data_axes, tuple) else (data_axes,)
-    arr_specs = _array_specs(plan, da, model_axis)
-    stack_specs = _stack_specs(plan)
-    rel_specs = {k2: v for k2, v in stack_specs.items() if k2 != "head"}
-
-    def split_arrays(arrays):
-        feats = {k2: v for k2, v in arrays.items() if "feat" in k2}
-        rest = {k2: v for k2, v in arrays.items() if "feat" not in k2}
-        return feats, rest
-
-    def root_fn(rel_stacks, feats, rest):
-        def body(stacks_s, feats_s, rest_s):
-            return raf_spmd_forward(
-                plan, stacks_s, {**feats_s, **rest_s}, model_axis, local_combine
-            )
-
-        return shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(
-                rel_specs,
-                {k2: arr_specs[k2] for k2 in feats},
-                {k2: arr_specs[k2] for k2 in rest},
-            ),
-            out_specs=P(da, None),
-            check_vma=False,
-        )(rel_stacks, feats, rest)
-
-    def loss_fn(stacks, feats, rest):
-        rel_stacks = {k2: v for k2, v in stacks.items() if k2 != "head"}
-        root = root_fn(rel_stacks, feats, rest)
-        h = jax.nn.relu(root)
-        logits = h @ stacks["head"]["w"] + stacks["head"]["b"]
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        nll = -jnp.take_along_axis(logp, rest["labels"][:, None], axis=-1)
-        return jnp.mean(nll)
+    loss_fn, split_arrays = _build_loss_fn(plan, mesh, model_axis, data_axes, local_combine)
 
     if not learn_feats:
         grad_fn = jax.value_and_grad(loss_fn)

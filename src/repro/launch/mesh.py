@@ -21,11 +21,23 @@ from jax.sharding import Mesh
 __all__ = [
     "make_production_mesh",
     "make_test_mesh",
+    "make_abstract_mesh",
     "data_axes",
     "MODEL_AXIS",
 ]
 
 MODEL_AXIS = "model"
+
+
+def make_abstract_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Device-free mesh for sharding-rule tables, portable across the
+    AbstractMesh signature change (older jax takes ((name, size), ...))."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

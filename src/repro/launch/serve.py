@@ -20,7 +20,11 @@ import numpy as np
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # --reduced (default) / --no-reduced: the old store_true-with-default-True
+    # made the flag a no-op and left full configs unreachable
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the reduced config (--no-reduced for full size)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)

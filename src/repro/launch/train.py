@@ -1,26 +1,27 @@
-"""End-to-end Heta training driver.
+"""End-to-end Heta training driver (thin CLI over :mod:`repro.api`).
 
-Wires the full pipeline of the paper (Fig. 5): synthetic HetG → meta-
-partitioning (§5) → pre-sampling hotness + miss-penalty profiling → cache
-allocation (§6) → SPMD RAF training (§4) with sparse learnable-feature
-updates through the cache.
+The full pipeline of the paper (Fig. 5) — synthetic HetG → meta-partitioning
+(§5) → hotness + miss-penalty profiling → cache allocation (§6) → RAF
+training (§4) — lives behind the :class:`repro.api.Heta` session; this module
+keeps the historical entry points:
 
-Usage (CLI):
-  python -m repro.launch.train --dataset ogbn-mag --model rgcn \
-      --partitions 4 --steps 100 [--mesh 2x4] [--naive] [--no-cache]
+  * CLI — flags are *derived* from :class:`repro.api.HetaConfig`
+    (``add_config_args``), not duplicated here::
 
-The ``train_hgnn`` function is the programmatic entry (used by tests,
-benchmarks and examples).
+      python -m repro.launch.train --dataset ogbn-mag --model rgcn \
+          --partitions 4 --steps 100 [--mesh 2x4] [--executor raf_spmd] \
+          [--placement naive] [--cache-policy hotness]
+
+  * ``train_hgnn(...)`` — the legacy 18-kwarg programmatic entry, now a
+    deprecated thin wrapper over ``Heta(HetaConfig.from_flat_kwargs(...)).run()``.
+    Prefer the session API for new code.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 from typing import Dict, Optional, Sequence, Tuple
-
-import numpy as np
 
 __all__ = ["train_hgnn"]
 
@@ -42,168 +43,49 @@ def train_hgnn(
     learnable_dim: int = 64,
     seed: int = 0,
     log_every: int = 0,
+    executor: str = "raf_spmd",
 ) -> Dict:
-    import jax
-    import jax.numpy as jnp
+    """Deprecated compatibility wrapper — use :class:`repro.api.Heta`.
 
-    from repro.core import raf_spmd
-    from repro.core.hgnn import HGNNConfig, init_hgnn_params
-    from repro.core.meta_partition import meta_partition
-    from repro.core.raf import assign_branches, random_branch_assignment
-    from repro.embed import EmbedEngine, presample_hotness, profile_miss_penalties
-    from repro.graph.sampler import NeighborSampler, SampleSpec
-    from repro.graph.synthetic import make_dataset
-    from repro.optim.adam import AdamConfig, adam_init
+    Equivalent to ``Heta(HetaConfig.from_flat_kwargs(**kwargs)).run()`` and
+    returns the same result keys as always (``losses``, ``step_time_s``,
+    ``setup_s``, ``hit_rates``, ``partitioning``, ``meta_local``,
+    ``cache_allocation``).
+    """
+    from repro.api import Heta, HetaConfig
 
-    t0 = time.perf_counter()
-    g = make_dataset(dataset, scale=scale, seed=seed)
-    k = len(fanouts)
-
-    # §5: meta-partitioning
-    mp = meta_partition(g, num_partitions, num_layers=k)
-    spec = SampleSpec.from_metatree(mp.metatree, fanouts)
-    assignment = (
-        random_branch_assignment(spec, num_partitions, seed=seed)
-        if naive_placement
-        else assign_branches(spec, mp)
+    cfg = HetaConfig.from_flat_kwargs(
+        dataset=dataset, scale=scale, model=model, num_partitions=num_partitions,
+        mesh_shape=tuple(mesh_shape), batch_size=batch_size,
+        fanouts=tuple(fanouts), hidden=hidden, steps=steps, lr=lr,
+        cache_mb=cache_mb, hotness_only=hotness_only,
+        naive_placement=naive_placement, learnable_dim=learnable_dim,
+        seed=seed, log_every=log_every, executor=executor,
     )
-    meta_local_prefold = assignment.meta_local
-    if assignment.num_partitions != mesh_shape[1]:
-        # mesh model axis ≠ partition count: fold partitions onto shards
-        # (p % shards) — meta-locality is preserved (see BranchAssignment.fold)
-        assignment = assignment.fold(mesh_shape[1], spec)
-
-    # §6: pre-sampling + miss-penalty profiling + cache
-    hotness = presample_hotness(g, spec, batch_size, epochs=2, max_batches=20, seed=seed)
-    penalties = profile_miss_penalties(g, learnable_dim=learnable_dim, measured=False)
-    engine = EmbedEngine(
-        g, learnable_dim, hotness, penalties, cache_bytes=cache_mb << 20,
-        adam=AdamConfig(lr=lr), hotness_only=hotness_only,
-        num_shards=int(np.prod(mesh_shape)), seed=seed,
-    )
-
-    # §4: RAF over the (data, model) mesh
-    cfg = HGNNConfig(
-        model=model, hidden=hidden, num_layers=k, num_classes=g.num_classes,
-        learnable_dim=learnable_dim,
-    )
-    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
-    params = init_hgnn_params(jax.random.PRNGKey(seed), cfg, spec, feat_dims)
-    plan = raf_spmd.build_plan(spec, assignment, cfg, feat_dims)
-    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
-    stacks = raf_spmd.shard_stacks(plan, mesh, raf_spmd.stack_params_from_dict(plan, params))
-    opt = adam_init(stacks)
-    step = raf_spmd.make_train_step(
-        plan, mesh, AdamConfig(lr=lr), data_axes=("data",),
-        local_combine=not naive_placement, learn_feats=bool(engine.learnable_types),
-    )
-    setup_s = time.perf_counter() - t0
-
-    sampler = NeighborSampler(g, spec, batch_size, seed=seed + 1)
-    losses, step_times = [], []
-    it = iter([])
-    learnable = set(engine.learnable_types)
-    for i in range(steps):
-        try:
-            batch = next(it)
-        except StopIteration:
-            it = sampler.epoch(shuffle=True, seed=seed + 2 + i)
-            batch = next(it)
-        tables = engine.tables_snapshot()
-        arrays = raf_spmd.shard_arrays(plan, mesh, raf_spmd.stack_batch(plan, batch, tables))
-        t1 = time.perf_counter()
-        if engine.learnable_types:
-            stacks, opt, loss, gf = step(stacks, opt, arrays)
-            _apply_feature_grads(engine, plan, batch, gf, learnable)
-        else:
-            stacks, opt, loss = step(stacks, opt, arrays)
-        loss = float(loss)
-        step_times.append(time.perf_counter() - t1)
-        losses.append(loss)
-        if log_every and i % log_every == 0:
-            print(f"step {i:4d} loss {loss:.4f} ({step_times[-1]*1e3:.1f} ms)")
-
-    # exclude jit-compile warmup from the reported step time
-    timed = step_times[2:] if len(step_times) > 4 else step_times
-    return {
-        "losses": losses,
-        "step_time_s": float(np.median(timed)),
-        "setup_s": setup_s,
-        "hit_rates": engine.cache.hit_rates(),
-        "partitioning": mp.summary(),
-        "meta_local": meta_local_prefold,
-        "cache_allocation": dict(engine.allocation.rows),
-    }
-
-
-def _apply_feature_grads(engine, plan, batch, gf: Dict, learnable: set) -> None:
-    """Route gradients of the gathered feature arrays back to the learnable
-    tables (paper Fig. 3 step 5, via the §6 cache)."""
-    import numpy as np
-
-    spec = plan.spec
-    k = spec.num_layers
-    for d in range(1, k + 1):
-        lp = plan.levels[d - 1]
-        for key, types, get_ids in (
-            (f"hfeat{d}", plan.src_types[d - 1], lambda b: batch.levels[d - 1].nids[b]),
-            (
-                f"qfeat{d}",
-                plan.dst_types[d - 1],
-                lambda b: (
-                    batch.seeds if d == 1
-                    else batch.levels[d - 2].nids[spec.levels[d - 1][b].parent]
-                ),
-            ),
-        ):
-            if key not in gf:
-                continue
-            grad = np.asarray(gf[key])  # [P*rb, N, d_pad]
-            grad = grad.reshape(plan.num_shards, lp.rb, *grad.shape[1:])
-            per_type: Dict[str, list] = {}
-            for p in range(plan.num_shards):
-                for s in range(lp.rb):
-                    b = lp.slot_branch[p, s]
-                    if b < 0:
-                        continue
-                    t = types[b]
-                    if t not in learnable:
-                        continue
-                    dim = engine.learnable_dim
-                    per_type.setdefault(t, []).append(
-                        (get_ids(b), grad[p, s][:, :dim])
-                    )
-            for t, chunks in per_type.items():
-                ids = np.concatenate([c[0] for c in chunks])
-                gr = np.concatenate([c[1] for c in chunks])
-                engine.apply_row_grads(t, ids, gr)
+    return Heta(cfg).run()
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="ogbn-mag")
-    ap.add_argument("--scale", type=float, default=None)
-    ap.add_argument("--model", default="rgcn", choices=["rgcn", "rgat"])
-    ap.add_argument("--partitions", type=int, default=4)
-    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 2x4")
-    ap.add_argument("--batch-size", type=int, default=32)
-    ap.add_argument("--fanouts", default="4,3")
-    ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--cache-mb", type=int, default=4)
-    ap.add_argument("--naive", action="store_true", help="naive relation placement")
-    ap.add_argument("--hotness-only", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
+    from repro.api import Heta, add_config_args, config_from_args, executors
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_config_args(ap)
+    ap.add_argument("--naive", action="store_true",
+                    help="legacy alias for --placement naive")
+    ap.add_argument("--hotness-only", action="store_true",
+                    help="legacy alias for --cache-policy hotness")
     args = ap.parse_args()
-    mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
-    metrics = train_hgnn(
-        dataset=args.dataset, scale=args.scale, model=args.model,
-        num_partitions=args.partitions, mesh_shape=mesh_shape,
-        batch_size=args.batch_size,
-        fanouts=tuple(int(f) for f in args.fanouts.split(",")),
-        steps=args.steps, cache_mb=args.cache_mb,
-        hotness_only=args.hotness_only, naive_placement=args.naive,
-        seed=args.seed, log_every=1,
-    )
+    cfg = config_from_args(args)
+    if cfg.run.executor not in executors.available():
+        ap.error(f"unknown --executor {cfg.run.executor!r}; "
+                 f"available: {executors.available()}")
+    if args.naive:
+        cfg = cfg.updated(partition=dict(placement="naive"))
+    if args.hotness_only:
+        cfg = cfg.updated(cache=dict(policy="hotness"))
+    if args.log_every is None:
+        cfg = cfg.updated(run=dict(log_every=1))
+    metrics = Heta(cfg).run()
     print(json.dumps({k: v for k, v in metrics.items() if k != "losses"}, indent=1,
                      default=str))
     print(f"final loss: {metrics['losses'][-1]:.4f}")

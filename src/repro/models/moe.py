@@ -156,8 +156,9 @@ def moe_block_ep(
     x enters sharded [batch→dp, seq→model]; the surrounding attention blocks
     re-gather the sequence axis as needed (GSPMD inserts the collectives).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map_nocheck
 
     E, K = cfg.moe_experts, cfg.moe_topk
     mp = mesh.shape[model_axis]
@@ -200,7 +201,7 @@ def moe_block_ep(
             contrib.reshape(E * C, D))
         return xs + out.reshape(b, s, D)
 
-    return shard_map(
+    return shard_map_nocheck(
         body,
         mesh=mesh,
         in_specs=(
@@ -212,7 +213,6 @@ def moe_block_ep(
             P(dp_axes, model_axis, None),  # x: batch→dp, seq→model
         ),
         out_specs=P(dp_axes, model_axis, None),
-        check_vma=False,
     )(p["w1"], p["w3"], p["w2"], p["router"], p["norm"], x)
 
 

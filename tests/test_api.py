@@ -1,0 +1,244 @@
+"""Public API tests: HetaConfig validation + round-trips, session stage
+ordering, executor registry, and cross-executor loss parity through the
+uniform protocol (ISSUE 1 acceptance)."""
+
+import argparse
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CacheConfig,
+    DataConfig,
+    Heta,
+    HetaConfig,
+    HetaStageError,
+    ModelConfig,
+    PartitionConfig,
+    RunConfig,
+    add_config_args,
+    config_from_args,
+    executors,
+)
+from repro.launch.train import train_hgnn
+
+
+def tiny_config(executor="raf_spmd", **run_kw):
+    return HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                        batch_size=16),
+        partition=PartitionConfig(num_partitions=2),
+        model=ModelConfig(hidden=32),
+        cache=CacheConfig(cache_mb=2),
+        run=RunConfig(executor=executor, steps=3, lr=1e-2, seed=0, **run_kw),
+    )
+
+
+# --------------------------------------------------------------------------
+# config validation + round-trips
+# --------------------------------------------------------------------------
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="model"):
+        ModelConfig(model="gcn")
+    with pytest.raises(ValueError, match="placement"):
+        PartitionConfig(placement="randomly")
+    with pytest.raises(ValueError, match="fanouts"):
+        DataConfig(fanouts=())
+    with pytest.raises(ValueError, match="mesh_shape"):
+        RunConfig(mesh_shape=(0, 1))
+    with pytest.raises(ValueError, match="policy"):
+        CacheConfig(policy="lru")
+    with pytest.raises(ValueError, match="divisible"):
+        ModelConfig(hidden=30, num_heads=4)
+
+
+def test_config_defaults_match_legacy_train_hgnn():
+    """The config tree's defaults ARE the legacy kwargs-blob defaults."""
+    cfg = HetaConfig()
+    assert cfg.data.dataset == "ogbn-mag" and cfg.data.fanouts == (4, 3)
+    assert cfg.partition.num_partitions == 4 and cfg.partition.placement == "meta"
+    assert cfg.run.steps == 20 and cfg.run.lr == 5e-3
+    assert cfg.cache.cache_mb == 4 and not cfg.cache.hotness_only
+
+
+def test_flat_kwargs_round_trip():
+    cfg = HetaConfig.from_flat_kwargs(
+        dataset="freebase", scale=0.001, model="rgat", num_partitions=3,
+        mesh_shape=(1, 2), batch_size=8, fanouts=(3, 2), hidden=32, steps=4,
+        lr=1e-2, cache_mb=2, hotness_only=True, naive_placement=True,
+        learnable_dim=16, seed=3, log_every=2, executor="raf",
+    )
+    assert cfg.partition.placement == "naive"
+    assert cfg.cache.policy == "hotness"
+    assert cfg.data.fanouts == (3, 2) and cfg.run.mesh_shape == (1, 2)
+    assert HetaConfig.from_flat_kwargs(**cfg.to_flat_kwargs()) == cfg
+    with pytest.raises(TypeError, match="unknown train_hgnn kwarg"):
+        HetaConfig.from_flat_kwargs(batchsize=8)
+
+
+def test_dict_round_trip():
+    cfg = tiny_config("raf")
+    d = cfg.to_dict()
+    assert d["run"]["executor"] == "raf"
+    assert isinstance(d["data"]["fanouts"], list)  # JSON-friendly
+    assert HetaConfig.from_dict(d) == cfg
+    with pytest.raises(TypeError, match="unknown"):
+        HetaConfig.from_dict({"data": {"nope": 1}})
+
+
+def test_cli_round_trip():
+    """CLI flags are derived from the config fields; parsing them back
+    reproduces the config."""
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    args = ap.parse_args([
+        "--dataset", "freebase", "--fanouts", "3,2", "--mesh", "1x2",
+        "--partitions", "3", "--placement", "naive", "--hidden", "32",
+        "--cache-policy", "hotness", "--executor", "raf", "--steps", "4",
+    ])
+    cfg = config_from_args(args)
+    assert cfg.data.dataset == "freebase" and cfg.data.fanouts == (3, 2)
+    assert cfg.run.mesh_shape == (1, 2) and cfg.run.executor == "raf"
+    assert cfg.partition.num_partitions == 3
+    assert cfg.partition.placement == "naive"
+    assert cfg.cache.policy == "hotness" and cfg.run.steps == 4
+    # unset flags keep defaults
+    assert cfg.data.batch_size == DataConfig().batch_size
+
+
+def test_updated_rejects_unknown_sections_and_fields():
+    cfg = HetaConfig()
+    with pytest.raises(TypeError):
+        cfg.updated(runn=dict(steps=2))
+    with pytest.raises(TypeError):
+        cfg.updated(run=dict(stepss=2))
+    assert cfg.with_executor("raf").run.executor == "raf"
+
+
+# --------------------------------------------------------------------------
+# executor registry
+# --------------------------------------------------------------------------
+
+
+def test_registry_lookup():
+    assert set(executors.available()) >= {"vanilla", "raf", "raf_spmd"}
+    for name in ("vanilla", "raf", "raf_spmd"):
+        assert executors.get(name).name == name
+    with pytest.raises(KeyError, match="raf_spmd"):  # lists what IS available
+        executors.get("bogus_executor")
+
+
+def test_register_custom_executor():
+    @executors.register("_test_dummy")
+    class Dummy(executors.Executor):
+        pass
+
+    try:
+        assert "_test_dummy" in executors.available()
+        assert isinstance(executors.get("_test_dummy"), Dummy)
+    finally:
+        del executors._REGISTRY["_test_dummy"]
+
+
+# --------------------------------------------------------------------------
+# session lifecycle
+# --------------------------------------------------------------------------
+
+
+def test_stage_ordering_errors():
+    sess = Heta(tiny_config())
+    with pytest.raises(HetaStageError, match="compile"):
+        sess.fit()
+    with pytest.raises(HetaStageError, match="build_graph"):
+        sess.partition()
+    sess.build_graph()
+    with pytest.raises(HetaStageError, match="profile_and_cache"):
+        sess.compile()
+    part = sess.partition()
+    assert part.meta_local and part.num_partitions == 2
+    with pytest.raises(HetaStageError, match="compile"):
+        sess.step()
+
+
+def test_stagewise_equals_run():
+    """Stage-by-stage execution and the run() convenience are equivalent."""
+    sess = Heta(tiny_config())
+    sess.build_graph()
+    sess.partition()
+    sess.profile_and_cache()
+    sess.compile()
+    m1 = sess.fit()
+    m2 = Heta(tiny_config()).run()
+    np.testing.assert_allclose(m1["losses"], m2["losses"], rtol=0, atol=0)
+
+
+def test_unknown_executor_at_compile():
+    sess = Heta(tiny_config(executor="not_an_executor"))
+    sess.build_graph()
+    sess.partition()
+    sess.profile_and_cache()
+    with pytest.raises(KeyError, match="available"):
+        sess.compile()
+
+
+def test_partition_report_comm_accounting():
+    sess = Heta(tiny_config())
+    sess.build_graph()
+    part = sess.partition()
+    comm = sess.comm_report(bytes_per_elem=2)
+    # meta placement: exactly the Θ(B·hidden) root exchange (Prop 2)
+    assert comm["raf_meta"] == part.raf_bytes(16, 32, 2)
+    assert comm["raf_meta"] <= comm["raf_naive"]
+
+
+def test_evaluate_no_update():
+    sess = Heta(tiny_config("vanilla"))
+    sess.build_graph()
+    sess.partition()
+    sess.profile_and_cache()
+    sess.compile()
+    e1 = sess.evaluate()
+    e2 = sess.evaluate()
+    assert np.isfinite(e1["loss"]) and e1["loss"] == e2["loss"]  # no training
+    assert sess.losses == []
+
+
+# --------------------------------------------------------------------------
+# executor parity through the uniform protocol (acceptance criteria)
+# --------------------------------------------------------------------------
+
+
+def _losses(executor):
+    return np.asarray(Heta(tiny_config(executor)).run()["losses"])
+
+
+def test_parity_vanilla_vs_raf():
+    """Prop 1, trained: the simulated RAF executor follows the vanilla loss
+    curve step-for-step (identical seeds -> identical params and batches)."""
+    lv, lr_ = _losses("vanilla"), _losses("raf")
+    np.testing.assert_allclose(lv, lr_, atol=1e-5)
+
+
+def test_parity_raf_vs_raf_spmd():
+    """The production SPMD executor trains the same model as the simulated
+    one (stacked/padded representation + sparse cache updates)."""
+    lr_, ls = _losses("raf"), _losses("raf_spmd")
+    assert np.all(np.isfinite(ls))
+    np.testing.assert_allclose(lr_, ls, atol=5e-3)
+
+
+# --------------------------------------------------------------------------
+# the deprecated wrapper
+# --------------------------------------------------------------------------
+
+
+def test_train_hgnn_wrapper_result_keys():
+    m = train_hgnn(dataset="ogbn-mag", scale=0.002, model="rgcn",
+                   num_partitions=2, batch_size=16, fanouts=(3, 2), steps=2,
+                   cache_mb=2)
+    for key in ("losses", "step_time_s", "hit_rates", "partitioning",
+                "meta_local", "cache_allocation"):
+        assert key in m, key
+    assert len(m["losses"]) == 2 and m["meta_local"]

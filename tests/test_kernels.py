@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.gather_rows import gather_rows, gather_rows_ref

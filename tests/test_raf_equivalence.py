@@ -108,7 +108,6 @@ def test_prop1_spmd_stacked(model):
     arrays = raf_spmd.stack_batch(plan, b, tables_np)
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
 
     arr_specs = raf_spmd._array_specs(plan, ("data",), "model")
@@ -119,13 +118,12 @@ def test_prop1_spmd_stacked(model):
     def body(st, fe, re_):
         return raf_spmd.raf_spmd_forward(plan, st, {**fe, **re_}, "model", True)
 
-    root = shard_map(
+    root = raf_spmd.shard_map_nocheck(
         body,
         mesh=mesh,
         in_specs=(rel_specs, {k: arr_specs[k] for k in feats},
                   {k: arr_specs[k] for k in rest}),
         out_specs=P(("data",), None),
-        check_vma=False,
     )({k: v for k, v in stacks.items() if k != "head"}, feats, rest)
     logits = jax.nn.relu(root) @ stacks["head"]["w"] + stacks["head"]["b"]
     np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), atol=2e-5)

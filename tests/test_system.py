@@ -135,12 +135,13 @@ def test_checkpoint_roundtrip(tmp_path):
 
 def test_param_pspecs_divide_on_production_mesh():
     import repro.configs.all_archs  # noqa: F401
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.configs.base import ARCHS
+    from repro.launch.mesh import make_abstract_mesh
     from repro.launch.sharding import param_pspecs
     from repro.launch.specs import abstract_params
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     for name, cfg in sorted(ARCHS.items()):
         params = abstract_params(cfg)
         specs = param_pspecs(cfg, params, mesh)
@@ -161,12 +162,12 @@ def test_param_pspecs_divide_on_production_mesh():
 
 def test_cache_pspecs_long_context():
     import repro.configs.all_archs  # noqa: F401
-    from jax.sharding import AbstractMesh
     from repro.configs.base import ARCHS, INPUT_SHAPES
+    from repro.launch.mesh import make_abstract_mesh
     from repro.launch.sharding import cache_pspecs
     from repro.launch.specs import abstract_cache
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     cfg = ARCHS["jamba-1.5-large-398b"]
     cache = abstract_cache(cfg, INPUT_SHAPES["long_500k"])
     specs = cache_pspecs(cfg, cache, mesh)
