@@ -27,8 +27,8 @@ Or collapse all stages: ``result = Heta(cfg).run()``.
 Configuration
 =============
 
-:class:`HetaConfig` is a typed tree of five sections — ``data``,
-``partition``, ``model``, ``cache``, ``run`` — that round-trips through
+:class:`HetaConfig` is a typed tree of six sections — ``data``,
+``partition``, ``model``, ``cache``, ``run``, ``pipeline`` — that round-trips through
 nested dicts (``to_dict``/``from_dict``), the historical flat-kwargs surface
 (``from_flat_kwargs``/``to_flat_kwargs``) and auto-generated CLI flags
 (``add_config_args``/``config_from_args`` — what ``python -m
@@ -37,9 +37,13 @@ repro.launch.train`` uses, so flags are derived, never duplicated).
 Executors
 =========
 
-The three execution models all satisfy one four-method protocol
-(``build_plan / init_state / step / loss_and_metrics``) and are selected by
-name through the registry::
+The three execution models all satisfy one staged-step protocol
+(``build_plan / init_state / stage / step_staged / loss_and_metrics``, with
+``step`` as the serial ``stage``+``step_staged`` composition) and are
+selected by name through the registry.  The ``stage``/``step_staged`` split
+is the seam the async host pipeline (``repro.data``, enabled via
+``PipelineConfig``) uses to overlap sampling + feature staging with the
+device step::
 
     from repro.api import executors
     executors.available()                  # ("raf", "raf_spmd", "vanilla")
@@ -65,6 +69,7 @@ from repro.api.config import (
     HetaConfig,
     ModelConfig,
     PartitionConfig,
+    PipelineConfig,
     RunConfig,
     add_config_args,
     config_from_args,
@@ -79,6 +84,7 @@ __all__ = [
     "ModelConfig",
     "CacheConfig",
     "RunConfig",
+    "PipelineConfig",
     "Heta",
     "HetaStageError",
     "PartitionReport",

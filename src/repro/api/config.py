@@ -8,6 +8,8 @@ dataclasses mirroring the pipeline stages:
   * :class:`ModelConfig`     — HGNN architecture (wraps ``HGNNConfig``)
   * :class:`CacheConfig`     — miss-penalty cache budget + profiling knobs
   * :class:`RunConfig`       — executor, mesh, steps, lr, seed
+  * :class:`PipelineConfig`  — async host pipeline (prefetch depth, snapshot
+    staleness policy; see the ``repro.data`` package docstring)
 
 Three interchange formats round-trip losslessly:
 
@@ -33,6 +35,7 @@ __all__ = [
     "ModelConfig",
     "CacheConfig",
     "RunConfig",
+    "PipelineConfig",
     "HetaConfig",
     "add_config_args",
     "config_from_args",
@@ -41,6 +44,7 @@ __all__ = [
 PLACEMENTS = ("meta", "naive")
 CACHE_POLICIES = ("miss_penalty", "hotness")
 HGNN_MODELS = ("rgcn", "rgat", "hgt")
+SNAPSHOT_POLICIES = ("stale", "fresh")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +163,25 @@ class RunConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Async host pipeline: overlap sampling + feature staging with the
+    device step (see the ``repro.data`` package docstring for the design
+    and the staleness semantics of ``snapshot``)."""
+
+    enabled: bool = False
+    depth: int = 2  # prefetched batches kept ready ahead of the device step
+    snapshot: str = "stale"  # stale (max overlap) | fresh (bit-exact staging)
+
+    def __post_init__(self):
+        if self.depth < 1:
+            raise ValueError(f"depth must be >= 1, got {self.depth}")
+        if self.snapshot not in SNAPSHOT_POLICIES:
+            raise ValueError(
+                f"snapshot must be one of {SNAPSHOT_POLICIES}, got {self.snapshot!r}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
 class HetaConfig:
     """The full run description; the single argument of :class:`repro.api.Heta`."""
 
@@ -167,8 +190,9 @@ class HetaConfig:
     model: ModelConfig = dataclasses.field(default_factory=ModelConfig)
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
     run: RunConfig = dataclasses.field(default_factory=RunConfig)
+    pipeline: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
 
-    SECTIONS = ("data", "partition", "model", "cache", "run")
+    SECTIONS = ("data", "partition", "model", "cache", "run", "pipeline")
 
     # -- derived ------------------------------------------------------------
 
@@ -208,7 +232,8 @@ class HetaConfig:
             if name not in cls.SECTIONS:
                 raise TypeError(f"unknown config section {name!r}; sections: {cls.SECTIONS}")
             sec_cls = {"data": DataConfig, "partition": PartitionConfig,
-                       "model": ModelConfig, "cache": CacheConfig, "run": RunConfig}[name]
+                       "model": ModelConfig, "cache": CacheConfig,
+                       "run": RunConfig, "pipeline": PipelineConfig}[name]
             known = {f.name for f in dataclasses.fields(sec_cls)}
             bad = set(sec) - known
             if bad:
@@ -281,6 +306,9 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "lr": ("run", "lr", float, float),
     "seed": ("run", "seed", int, int),
     "log_every": ("run", "log_every", int, int),
+    "pipeline": ("pipeline", "enabled", bool, bool),
+    "prefetch_depth": ("pipeline", "depth", int, int),
+    "snapshot_policy": ("pipeline", "snapshot", str, str),
 }
 
 
@@ -289,13 +317,18 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
 # --------------------------------------------------------------------------
 
 # (section, field) -> (flag override, parse fn, help); fields not listed get
-# --<field-with-dashes> and their annotated scalar type.
-_CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Callable, str]] = {
+# --<field-with-dashes> and their annotated scalar type.  A parse fn of None
+# marks a boolean flag (BooleanOptionalAction).
+_CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("data", "fanouts"): ("--fanouts", _parse_fanouts, "per-hop fanouts, e.g. 4,3"),
     ("partition", "num_partitions"): ("--partitions", int, "number of meta-partitions"),
     ("partition", "placement"): ("--placement", str, f"relation placement {PLACEMENTS}"),
     ("cache", "policy"): ("--cache-policy", str, f"cache allocation policy {CACHE_POLICIES}"),
     ("run", "mesh_shape"): ("--mesh", _parse_mesh, "DATAxMODEL mesh, e.g. 2x4"),
+    ("pipeline", "enabled"): ("--pipeline", None, "async host pipeline on/off"),
+    ("pipeline", "depth"): ("--prefetch-depth", int, "pipeline prefetch depth"),
+    ("pipeline", "snapshot"): (
+        "--snapshot-policy", str, f"learnable-table snapshot policy {SNAPSHOT_POLICIES}"),
 }
 
 _SCALAR_PARSERS = {int: int, float: float, str: str, Optional[float]: float, bool: None}
@@ -307,13 +340,14 @@ def _cli_specs():
 
     for section, sec_cls in (("data", DataConfig), ("partition", PartitionConfig),
                              ("model", ModelConfig), ("cache", CacheConfig),
-                             ("run", RunConfig)):
+                             ("run", RunConfig), ("pipeline", PipelineConfig)):
         hints = typing.get_type_hints(sec_cls)
         for f in dataclasses.fields(sec_cls):
             default = getattr(sec_cls(), f.name)
             if (section, f.name) in _CLI_OVERRIDES:
                 flag, parse, help_ = _CLI_OVERRIDES[(section, f.name)]
-                yield section, f.name, flag, parse, False, f"{help_} (default: {default})"
+                yield (section, f.name, flag, parse, parse is None,
+                       f"{help_} (default: {default})")
                 continue
             hint = hints[f.name]
             if hint is bool:

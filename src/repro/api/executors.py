@@ -19,10 +19,24 @@ exposes graph / spec / assignment / engine / hgnn_cfg):
 
   ``build_plan(sess) -> plan``            static artifacts (jitted fns, plans)
   ``init_state(sess, plan) -> state``     parameters + optimizer state
+  ``stage(sess, plan, batch) -> arrays``
+      host-side staging: turn a :class:`SampledBatch` into the device-ready
+      arrays the step consumes (table snapshot / stack / shard for the SPMD
+      executor, ``batch_to_arrays`` for the dense ones).  Pure host work —
+      the async pipeline (``repro.data``) runs it in a producer thread for
+      batch *i+1* while batch *i* trains.
+  ``step_staged(sess, plan, state, batch, arrays) -> (state, loss, step_time_s)``
+      the device step on pre-staged arrays; ``step_time_s`` times the
+      compute + sparse-update region only, so reported step times stay
+      comparable with the historical ``train_hgnn`` accounting.  Executors
+      with a sparse-update stage record its share in
+      ``plan.last_update_s`` (the breakdown benchmark's update column).
   ``step(sess, plan, state, batch) -> (state, loss, step_time_s)``
-      one training step; ``step_time_s`` times the compute + sparse-update
-      region only (host batch staging excluded), so reported step times stay
-      comparable with the historical ``train_hgnn`` accounting
+      the serial composition ``step_staged(..., stage(...))`` — kept for
+      callers that don't pipeline.
+  ``stage_reads_tables(sess, plan) -> bool``
+      whether ``stage`` reads the learnable feature tables (drives the
+      pipeline's snapshot staleness policy; see ``repro.data``).
   ``loss_and_metrics(sess, plan, state, batch) -> (loss, metrics)``  eval only
 
 Register your own with ``@executors.register("name")``.
@@ -36,7 +50,7 @@ from typing import Dict, Tuple, Type
 
 import numpy as np
 
-__all__ = ["Executor", "register", "get", "available"]
+__all__ = ["Executor", "register", "get", "available", "apply_feature_grads"]
 
 _REGISTRY: Dict[str, Type["Executor"]] = {}
 
@@ -76,8 +90,21 @@ class Executor:
     def init_state(self, sess, plan):
         raise NotImplementedError
 
-    def step(self, sess, plan, state, batch):
+    def stage(self, sess, plan, batch):
         raise NotImplementedError
+
+    def step_staged(self, sess, plan, state, batch, arrays):
+        raise NotImplementedError
+
+    def step(self, sess, plan, state, batch):
+        """Serial stage + device step (the pre-pipeline surface)."""
+        return self.step_staged(sess, plan, state, batch,
+                                self.stage(sess, plan, batch))
+
+    def stage_reads_tables(self, sess, plan) -> bool:
+        """True when ``stage`` snapshots the learnable feature tables, i.e.
+        background staging can observe stale rows (see ``repro.data``)."""
+        return False
 
     def loss_and_metrics(self, sess, plan, state, batch):
         raise NotImplementedError
@@ -150,20 +177,22 @@ class VanillaExecutor(Executor):
             bundle["embed"] = _engine_embed(sess)
         return {"bundle": bundle, "opt": adam_init(bundle)}
 
-    def step(self, sess, plan, state, batch):
-        return _bundle_step(sess, plan, state, batch)
+    def stage(self, sess, plan, batch):
+        return plan.to_arrays(batch)
+
+    def step_staged(self, sess, plan, state, batch, arrays):
+        return _bundle_step_staged(sess, plan, state, arrays)
 
     def loss_and_metrics(self, sess, plan, state, batch):
         loss = float(plan.loss(state["bundle"], plan.to_arrays(batch)))
         return loss, {"loss": loss}
 
 
-def _bundle_step(sess, plan, state, batch):
-    """Shared dense-bundle step: staging (to_arrays) untimed, grad + Adam
-    timed — mirrors the historical step-time accounting."""
+def _bundle_step_staged(sess, plan, state, arrs):
+    """Shared dense-bundle device step on pre-staged arrays: grad + Adam
+    timed — mirrors the historical step-time accounting (staging excluded)."""
     from repro.optim.adam import adam_update
 
-    arrs = plan.to_arrays(batch)
     t0 = time.perf_counter()
     loss, grads = plan.grad(state["bundle"], arrs)
     bundle, opt = adam_update(sess.adam_cfg, state["bundle"], grads, state["opt"])
@@ -225,8 +254,11 @@ class RafSimExecutor(Executor):
             bundle["embed"] = _engine_embed(sess)
         return {"bundle": bundle, "opt": adam_init(bundle)}
 
-    def step(self, sess, plan, state, batch):
-        return _bundle_step(sess, plan, state, batch)
+    def stage(self, sess, plan, batch):
+        return plan.to_arrays(batch)
+
+    def step_staged(self, sess, plan, state, batch, arrays):
+        return _bundle_step_staged(sess, plan, state, arrays)
 
     def loss_and_metrics(self, sess, plan, state, batch):
         loss = float(plan.loss(state["bundle"], plan.to_arrays(batch)))
@@ -279,7 +311,13 @@ class RafSpmdExecutor(Executor):
         )
         return {"stacks": stacks, "opt": adam_init(stacks)}
 
-    def _stage(self, sess, plan, batch):
+    def stage(self, sess, plan, batch):
+        """Snapshot tables, stack the batch to branch-major arrays, shard.
+
+        When the pipeline pre-stages in a producer thread and learnable
+        tables are training, the snapshot may lag the device step by up to
+        ``pipeline.depth + 1`` steps — the documented ``"stale"`` policy
+        (``stage_reads_tables`` tells the stream when this applies)."""
         from repro.core import raf_spmd
 
         if not plan.learn_feats:
@@ -297,23 +335,28 @@ class RafSpmdExecutor(Executor):
             plan._stage_cache = (batch, arrays)
         return arrays
 
-    def step(self, sess, plan, state, batch):
-        arrays = self._stage(sess, plan, batch)
+    def stage_reads_tables(self, sess, plan) -> bool:
+        return bool(plan.learn_feats)
+
+    def step_staged(self, sess, plan, state, batch, arrays):
         t0 = time.perf_counter()
         if plan.learn_feats:
             stacks, opt, loss, gf = plan.step(state["stacks"], state["opt"], arrays)
-            _apply_feature_grads(sess.engine, plan.plan, batch, gf)
+            t1 = time.perf_counter()
+            apply_feature_grads(sess.engine, plan.plan, batch, gf)
+            plan.last_update_s = time.perf_counter() - t1
         else:
             stacks, opt, loss = plan.step(state["stacks"], state["opt"], arrays)
+            plan.last_update_s = 0.0
         loss = float(loss)
         return {"stacks": stacks, "opt": opt}, loss, time.perf_counter() - t0
 
     def loss_and_metrics(self, sess, plan, state, batch):
-        loss = float(plan.loss(state["stacks"], self._stage(sess, plan, batch)))
+        loss = float(plan.loss(state["stacks"], self.stage(sess, plan, batch)))
         return loss, {"loss": loss, "hit_rates": sess.engine.cache.hit_rates()}
 
 
-def _apply_feature_grads(engine, plan, batch, gf: Dict) -> None:
+def apply_feature_grads(engine, plan, batch, gf: Dict) -> None:
     """Route gradients of the gathered feature arrays back to the learnable
     tables (paper Fig. 3 step 5, via the §6 cache)."""
     learnable = set(engine.learnable_types)
@@ -353,3 +396,7 @@ def _apply_feature_grads(engine, plan, batch, gf: Dict) -> None:
                 ids = np.concatenate([c[0] for c in chunks])
                 gr = np.concatenate([c[1] for c in chunks])
                 engine.apply_row_grads(t, ids, gr)
+
+
+# deprecated alias (pre-pipeline name); use apply_feature_grads
+_apply_feature_grads = apply_feature_grads

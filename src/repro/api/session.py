@@ -93,6 +93,10 @@ class Heta:
         self.sampler = None
         self.losses: List[float] = []
         self.step_times: List[float] = []
+        self.host_times: List[float] = []  # per-step sample+stage seconds
+        # fit-loop overlap accounting (wall vs serial sum; see results())
+        self._fit_wall_s = 0.0
+        self._fit_serial_s = 0.0
         self._steps_done = 0
 
     # -- stage guards --------------------------------------------------------
@@ -269,11 +273,36 @@ class Heta:
 
         Recorded step times come from the executor's own timed region —
         compute + sparse update, host staging excluded — matching the
-        historical ``train_hgnn`` accounting."""
+        historical ``train_hgnn`` accounting.  Host sample+stage time is
+        recorded separately in ``host_times``."""
         self._require("state", "compile", "step")
+        t0 = time.perf_counter()
         if batch is None:
             batch = self._next_batch()
-        self.state, loss, dt = self.executor.step(self, self.plan, self.state, batch)
+        if not self._staged_protocol():
+            # legacy executor: only the composed step() is overridden
+            host_s = time.perf_counter() - t0
+            self.state, loss, dt = self.executor.step(
+                self, self.plan, self.state, batch)
+            self.host_times.append(host_s)
+            self.step_times.append(dt)
+            self.losses.append(loss)
+            self._steps_done += 1
+            return loss
+        arrays = self.executor.stage(self, self.plan, batch)
+        return self._consume(batch, arrays, time.perf_counter() - t0)
+
+    def _staged_protocol(self) -> bool:
+        """Whether the executor implements the staged-step seam (custom
+        executors registered before the pipeline may only override the
+        composed ``step``; they keep working on the serial path)."""
+        return type(self.executor).stage is not _executors.Executor.stage
+
+    def _consume(self, batch, arrays, host_s: float) -> float:
+        """Run the device step on pre-staged arrays and record the books."""
+        self.state, loss, dt = self.executor.step_staged(
+            self, self.plan, self.state, batch, arrays)
+        self.host_times.append(host_s)
         self.step_times.append(dt)
         self.losses.append(loss)
         self._steps_done += 1
@@ -281,20 +310,58 @@ class Heta:
 
     def fit(self, steps: Optional[int] = None) -> Dict:
         """Train for ``steps`` (default ``RunConfig.steps``); returns the
-        result dict (same keys the legacy ``train_hgnn`` returned)."""
+        result dict (same keys the legacy ``train_hgnn`` returned).
+
+        With ``pipeline.enabled`` the loop is driven by a
+        :class:`repro.data.SampleStream`: sampling + staging for batch
+        *i+1* runs in a background thread while batch *i* trains, under the
+        configured snapshot staleness policy.  Batches are bit-identical to
+        the serial path (per-batch RNG), and the stream is closed — thread
+        joined — on normal exit and on error."""
         self._require("state", "compile", "fit")
         steps = self.config.run.steps if steps is None else steps
         log_every = self.config.run.log_every
-        for _ in range(steps):
-            loss = self.step()
+
+        def logged(loss: float) -> None:
             i = self._steps_done - 1
             if log_every and i % log_every == 0:
                 print(f"step {i:4d} loss {loss:.4f} "
                       f"({self.step_times[-1]*1e3:.1f} ms)")
+
+        t_wall = time.perf_counter()
+        n0 = len(self.step_times)
+        if steps and self.config.pipeline.enabled:
+            if not self._staged_protocol():
+                raise HetaStageError(
+                    f"executor {self.executor.name!r} does not implement the "
+                    "staged-step protocol (stage/step_staged) required by "
+                    "pipeline.enabled; disable the pipeline or implement it"
+                )
+            from repro.data.sample_stream import SampleStream
+
+            pcfg = self.config.pipeline
+            start = self._steps_done
+            defer = (pcfg.snapshot == "fresh"
+                     and self.executor.stage_reads_tables(self, self.plan))
+            with SampleStream(
+                lambda i: self._batch_for_step(start + i),
+                lambda b: self.executor.stage(self, self.plan, b),
+                num_steps=steps, depth=pcfg.depth, defer_stage=defer,
+            ) as stream:
+                for batch, arrays, host_s in stream:
+                    logged(self._consume(batch, arrays, host_s))
+        else:
+            for _ in range(steps):
+                logged(self.step())
+        self._fit_wall_s += time.perf_counter() - t_wall
+        self._fit_serial_s += sum(self.host_times[n0:]) + sum(self.step_times[n0:])
         return self.results()
 
     def evaluate(self, num_batches: int = 1) -> Dict:
-        """Mean held-out-batch loss via the executor's eval path (no update)."""
+        """Mean held-out-batch loss via the executor's eval path (no update).
+
+        With ``pipeline.enabled``, batches are prefetched in the background
+        (eval staging never trains tables, so this is always bit-exact)."""
         from repro.graph.sampler import NeighborSampler
 
         self._require("state", "compile", "evaluate")
@@ -302,16 +369,30 @@ class Heta:
             self.graph, self.spec, self.config.data.batch_size,
             seed=self.config.run.seed + 9999,
         )
-        it = sampler.epoch(shuffle=True, seed=self.config.run.seed + 9999)
+        eval_seed = self.config.run.seed + 9999
+        n = min(num_batches, sampler.steps_per_epoch())
         losses, metrics = [], {}
-        for _ in range(num_batches):
-            try:
-                b = next(it)
-            except StopIteration:
-                break
-            loss, metrics = self.executor.loss_and_metrics(self, self.plan,
-                                                           self.state, b)
+
+        def consume(b):
+            loss, m = self.executor.loss_and_metrics(self, self.plan,
+                                                     self.state, b)
             losses.append(loss)
+            return m
+
+        if self.config.pipeline.enabled:
+            from repro.data.prefetch import Prefetcher
+
+            with Prefetcher(
+                lambda i: sampler.batch_at(i, epoch_seed=eval_seed),
+                depth=self.config.pipeline.depth, num_items=n,
+                name="eval-stream",
+            ) as pf:
+                for b in pf:
+                    metrics = consume(b)
+        else:
+            it = sampler.epoch(shuffle=True, seed=eval_seed)
+            for _ in range(n):
+                metrics = consume(next(it))
         return {"loss": float(np.mean(losses)), "num_batches": len(losses),
                 **{k: v for k, v in metrics.items() if k != "loss"}}
 
@@ -336,10 +417,17 @@ class Heta:
         timed = (self.step_times[2:] if len(self.step_times) > 4
                  else self.step_times) or [0.0]
         setup = sum(self.stage_times.values())
+        # overlap fraction: share of serial host+device work hidden by the
+        # pipeline (0 when serial: wall >= host + step by construction)
+        serial = self._fit_serial_s
+        overlap = max(0.0, 1.0 - self._fit_wall_s / serial) if serial > 0 else 0.0
         return {
             "losses": list(self.losses),
             "step_time_s": float(np.median(timed)),
+            "host_time_s": float(np.median(self.host_times or [0.0])),
             "setup_s": setup,
+            "pipeline": bool(self.config.pipeline.enabled),
+            "overlap_fraction": float(overlap),
             "hit_rates": self.engine.cache.hit_rates(),
             "partitioning": self.mp.summary(),
             "meta_local": self.meta_local,
@@ -349,13 +437,21 @@ class Heta:
 
     # -- internal ---------------------------------------------------------------
 
+    def _batch_for_step(self, s: int):
+        """The training batch of global step ``s`` — a pure function of
+        ``(config seed, s)``, so the serial loop and the async stream (which
+        materializes batches ahead, possibly out of thread) see identical
+        data.  Epoch ``e`` starts at step ``e * steps_per_epoch`` and
+        shuffles with the seed the legacy epoch-iterator used at that
+        boundary (``run.seed + 2 + first_step_of_epoch``)."""
+        E = self.sampler.steps_per_epoch()
+        if E == 0:
+            raise ValueError(
+                f"batch_size ({self.config.data.batch_size}) exceeds the "
+                f"number of train nodes ({len(self.graph.train_nodes)})"
+            )
+        e, i = divmod(s, E)
+        return self.sampler.batch_at(i, epoch_seed=self.config.run.seed + 2 + e * E)
+
     def _next_batch(self):
-        it = getattr(self, "_epoch_iter", None)
-        if it is None:
-            it = iter([])
-        try:
-            return next(it)
-        except StopIteration:
-            seed = self.config.run.seed + 2 + self._steps_done
-            self._epoch_iter = self.sampler.epoch(shuffle=True, seed=seed)
-            return next(self._epoch_iter)
+        return self._batch_for_step(self._steps_done)

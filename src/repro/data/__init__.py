@@ -1,3 +1,55 @@
-from repro.data.pipeline import SyntheticCorpus, TokenPipeline
+"""``repro.data`` — the unified async host-pipeline subsystem.
 
-__all__ = ["SyntheticCorpus", "TokenPipeline"]
+The breakdown benchmark (paper Fig. 10) shows host-side work — neighbor
+sampling plus feature staging (table snapshot → ``stack_batch`` →
+``shard_arrays``) — dominating step time once RAF has removed network
+traffic.  This package overlaps that host work with the device step, the
+DistDGLv2/HopGNN recipe, behind three pieces:
+
+:class:`~repro.data.prefetch.Prefetcher`
+    The shared double-buffered background producer (bounded queue, one
+    daemon thread, exception propagation into the consumer, ``close()``
+    joins).  Both :class:`TokenPipeline` (LM path) and
+    :class:`~repro.data.sample_stream.SampleStream` (HGNN path) sit on it.
+
+:class:`~repro.data.sample_stream.SampleStream`
+    Runs sample → snapshot → stack → shard in the producer thread and
+    yields ``(batch, arrays, host_seconds)`` ready for the device step.
+
+**The staged-step protocol.**  Executors (``repro.api.executors``) split
+one training step into two public methods::
+
+    stage(sess, plan, batch)                 -> arrays   # host staging
+    step_staged(sess, plan, state, batch, arrays)        # device step
+    step(sess, plan, state, batch)  ==  step_staged(..., stage(...))
+
+``stage`` is pure host work (safe to run in the producer thread for a
+*future* batch while the device trains the current one); ``step_staged``
+owns the timed compute + sparse-update region.  ``step`` remains the serial
+composition for callers that don't pipeline.
+
+**Determinism.**  ``NeighborSampler`` derives each batch's RNG from
+``(seed, epoch_seed, step)`` (the ``SyntheticCorpus`` trick), so
+``batch_at`` is a pure function of position and pipeline-on/off produce
+bit-identical batches regardless of prefetch depth or thread scheduling.
+
+**Snapshot staleness policy** (``PipelineConfig.snapshot``).  With frozen
+feature tables staging is time-invariant, so the pipeline is bit-exact.
+When learnable tables train (``ModelConfig.train_learnable`` with an
+executor whose staging reads them, e.g. ``raf_spmd``), staging batch *i+k*
+in the background observes tables before steps *i..i+k-1* wrote back:
+
+* ``"stale"`` (default) — stage in the producer against a snapshot that may
+  lag by at most ``depth + 1`` steps (the queue bound).  Maximum overlap;
+  losses track the serial path within optimization noise, the standard
+  bounded-staleness trade every async-pipeline system makes.
+* ``"fresh"`` — producer only samples; table-reading staging runs on the
+  consumer right before the step.  Bit-exact parity with the serial loop,
+  overlapping only the sampling stage.
+"""
+
+from repro.data.pipeline import SyntheticCorpus, TokenPipeline
+from repro.data.prefetch import Prefetcher
+from repro.data.sample_stream import SampleStream
+
+__all__ = ["SyntheticCorpus", "TokenPipeline", "Prefetcher", "SampleStream"]

@@ -10,11 +10,11 @@ swap a real tokenized dataset into (same iterator contract).
 from __future__ import annotations
 
 import dataclasses
-import queue
-import threading
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
+
+from repro.data.prefetch import Prefetcher
 
 __all__ = ["SyntheticCorpus", "TokenPipeline"]
 
@@ -49,8 +49,10 @@ class TokenPipeline:
 
     ``global_batch`` sequences per step are drawn round-robin from the
     corpus shards owned by this host (all of them in single-host runs); a
-    background thread keeps ``prefetch`` batches ready so the accelerator
-    never waits on generation (paper Fig. 3's sampler stage, LM flavor).
+    background :class:`~repro.data.prefetch.Prefetcher` keeps ``prefetch``
+    batches ready so the accelerator never waits on generation (paper
+    Fig. 3's sampler stage, LM flavor).  ``close()`` joins the producer
+    thread; iterating after ``close()`` raises instead of hanging.
     """
 
     def __init__(
@@ -71,11 +73,9 @@ class TokenPipeline:
             s for s in range(corpus.num_shards) if s % num_hosts == host_id
         ]
         self.place_fn = place_fn
-        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
-        self._stop = threading.Event()
         self._step = 0
-        self._thread = threading.Thread(target=self._producer, daemon=True)
-        self._thread.start()
+        self._prefetcher = Prefetcher(self._make, depth=prefetch,
+                                      name="token-pipeline")
 
     def _make(self, step: int) -> Dict[str, np.ndarray]:
         per_shard = -(-self.host_batch // len(self.host_shards))
@@ -89,32 +89,17 @@ class TokenPipeline:
             k: np.concatenate([p[k] for p in parts]) for k in parts[0]
         }
 
-    def _producer(self):
-        step = 0
-        while not self._stop.is_set():
-            batch = self._make(step)
-            step += 1
-            while not self._stop.is_set():
-                try:
-                    self._q.put(batch, timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
-
     def __iter__(self) -> Iterator[Dict]:
         return self
 
     def __next__(self) -> Dict:
-        batch = self._q.get()
+        batch = next(self._prefetcher)
         self._step += 1
         if self.place_fn is not None:
             return self.place_fn(batch)
         return batch
 
     def close(self):
-        self._stop.set()
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
+        """Stop and join the producer thread (idempotent); ``__next__``
+        afterwards raises :class:`RuntimeError` instead of hanging."""
+        self._prefetcher.close()

@@ -1,0 +1,168 @@
+"""Prefetcher — the shared double-buffered background producer.
+
+One thread, one bounded queue, and a strict lifecycle contract; every host
+pipeline in the repo (the LM :class:`~repro.data.pipeline.TokenPipeline`,
+the HGNN :class:`~repro.data.sample_stream.SampleStream`) is built on it
+rather than hand-rolling thread + queue management:
+
+  * items are produced by calling ``make(i)`` for ``i = 0, 1, 2, ...`` in a
+    daemon thread; up to ``depth`` finished items wait in the queue, so the
+    consumer (the device-step loop) never blocks on host work that could
+    have happened during the previous step;
+  * an exception inside ``make`` is captured and re-raised *in the
+    consumer* at the next ``__next__`` — background failures are never
+    silent and never hang the training loop;
+  * ``close()`` is idempotent, drains the queue, and **joins** the producer
+    thread; ``__next__`` after ``close()`` raises :class:`RuntimeError`
+    instead of blocking on an empty queue;
+  * a finite ``num_items`` ends iteration with ``StopIteration`` once the
+    producer is exhausted (infinite when ``None``).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+__all__ = ["Prefetcher"]
+
+_POLL_S = 0.05  # producer/consumer poll interval while checking for shutdown
+
+
+class _Done:
+    """Queue sentinel: producer finished all ``num_items`` items."""
+
+
+class _Failure:
+    """Queue sentinel: producer raised; carries the exception to re-raise."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class Prefetcher:
+    """Background producer of ``make(0), make(1), ...`` with bounded lookahead.
+
+    Iterator protocol; also a context manager (``close()`` on exit).
+    """
+
+    def __init__(
+        self,
+        make: Callable[[int], object],
+        depth: int = 2,
+        num_items: Optional[int] = None,
+        name: str = "prefetcher",
+    ):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if num_items is not None and num_items < 0:
+            raise ValueError(f"num_items must be >= 0, got {num_items}")
+        self._make = make
+        self.depth = depth
+        self.num_items = num_items
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._closed = False
+        self._thread = threading.Thread(target=self._producer, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    # -- producer side -------------------------------------------------------
+
+    def _producer(self):
+        i = 0
+        try:
+            while not self._stop.is_set():
+                if self.num_items is not None and i >= self.num_items:
+                    self._put(_Done())
+                    return
+                item = self._make(i)
+                i += 1
+                if not self._put(item):
+                    return  # closed while waiting for queue space
+        except BaseException as exc:  # noqa: BLE001 — delivered to consumer
+            self._put(_Failure(exc))
+
+    def _put(self, item) -> bool:
+        """Blocking put that aborts (returns False) once close() is called."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=_POLL_S)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    # -- consumer side -------------------------------------------------------
+
+    def __iter__(self) -> "Prefetcher":
+        return self
+
+    def __next__(self):
+        if self._closed:
+            raise RuntimeError("Prefetcher is closed")
+        while True:
+            try:
+                item = self._q.get(timeout=_POLL_S)
+            except queue.Empty:
+                if self._closed:
+                    raise RuntimeError("Prefetcher is closed") from None
+                if not self._thread.is_alive():
+                    # producer died without posting a sentinel (should not
+                    # happen, but never hang the training loop on it)
+                    raise RuntimeError(
+                        "Prefetcher producer exited unexpectedly"
+                    ) from None
+                continue
+            if isinstance(item, _Done):
+                self._q.put(item)  # keep the sentinel for repeated __next__
+                raise StopIteration
+            if isinstance(item, _Failure):
+                self.close()
+                raise item.exc
+            return item
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the producer, drain the queue, and join the thread.
+
+        Idempotent; after it returns ``__next__`` raises
+        :class:`RuntimeError`.  A producer stuck inside ``make`` longer than
+        ``timeout`` cannot be killed from here — that case is reported with
+        a :class:`RuntimeWarning` (the daemon thread exits at its next
+        queue/stop check and cannot re-enter ``make``).
+        """
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        # the producer may be blocked on a full queue; drain so its
+        # stop-aware put() observes the event and the thread exits
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            import warnings
+
+            warnings.warn(
+                f"{self._thread.name}: producer still inside make() after "
+                f"{timeout}s close timeout; it will exit at its next stop "
+                "check", RuntimeWarning, stacklevel=2,
+            )
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # best-effort: don't leak threads on GC
+        try:
+            self.close(timeout=0.1)
+        except Exception:
+            pass

@@ -1,0 +1,78 @@
+"""SampleStream — the async HGNN host pipeline (sample → snapshot → stack →
+shard in the background, device step in the foreground).
+
+Built on :class:`~repro.data.prefetch.Prefetcher`; see the ``repro.data``
+package docstring for the staged-step protocol and the staleness policy this
+implements.  The stream is deliberately decoupled from ``repro.api`` — it
+takes two callables:
+
+  ``make_batch(i)  -> batch``   deterministic batch for pipeline step ``i``
+                                (``NeighborSampler.batch_at`` under the hood,
+                                so prefetch order cannot change the data)
+  ``stage(batch)   -> arrays``  the executor's public host-staging seam
+                                (``Executor.stage``)
+
+and yields ``(batch, arrays, host_seconds)`` tuples, where ``host_seconds``
+is the sample+stage time actually spent on this item (measured inside the
+producer, so the consumer can compute the overlap fraction: host work that
+ran concurrently with the device step costs no wall time).
+
+``defer_stage=True`` implements the ``"fresh"`` snapshot policy: the
+producer only samples, and staging runs synchronously in ``__next__`` — used
+when staging reads learnable tables and the caller wants bit-exact parity
+with the serial loop instead of staleness-bounded overlap.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Tuple
+
+from repro.data.prefetch import Prefetcher
+
+__all__ = ["SampleStream"]
+
+
+class SampleStream:
+    def __init__(
+        self,
+        make_batch: Callable[[int], object],
+        stage: Callable[[object], object],
+        num_steps: Optional[int] = None,
+        depth: int = 2,
+        defer_stage: bool = False,
+    ):
+        self._stage = stage
+        self._defer = defer_stage
+
+        def produce(i: int) -> Tuple[object, object, float]:
+            t0 = time.perf_counter()
+            batch = make_batch(i)
+            arrays = None if defer_stage else stage(batch)
+            return batch, arrays, time.perf_counter() - t0
+
+        self._prefetcher = Prefetcher(produce, depth=depth,
+                                      num_items=num_steps,
+                                      name="sample-stream")
+
+    def __iter__(self) -> "SampleStream":
+        return self
+
+    def __next__(self) -> Tuple[object, object, float]:
+        batch, arrays, host_s = next(self._prefetcher)
+        if self._defer:
+            # "fresh" snapshot policy: stage on the consumer, against the
+            # current tables (this part of the host time is NOT overlapped)
+            t0 = time.perf_counter()
+            arrays = self._stage(batch)
+            host_s += time.perf_counter() - t0
+        return batch, arrays, host_s
+
+    def close(self) -> None:
+        self._prefetcher.close()
+
+    def __enter__(self) -> "SampleStream":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -13,6 +13,7 @@ traffic once the cache is warm.
 
 from __future__ import annotations
 
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -43,6 +44,11 @@ class EmbedEngine:
         self.learnable_dim = learnable_dim
         self.adam = adam or AdamConfig(lr=1e-2)
         self.steps = {t: 0 for t in graph.num_nodes}
+        # serializes table snapshots against sparse write-backs: the async
+        # pipeline snapshots from a producer thread while the training loop
+        # applies row grads, and the staleness contract promises whole-row
+        # states some step actually held — never torn mid-write rows
+        self.lock = threading.RLock()
         rng = np.random.default_rng(seed)
 
         self.learnable_types = {
@@ -70,14 +76,19 @@ class EmbedEngine:
         """Host view of a feature table.  For learnable types, cached rows
         are authoritative on device; this materializes a coherent snapshot
         (used by the test oracles and single-host executors)."""
-        tab = self.cache.host[ntype].copy()
-        c = self.cache.caches.get(ntype)
-        if c is not None:
-            tab[c.ids] = np.asarray(c.data)
-        return tab
+        with self.lock:
+            tab = self.cache.host[ntype].copy()
+            c = self.cache.caches.get(ntype)
+            if c is not None:
+                tab[c.ids] = np.asarray(c.data)
+            return tab
 
     def tables_snapshot(self) -> Dict[str, np.ndarray]:
-        return {t: self.table(t) for t in self.graph.num_nodes}
+        """Coherent snapshot of every table — atomic w.r.t. concurrent
+        :meth:`apply_row_grads` (the async pipeline's "stale" policy means a
+        snapshot may *lag*, never interleave a half-applied update)."""
+        with self.lock:
+            return {t: self.table(t) for t in self.graph.num_nodes}
 
     def fetch(self, ntype: str, nids: np.ndarray) -> jnp.ndarray:
         return self.cache.fetch(ntype, np.asarray(nids))
@@ -97,12 +108,13 @@ class EmbedEngine:
         uniq, inv = np.unique(nids, return_inverse=True)
         g = np.zeros((len(uniq), grads.shape[-1]), np.float32)
         np.add.at(g, inv, np.asarray(grads, np.float32).reshape(len(nids), -1))
-        rows, m, v = self.cache.fetch_states(ntype, uniq)
-        new_rows, new_m, new_v = sparse_adam_rows(
-            self.adam, rows, jnp.asarray(g), m, v, jnp.asarray(self.steps[ntype])
-        )
-        self.steps[ntype] += 1
-        self.cache.write_learnable(ntype, uniq, new_rows, new_m, new_v)
+        with self.lock:
+            rows, m, v = self.cache.fetch_states(ntype, uniq)
+            new_rows, new_m, new_v = sparse_adam_rows(
+                self.adam, rows, jnp.asarray(g), m, v, jnp.asarray(self.steps[ntype])
+            )
+            self.steps[ntype] += 1
+            self.cache.write_learnable(ntype, uniq, new_rows, new_m, new_v)
 
     # -- reporting ---------------------------------------------------------------
 

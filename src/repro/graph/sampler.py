@@ -169,6 +169,17 @@ class NeighborSampler:
     CSRs of the relations in ``spec`` — with meta-partitioning each partition
     owns complete mono-relation subgraphs for its relations, so its branches
     sample entirely locally (paper §4 "outer-hop features are local").
+
+    **Determinism model.**  Every batch's randomness is derived from
+    ``(seed, epoch_seed, step)`` via :func:`numpy.random.SeedSequence` — the
+    :class:`~repro.data.pipeline.SyntheticCorpus` trick — instead of one
+    shared mutating generator.  :meth:`batch_at` is therefore a *pure
+    function* of its position: any batch can be (re)materialized
+    independently, out of order, from another thread, or after a restart,
+    and the async sample stream produces bit-identical batches to the
+    serial loop.  Ad-hoc :meth:`sample_batch` calls without an explicit
+    ``rng`` draw from a per-instance call counter, so a fresh sampler
+    replayed through the same call sequence still reproduces itself.
     """
 
     def __init__(
@@ -182,14 +193,30 @@ class NeighborSampler:
         self.graph = graph
         self.spec = spec
         self.batch_size = int(batch_size)
-        self.rng = np.random.default_rng(seed)
+        self.seed = int(seed)
         self.drop_last = drop_last
+        self._draws = 0  # ad-hoc sample_batch() call counter
+        self._epochs_started = 0  # seedless epoch() call counter
+        self._order_cache: Dict[Tuple[bool, int], np.ndarray] = {}
         missing = [b.rel for b in spec.branches() if b.rel not in graph.relations]
         if missing:
             raise ValueError(f"graph lacks relations required by spec: {missing}")
 
-    def sample_batch(self, seeds: np.ndarray) -> SampledBatch:
+    def _rng_for(self, *key: int) -> np.random.Generator:
+        """Per-batch generator, a pure function of (seed, *key)."""
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed & 0xFFFFFFFF]
+                                   + [int(k) & 0xFFFFFFFF for k in key])
+        )
+
+    def sample_batch(
+        self, seeds: np.ndarray, rng: Optional[np.random.Generator] = None
+    ) -> SampledBatch:
         seeds = np.asarray(seeds, dtype=np.int64)
+        if rng is None:
+            # deterministic per call index (not shared mutable state)
+            rng = self._rng_for(0xAD0C, self._draws)
+            self._draws += 1
         levels: List[Level] = []
         prev_nids: List[np.ndarray] = [seeds]  # per-branch node arrays, prev level
         prev_mask: List[np.ndarray] = [np.ones(len(seeds), dtype=bool)]
@@ -200,7 +227,7 @@ class NeighborSampler:
             for b, spec in enumerate(branches):
                 csr = self.graph.relations[spec.rel]
                 idx, m = sample_neighbors(
-                    csr, prev_nids[spec.parent], prev_mask[spec.parent], f, self.rng
+                    csr, prev_nids[spec.parent], prev_mask[spec.parent], f, rng
                 )
                 nids[b] = idx.reshape(-1)
                 mask[b] = m.reshape(-1)
@@ -210,13 +237,46 @@ class NeighborSampler:
         labels = self.graph.labels[seeds]
         return SampledBatch(self.spec, seeds, labels, levels)
 
+    def epoch_order(self, shuffle: bool = True, seed: Optional[int] = None) -> np.ndarray:
+        """The (shuffled) train-node visit order of one epoch — pure in
+        ``(shuffle, seed)``, memoized per sampler."""
+        key = (bool(shuffle), int(seed or 0))
+        order = self._order_cache.get(key)
+        if order is None:
+            order = self.graph.train_nodes.copy()
+            if shuffle:
+                np.random.default_rng(seed or 0).shuffle(order)
+            if len(self._order_cache) >= 4:  # one live epoch + prefetch slack
+                self._order_cache.pop(next(iter(self._order_cache)))
+            self._order_cache[key] = order
+        return order
+
+    def batch_at(
+        self, step: int, epoch_seed: Optional[int] = None, shuffle: bool = True
+    ) -> SampledBatch:
+        """Materialize epoch batch ``step`` as a pure function of
+        ``(sampler seed, epoch_seed, step)`` — safe to call out of order,
+        concurrently, or after a restart (the async-pipeline contract)."""
+        if not 0 <= step < self.steps_per_epoch():
+            raise IndexError(f"step {step} outside epoch of {self.steps_per_epoch()}")
+        order = self.epoch_order(shuffle, epoch_seed)
+        seeds = order[step * self.batch_size : (step + 1) * self.batch_size]
+        return self.sample_batch(seeds, rng=self._rng_for(int(epoch_seed or 0), step))
+
     def epoch(self, shuffle: bool = True, seed: Optional[int] = None):
-        nodes = self.graph.train_nodes.copy()
-        if shuffle:
-            np.random.default_rng(seed or 0).shuffle(nodes)
-        for i in range(0, len(nodes) - (self.batch_size - 1 if self.drop_last else 0),
-                       self.batch_size):
-            yield self.sample_batch(nodes[i : i + self.batch_size])
+        """One epoch of batches (= ``batch_at(0..steps_per_epoch-1)``).
+
+        ``seed`` is the epoch seed: with per-batch RNG, the *same* seed
+        reproduces the *same* epoch bit-for-bit — pass a distinct seed per
+        epoch (as the session and profilers do) for fresh neighbor draws.
+        When ``seed`` is None, an internal per-sampler epoch counter is
+        used, so repeated ``epoch()`` calls vary (matching the pre-per-batch
+        expectation) while staying deterministic for a fresh sampler."""
+        if seed is None:
+            seed = 0x50C8 + self._epochs_started
+            self._epochs_started += 1
+        for i in range(self.steps_per_epoch()):
+            yield self.batch_at(i, epoch_seed=seed, shuffle=shuffle)
 
     def steps_per_epoch(self) -> int:
         n = len(self.graph.train_nodes)

@@ -242,3 +242,110 @@ def test_train_hgnn_wrapper_result_keys():
                 "meta_local", "cache_allocation"):
         assert key in m, key
     assert len(m["losses"]) == 2 and m["meta_local"]
+
+
+# --------------------------------------------------------------------------
+# async host pipeline (ISSUE 2 acceptance): parity with the serial path
+# --------------------------------------------------------------------------
+
+
+def _pipe_config(executor, train_learnable=True, **pipeline):
+    cfg = tiny_config(executor)
+    if not train_learnable:
+        cfg = cfg.updated(model=dict(train_learnable=False))
+    return cfg.updated(pipeline=dict(enabled=True, **pipeline))
+
+
+@pytest.mark.parametrize("executor", ["vanilla", "raf", "raf_spmd"])
+def test_pipeline_parity_frozen_features(executor):
+    """With frozen feature tables, staging is time-invariant: pipeline on/off
+    must produce bit-identical losses for every executor."""
+    off = Heta(tiny_config(executor).updated(
+        model=dict(train_learnable=False))).run()
+    on = Heta(_pipe_config(executor, train_learnable=False)).run()
+    assert off["losses"] == on["losses"]  # bit-identical
+    assert on["pipeline"] and not off["pipeline"]
+    assert "overlap_fraction" in on and on["overlap_fraction"] >= 0.0
+
+
+@pytest.mark.parametrize("executor", ["vanilla", "raf"])
+def test_pipeline_parity_learnable_dense_executors(executor):
+    """Dense executors carry learnable rows in the parameter bundle — their
+    staging never reads tables, so even learnable training is bit-exact."""
+    off = Heta(tiny_config(executor)).run()
+    on = Heta(_pipe_config(executor)).run()
+    assert off["losses"] == on["losses"]
+
+
+def test_pipeline_learnable_spmd_stale_within_tolerance():
+    """raf_spmd staging snapshots learnable tables; under the default
+    "stale" policy background staging may lag by <= depth+1 steps, so
+    losses track the serial path within optimization noise."""
+    off = Heta(tiny_config("raf_spmd")).run()
+    on = Heta(_pipe_config("raf_spmd")).run()
+    np.testing.assert_allclose(off["losses"], on["losses"], atol=5e-2)
+
+
+def test_pipeline_learnable_spmd_fresh_is_bit_exact():
+    """The "fresh" snapshot policy defers table-reading staging to the
+    consumer -> bit-exact parity even while learnable tables train."""
+    off = Heta(tiny_config("raf_spmd")).run()
+    on = Heta(_pipe_config("raf_spmd", snapshot="fresh")).run()
+    assert off["losses"] == on["losses"]
+
+
+def test_pipeline_evaluate_parity():
+    s_off = Heta(tiny_config("vanilla").updated(model=dict(train_learnable=False)))
+    s_on = Heta(_pipe_config("vanilla", train_learnable=False))
+    s_off.run(), s_on.run()
+    assert s_off.evaluate(3) == s_on.evaluate(3)
+
+
+def test_pipeline_config_round_trips():
+    cfg = HetaConfig().updated(pipeline=dict(enabled=True, depth=3,
+                                             snapshot="fresh"))
+    assert HetaConfig.from_dict(cfg.to_dict()) == cfg
+    assert HetaConfig.from_flat_kwargs(**cfg.to_flat_kwargs()) == cfg
+    with pytest.raises(ValueError, match="snapshot"):
+        HetaConfig().updated(pipeline=dict(snapshot="psychic"))
+    with pytest.raises(ValueError, match="depth"):
+        HetaConfig().updated(pipeline=dict(depth=0))
+    # derived CLI flags
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    args = ap.parse_args(["--pipeline", "--prefetch-depth", "4",
+                          "--snapshot-policy", "fresh"])
+    got = config_from_args(args)
+    assert got.pipeline.enabled and got.pipeline.depth == 4
+    assert got.pipeline.snapshot == "fresh"
+
+
+def test_legacy_step_only_executor_still_works():
+    """Executors registered before the staged-step seam (override step()
+    only) keep working on the serial path; the pipeline names them as the
+    reason it can't run."""
+
+    @executors.register("_test_legacy")
+    class Legacy(executors.Executor):
+        def build_plan(self, sess):
+            return executors.get("vanilla").build_plan(sess)
+
+        def init_state(self, sess, plan):
+            return executors.get("vanilla").init_state(sess, plan)
+
+        def step(self, sess, plan, state, batch):
+            return executors.get("vanilla").step(sess, plan, state, batch)
+
+        def loss_and_metrics(self, sess, plan, state, batch):
+            return executors.get("vanilla").loss_and_metrics(
+                sess, plan, state, batch)
+
+    try:
+        m = Heta(tiny_config("_test_legacy")).run()
+        assert len(m["losses"]) == 3 and np.all(np.isfinite(m["losses"]))
+        sess = Heta(tiny_config("_test_legacy").updated(
+            pipeline=dict(enabled=True)))
+        with pytest.raises(HetaStageError, match="staged-step"):
+            sess.run()
+    finally:
+        del executors._REGISTRY["_test_legacy"]
