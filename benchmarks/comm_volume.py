@@ -1,44 +1,60 @@
 """Paper §4 worked example — per-batch communication volume.
 
-Setting mirrors the paper: 2-layer R-GCN, hidden 64, fanout {25, 20}, batch
+Setting mirrors the paper: 2-layer HGNN, hidden 64, fanout {25, 20}, batch
 1024 training nodes, fp16 payloads, 2 partitions, MAG240M-like schema (paper
 feature dim 768, learnable dim 64).  The paper reports 92.3 MB (vanilla
 feature fetching) → 8.0 MB (RAF, naive relation placement) → 0.5 MB
 (RAF + meta-partitioning).  Bytes are counted exactly by the session's
-``comm_report`` stage — same accounting as the paper."""
+``comm_report`` stage — same accounting as the paper.
+
+The sweep runs all three HGNN models: RAF's exchange payload is the root
+partial [B, hidden] regardless of the relation module (Prop 2 — per-node-
+type parameters like hgt's change *what* each partition computes, never
+*what crosses the network*), so the per-model rows double as a regression
+check that the §4 accounting stays model-invariant.
+"""
 
 from __future__ import annotations
 
 from benchmarks._util import emit, net_time
 from repro.api import DataConfig, Heta, HetaConfig, ModelConfig, PartitionConfig, RunConfig
 
+MODELS = ("rgcn", "rgat", "hgt")
+
 
 def run(scale: float = 0.0005, batch: int = 1024, hidden: int = 64,
-        fanouts=(25, 20), seed: int = 0):
-    sess = Heta(HetaConfig(
-        data=DataConfig(dataset="mag240m", scale=scale, fanouts=fanouts,
-                        batch_size=batch),
-        partition=PartitionConfig(num_partitions=2),
-        model=ModelConfig(hidden=hidden, learnable_dim=64),
-        run=RunConfig(seed=seed),
-    ))
-    sess.build_graph()
-    sess.partition()
-    comm = sess.comm_report(bytes_per_elem=2)
+        fanouts=(25, 20), seed: int = 0, models=MODELS):
+    out = {}
+    for model in models:
+        sess = Heta(HetaConfig(
+            data=DataConfig(dataset="mag240m", scale=scale, fanouts=fanouts,
+                            batch_size=batch),
+            partition=PartitionConfig(num_partitions=2),
+            model=ModelConfig(model=model, hidden=hidden, learnable_dim=64),
+            run=RunConfig(seed=seed),
+        ))
+        sess.build_graph()
+        sess.partition()
+        comm = sess.comm_report(bytes_per_elem=2)
 
-    vanilla = comm["vanilla_feat"] + comm["vanilla_update"]
-    naive, meta = comm["raf_naive"], comm["raf_meta"]
+        vanilla = comm["vanilla_feat"] + comm["vanilla_update"]
+        naive, meta = comm["raf_naive"], comm["raf_meta"]
 
-    emit("comm_volume/vanilla_MB", net_time(vanilla) * 1e6,
-         f"{vanilla/1e6:.1f}MB (paper: 92.3MB at full scale)")
-    emit("comm_volume/raf_naive_MB", net_time(naive) * 1e6,
-         f"{naive/1e6:.2f}MB (paper: 8.0MB)")
-    emit("comm_volume/raf_meta_MB", net_time(meta) * 1e6,
-         f"{meta/1e6:.2f}MB (paper: 0.5MB)")
-    ratio = vanilla / max(meta, 1)
-    emit("comm_volume/reduction_x", 0.0, f"{ratio:.0f}x vanilla->meta")
-    assert meta < naive < vanilla
-    return {"vanilla": vanilla, "naive": naive, "meta": meta}
+        emit(f"comm_volume/{model}/vanilla_MB", net_time(vanilla) * 1e6,
+             f"{vanilla/1e6:.1f}MB (paper: 92.3MB at full scale)")
+        emit(f"comm_volume/{model}/raf_naive_MB", net_time(naive) * 1e6,
+             f"{naive/1e6:.2f}MB (paper: 8.0MB)")
+        emit(f"comm_volume/{model}/raf_meta_MB", net_time(meta) * 1e6,
+             f"{meta/1e6:.2f}MB (paper: 0.5MB)")
+        ratio = vanilla / max(meta, 1)
+        emit(f"comm_volume/{model}/reduction_x", 0.0, f"{ratio:.0f}x vanilla->meta")
+        assert meta < naive < vanilla
+        out[model] = {"vanilla": vanilla, "naive": naive, "meta": meta}
+    # Prop-2 invariance: every counter — vanilla feature fetch, naive RAF,
+    # meta RAF — is independent of the relation module
+    first = out[next(iter(out))]
+    assert all(out[m] == first for m in out), out
+    return out
 
 
 if __name__ == "__main__":

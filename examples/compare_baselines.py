@@ -7,32 +7,43 @@ ablation baselines the paper isolates —
   * full Heta: meta-partitioning + miss-penalty cache.
 
 All three are one HetaConfig apart — placement / cache policy are config
-strings, the executor protocol is shared.  Prints measured step time and
-cache hit rates.
+strings, the executor protocol is shared, and ``--model`` swaps the HGNN
+relation module (rgcn/rgat/hgt) without touching anything else.  Prints
+measured step time and cache hit rates.
 
-Run:  PYTHONPATH=src python examples/compare_baselines.py
+Run:  PYTHONPATH=src python examples/compare_baselines.py [--model hgt]
 """
+
+import argparse
 
 from repro.api import Heta, HetaConfig, DataConfig, ModelConfig, PartitionConfig, RunConfig
 
-BASE = HetaConfig(
-    data=DataConfig(dataset="ogbn-mag", scale=0.005, fanouts=(10, 10), batch_size=64),
-    partition=PartitionConfig(num_partitions=2),
-    model=ModelConfig(model="rgcn"),
-    run=RunConfig(executor="raf_spmd", steps=6),
-)
 
-CONFIGS = [
-    ("vanilla-like", BASE.updated(partition=dict(placement="naive"),
-                                  cache=dict(cache_mb=0))),
-    ("hotness-cache", BASE.updated(cache=dict(cache_mb=8, policy="hotness"))),
-    ("heta", BASE.updated(cache=dict(cache_mb=8))),
-]
+def configs(model: str, steps: int):
+    base = HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=0.005, fanouts=(10, 10),
+                        batch_size=64),
+        partition=PartitionConfig(num_partitions=2),
+        model=ModelConfig(model=model),
+        run=RunConfig(executor="raf_spmd", steps=steps),
+    )
+    return [
+        ("vanilla-like", base.updated(partition=dict(placement="naive"),
+                                      cache=dict(cache_mb=0))),
+        ("hotness-cache", base.updated(cache=dict(cache_mb=8, policy="hotness"))),
+        ("heta", base.updated(cache=dict(cache_mb=8))),
+    ]
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="rgcn", choices=("rgcn", "rgat", "hgt"),
+                    help="HGNN relation module to train")
+    ap.add_argument("--steps", type=int, default=6)
+    args = ap.parse_args(argv)
+    print(f"model={args.model}")
     print(f"{'config':<16} {'step ms':>9} {'meta-local':>10}  hit rates")
-    for name, cfg in CONFIGS:
+    for name, cfg in configs(args.model, args.steps):
         m = Heta(cfg).run()
         hits = {t: round(r, 2) for t, r in m["hit_rates"].items()}
         print(f"{name:<16} {m['step_time_s']*1e3:9.1f} "

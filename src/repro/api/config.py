@@ -43,8 +43,23 @@ __all__ = [
 
 PLACEMENTS = ("meta", "naive")
 CACHE_POLICIES = ("miss_penalty", "hotness")
+# the built-in relation modules; the authoritative registry is
+# ``repro.core.relmod`` (a test asserts the two agree)
 HGNN_MODELS = ("rgcn", "rgat", "hgt")
 SNAPSHOT_POLICIES = ("stale", "fresh")
+
+
+def _known_models() -> Tuple[str, ...]:
+    """Model names accepted by validation: the relation-module registry when
+    it is loaded, else the built-in list.  Consulting ``sys.modules`` (never
+    importing) keeps this module jax-free for cheap CLI parsing while letting
+    user-registered relation modules pass config validation."""
+    import sys
+
+    relmod = sys.modules.get("repro.core.relmod")
+    if relmod is not None:
+        return tuple(relmod.available_models())
+    return HGNN_MODELS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,7 +99,7 @@ class ModelConfig:
     the data (fanouts length, graph label count) when the session builds the
     underlying :class:`repro.core.hgnn.HGNNConfig`."""
 
-    model: str = "rgcn"  # rgcn | rgat | hgt
+    model: str = "rgcn"  # any registered relation module (rgcn | rgat | hgt built in)
     hidden: int = 64
     num_heads: int = 4
     learnable_dim: int = 64
@@ -93,8 +108,9 @@ class ModelConfig:
     train_learnable: bool = True
 
     def __post_init__(self):
-        if self.model not in HGNN_MODELS:
-            raise ValueError(f"model must be one of {HGNN_MODELS}, got {self.model!r}")
+        known = _known_models()
+        if self.model not in known:
+            raise ValueError(f"model must be one of {known}, got {self.model!r}")
         if self.hidden < 1 or self.hidden % self.num_heads:
             raise ValueError(
                 f"hidden ({self.hidden}) must be positive and divisible by "

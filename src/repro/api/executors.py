@@ -9,10 +9,14 @@ tests — iterate executors uniformly:
     full-batch forward (``hgnn_loss``).  The correctness oracle.
   * ``raf``      — simulated multi-partition RAF (paper §4 Alg. 1): explicit
     per-partition parameter dicts, partial aggregations summed in Python.
-    Supports all three HGNN models (rgcn/rgat/hgt).
   * ``raf_spmd`` — the production SPMD executor: relation branches stacked
     along the ``"model"`` mesh axis, learnable features updated sparsely
     through the §6 miss-penalty cache engine.
+
+All three run every registered HGNN model (rgcn/rgat/hgt built in) through
+the relation-module IR (``repro.core.relmod``, DESIGN.md §3) — executors
+consume each model's declared parameter scopes and ``aggregate``, so a new
+HGNN variant needs no executor changes.
 
 Protocol (all methods take the owning :class:`repro.api.Heta` session, which
 exposes graph / spec / assignment / engine / hgnn_cfg):

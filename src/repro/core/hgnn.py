@@ -10,9 +10,15 @@ embeddings live at layer (k - d); the relation-specific aggregation AGG_r maps
 child-branch embeddings to the parent's next layer, and AGG_all is a masked
 sum over sibling branches followed by a nonlinearity.
 
-Parameters are tied per (relation, layer) — one weight set per relation per
-layer, shared across metatree occurrences at the same layer (matches DGL's
-HeteroGraphConv).  Model variants:
+Everything model-specific lives in the relation-module IR
+(``repro.core.relmod``, DESIGN.md §3): each model declares its parameter
+leaves by *scope* — per-(relation, layer), per-(node-type, layer),
+per-(edge-type, layer) — plus one pure ``aggregate``.  This module only
+walks the metatree: it initializes whatever the declaration asks for
+(:func:`init_hgnn_params`) and calls the module's aggregate per branch
+(:func:`hgnn_forward`); there is no per-model branching anywhere.
+
+The built-in zoo (see ``relmod`` for the declarations):
 
   * R-GCN  — masked-mean neighbor aggregation + per-relation linear [39]
   * R-GAT  — per-relation multi-head attention [3]; attention queries are the
@@ -34,8 +40,18 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.relmod import (
+    RelContext,
+    ShapeCtx,
+    _glorot,
+    available_models,
+    get_relation_module,
+    init_module_params,
+    masked_mean,
+    masked_softmax,
+    resolve_params,
+)
 from repro.graph.hetgraph import Relation
 from repro.graph.sampler import BranchSpec, SampleSpec, SampledBatch
 
@@ -47,6 +63,8 @@ __all__ = [
     "hgnn_loss",
     "batch_to_arrays",
     "branch_layer",
+    "rel_context",
+    "agg_relation",
     "masked_mean",
     "masked_softmax",
 ]
@@ -56,7 +74,7 @@ Params = Dict
 
 @dataclasses.dataclass(frozen=True)
 class HGNNConfig:
-    model: str = "rgcn"  # rgcn | rgat | hgt
+    model: str = "rgcn"  # any name registered in repro.core.relmod
     hidden: int = 64
     num_layers: int = 2
     num_heads: int = 4
@@ -65,8 +83,11 @@ class HGNNConfig:
     dtype: str = "float32"
 
     def __post_init__(self):
-        if self.model not in ("rgcn", "rgat", "hgt"):
-            raise ValueError(f"unknown HGNN model {self.model!r}")
+        if self.model not in available_models():
+            raise ValueError(
+                f"unknown HGNN model {self.model!r}; registered relation "
+                f"modules: {available_models()}"
+            )
         if self.hidden % self.num_heads:
             raise ValueError("hidden must be divisible by num_heads")
 
@@ -78,31 +99,30 @@ class HGNNConfig:
     def jdtype(self):
         return jnp.dtype(self.dtype)
 
+    @property
+    def module(self):
+        """The relation module (IR declaration) this config names."""
+        return get_relation_module(self.model)
+
+    def shape_ctx(self, d_src: int, d_dst: int) -> ShapeCtx:
+        return ShapeCtx(self.hidden, self.num_heads, self.head_dim, d_src, d_dst)
+
 
 def branch_layer(spec: SampleSpec, depth: int) -> int:
     """HGNN layer index (1-based) a branch at ``depth`` feeds: layer k-d+1."""
     return spec.num_layers - depth + 1
 
 
-# --------------------------------------------------------------------------
-# masked reductions
-# --------------------------------------------------------------------------
-
-
-def masked_mean(h: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-    """h [..., f, d], mask [..., f] -> [..., d]; empty groups give zeros."""
-    w = mask.astype(h.dtype)
-    s = jnp.einsum("...fd,...f->...d", h, w)
-    return s / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1.0)
-
-
-def masked_softmax(e: jnp.ndarray, mask: jnp.ndarray, axis: int) -> jnp.ndarray:
-    """Softmax with masked slots excluded; all-masked groups give zeros."""
-    neg = jnp.asarray(jnp.finfo(e.dtype).min, e.dtype)
-    e = jnp.where(mask, e, neg)
-    e = e - jax.lax.stop_gradient(jnp.max(e, axis=axis, keepdims=True))
-    z = jnp.exp(e) * mask.astype(e.dtype)
-    return z / jnp.maximum(jnp.sum(z, axis=axis, keepdims=True), 1e-9)
+def rel_context(rel: Relation, dst_type: str, layer: int) -> RelContext:
+    """The :class:`RelContext` of one relation occurrence (scope keys derive
+    from it)."""
+    return RelContext(
+        rel_key=rel.key,
+        etype=rel.etype,
+        src_type=rel.src,
+        dst_type=dst_type,
+        layer=layer,
+    )
 
 
 # --------------------------------------------------------------------------
@@ -110,18 +130,12 @@ def masked_softmax(e: jnp.ndarray, mask: jnp.ndarray, axis: int) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 
-def _glorot(key, shape, dtype):
-    fan_in, fan_out = shape[-2], shape[-1]
-    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
-    return jax.random.uniform(key, shape, dtype, -lim, lim)
-
-
 def _rel_param_specs(
     cfg: HGNNConfig, spec: SampleSpec, feat_dims: Dict[str, int]
-) -> Dict[Tuple[str, int], Tuple[str, str, int, int]]:
-    """Unique (relation-key, layer) -> (src_type, dst_type, d_src, d_dst)."""
+) -> Dict[Tuple[str, int], Tuple[Relation, str, int, int]]:
+    """Unique (relation-key, layer) -> (relation, dst_type, d_src, d_dst)."""
     dims = lambda t: feat_dims.get(t, cfg.learnable_dim)
-    out: Dict[Tuple[str, int], Tuple[str, str, int, int]] = {}
+    out: Dict[Tuple[str, int], Tuple[Relation, str, int, int]] = {}
     parents: List[str] = [spec.target_type]
     for d, branches in enumerate(spec.levels, start=1):
         layer = branch_layer(spec, d)
@@ -130,7 +144,7 @@ def _rel_param_specs(
             dst_t = parents[b.parent]
             d_src = dims(b.rel.src) if layer == 1 else cfg.hidden
             d_dst = dims(dst_t)  # queries always come from input features
-            out.setdefault((b.rel.key, layer), (b.rel.src, dst_t, d_src, d_dst))
+            out.setdefault((b.rel.key, layer), (b.rel, dst_t, d_src, d_dst))
             nxt.append(b.rel.src)
         parents = nxt
     return out
@@ -143,73 +157,29 @@ def init_hgnn_params(
     feat_dims: Dict[str, int],
     restrict_rels: Optional[List[str]] = None,
 ) -> Params:
-    """Initialize per-(relation, layer) parameters plus the classifier head.
+    """Initialize the relation module's scoped parameters plus the classifier
+    head, walking every relation occurrence of the metatree.
 
     ``restrict_rels``: only materialize params for these relation keys (RAF
-    partitions hold only the parameters of their local relations, paper §4).
+    partitions hold only the parameters of their local relations, paper §4);
+    shared-scope leaves (per-node-type / per-edge-type) are created for
+    whatever those relations use.  Keys are derived per parameter *name*
+    (see ``relmod.init_leaf``), so a restricted init is bit-identical to the
+    full one — required for the Prop-1 equivalence tests.
     """
     dt = cfg.jdtype
-    specs = _rel_param_specs(cfg, spec, feat_dims)
+    module = cfg.module
+    occurrences = _rel_param_specs(cfg, spec, feat_dims)
     params: Params = {"rel": {}, "ntype": {}, "etype": {}}
-    nh, dh, H = cfg.num_heads, cfg.head_dim, cfg.hidden
-
-    # Keys are derived per parameter *name*, not by consumption order, so a
-    # partition-restricted init (RAF workers hold only their relations'
-    # parameters) produces bit-identical weights to the full init — required
-    # for the Prop-1 equivalence tests.
-    def _keys(name: str, n: int):
-        base = jax.random.fold_in(key, zlib.crc32(name.encode()))
-        return iter(jax.random.split(base, n))
-
-    for i, ((rk, layer), (src_t, dst_t, d_src, d_dst)) in enumerate(
-        sorted(specs.items())
-    ):
+    for (rk, layer), (rel, dst_t, d_src, d_dst) in sorted(occurrences.items()):
         if restrict_rels is not None and rk not in restrict_rels:
             continue
-        name = f"{rk}@{layer}"
-        kit = _keys(name, 8)
-        if cfg.model == "rgcn":
-            params["rel"][name] = {
-                "w": _glorot(next(kit), (d_src, H), dt),
-                "b": jnp.zeros((H,), dt),
-            }
-        elif cfg.model == "rgat":
-            params["rel"][name] = {
-                "w": _glorot(next(kit), (d_src, H), dt),
-                "w_dst": _glorot(next(kit), (d_dst, H), dt),
-                "a_src": _glorot(next(kit), (nh, dh), dt) * 0.1,
-                "a_dst": _glorot(next(kit), (nh, dh), dt) * 0.1,
-                "b": jnp.zeros((H,), dt),
-            }
-        else:  # hgt: per-type K/Q/V + per-etype att/msg
-            etype = rk.split("-")[1]
-            # per-type / per-etype params derive their keys from their own
-            # names (not the relation's) so shared params are bit-identical
-            # no matter which relation triggered their creation
-            for (kind, t, din) in (("kqv_src", src_t, d_src), ("q_dst", dst_t, d_dst)):
-                tkey = f"{t}@{layer}" if kind == "kqv_src" else f"{t}@{layer}:q"
-                if tkey not in params["ntype"]:
-                    tkit = _keys(tkey, 2)
-                    if kind == "kqv_src":
-                        params["ntype"][tkey] = {
-                            "wk": _glorot(next(tkit), (din, H), dt),
-                            "wv": _glorot(next(tkit), (din, H), dt),
-                        }
-                    else:
-                        params["ntype"][tkey] = {
-                            "wq": _glorot(next(tkit), (din, H), dt),
-                        }
-            ekey = f"{etype}@{layer}"
-            if ekey not in params["etype"]:
-                params["etype"][ekey] = {
-                    "w_att": _glorot(next(_keys(ekey, 2)), (nh, dh, dh), dt),
-                    "w_msg": _glorot(next(_keys(ekey + ":m", 1)), (nh, dh, dh), dt),
-                }
-            params["rel"][name] = {"_uses": (f"{src_t}@{layer}", f"{dst_t}@{layer}:q", ekey)}
+        ctx = rel_context(rel, dst_t, layer)
+        init_module_params(key, module, params, ctx, cfg.shape_ctx(d_src, d_dst), dt)
 
-    hk = _keys("head", 1)
+    hk = jax.random.fold_in(key, zlib.crc32(b"head/w"))
     params["head"] = {
-        "w": _glorot(next(hk), (H, cfg.num_classes), dt),
+        "w": _glorot(hk, (cfg.hidden, cfg.num_classes), dt),
         "b": jnp.zeros((cfg.num_classes,), dt),
     }
     return params
@@ -232,52 +202,16 @@ def init_embed_tables(
 
 
 # --------------------------------------------------------------------------
-# relation-specific aggregations (AGG_r)
+# relation-specific aggregation (AGG_r) — resolve + delegate to the module
 # --------------------------------------------------------------------------
 
 
-def _agg_rgcn(p, h_src, q_feats, mask):
-    # mean over neighbors, then per-relation linear
-    agg = masked_mean(h_src, mask)
-    return agg @ p["w"] + p["b"]
-
-
-def _agg_rgat(p, h_src, q_feats, mask, nh: int, dh: int):
-    n, f, _ = h_src.shape
-    z = (h_src @ p["w"]).reshape(n, f, nh, dh)
-    qz = (q_feats @ p["w_dst"]).reshape(n, nh, dh)
-    e_src = jnp.einsum("nfhd,hd->nfh", z, p["a_src"])
-    e_dst = jnp.einsum("nhd,hd->nh", qz, p["a_dst"])
-    e = jax.nn.leaky_relu(e_src + e_dst[:, None, :], negative_slope=0.2)
-    alpha = masked_softmax(e, mask[:, :, None], axis=1)
-    out = jnp.einsum("nfh,nfhd->nhd", alpha, z).reshape(n, nh * dh)
-    return out + p["b"]
-
-
-def _agg_hgt(p_rel, params, h_src, q_feats, mask, nh: int, dh: int):
-    src_key, dst_key, ekey = p_rel["_uses"]
-    pt, pq, pe = params["ntype"][src_key], params["ntype"][dst_key], params["etype"][ekey]
-    n, f, _ = h_src.shape
-    k = (h_src @ pt["wk"]).reshape(n, f, nh, dh)
-    v = (h_src @ pt["wv"]).reshape(n, f, nh, dh)
-    q = (q_feats @ pq["wq"]).reshape(n, nh, dh)
-    kw = jnp.einsum("nfhd,hde->nfhe", k, pe["w_att"])
-    att = jnp.einsum("nfhe,nhe->nfh", kw, q) / jnp.sqrt(jnp.asarray(dh, h_src.dtype))
-    alpha = masked_softmax(att, mask[:, :, None], axis=1)
-    msg = jnp.einsum("nfhd,hde->nfhe", v, pe["w_msg"])
-    return jnp.einsum("nfh,nfhe->nhe", alpha, msg).reshape(n, nh * dh)
-
-
 def agg_relation(
-    cfg: HGNNConfig, params: Params, rel_name: str, h_src, q_feats, mask
+    cfg: HGNNConfig, params: Params, ctx: RelContext, h_src, q_feats, mask
 ):
     """AGG_r: [n, f, d_src] x [n, d_dst_feat] x [n, f] -> [n, hidden]."""
-    p = params["rel"][rel_name]
-    if cfg.model == "rgcn":
-        return _agg_rgcn(p, h_src, q_feats, mask)
-    if cfg.model == "rgat":
-        return _agg_rgat(p, h_src, q_feats, mask, cfg.num_heads, cfg.head_dim)
-    return _agg_hgt(p, params, h_src, q_feats, mask, cfg.num_heads, cfg.head_dim)
+    module = cfg.module
+    return module.aggregate(resolve_params(module, params, ctx), h_src, q_feats, mask)
 
 
 # --------------------------------------------------------------------------
@@ -365,7 +299,6 @@ def hgnn_forward(
     for depth in range(k, 0, -1):
         branches = io[depth - 1]
         f = spec.fanouts[depth - 1]
-        n_parent_prev = None
         sums: List[Optional[jnp.ndarray]] = [None] * (
             len(io[depth - 2]) if depth > 1 else 1
         )
@@ -388,8 +321,8 @@ def hgnn_forward(
             h_src = h_nodes.reshape(n, f, -1)
             mask = batch.masks[depth - 1][b].reshape(n, f)
             q_feats = feats_of(depth - 1, bs.parent)
-            name = f"{bs.rel.key}@{branch_layer(spec, depth)}"
-            out = agg_relation(cfg, params, name, h_src, q_feats, mask)
+            ctx = rel_context(bs.rel, dst_t, branch_layer(spec, depth))
+            out = agg_relation(cfg, params, ctx, h_src, q_feats, mask)
             if sums[bs.parent] is None:
                 sums[bs.parent] = out
             else:

@@ -6,6 +6,11 @@ target-node batch entirely locally, and only the partials (and, in backprop,
 their gradients) cross partition boundaries.  The cross-relation aggregation
 (AGG_all = masked sum) plus loss runs after the exchange.
 
+Per-branch math comes from the relation-module IR (``repro.core.relmod``,
+DESIGN.md §3): a partition materializes exactly the scoped parameter groups
+its relations declare (``restrict_rels`` in ``init_hgnn_params``), so this
+executor is model-agnostic — any registered HGNN variant runs unchanged.
+
 Two executors:
 
   * :func:`raf_forward` / :func:`raf_loss` — *simulated* multi-partition

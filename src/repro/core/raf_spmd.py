@@ -13,6 +13,18 @@ This is the production realization of paper Alg. 1 on a TPU mesh:
   * the batch axis is sharded over (``"pod"``, ``"data"``) — the paper's
     intra-machine data parallelism.
 
+The stacking layer is **scope-driven** (relation-module IR, DESIGN.md §3):
+for every parameter scope the model declares — per-(relation, layer),
+per-(node-type, layer), per-(edge-type, layer) — the plan carries per-shard
+unique storage-key lists, per-slot index arrays, and shared-slot groups.
+``stack_params_from_dict`` packs each scope's parameters into ``[P, U, ...]``
+slabs, the per-level aggregation gathers per-slot leaves and ``vmap``s the
+module's *own* ``aggregate`` over the branch axis, and
+:func:`sync_stack_grads` all-reduces gradients of parameters that appear in
+more than one slot (HGT's per-node-type K/Q/V being the canonical case) so
+shard-local copies follow the exact dict-mode optimizer trajectory.  All
+registered models run here — there is no per-model branching.
+
 A ``local_combine=False`` mode emulates *naive* relation placement (branches
 scattered without metatree awareness): inner-level partial aggregations must
 then cross the model axis as full [R, N, hidden] psums — the paper's 8.0 MB
@@ -26,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +46,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compat import shard_map_nocheck
-from repro.core.hgnn import HGNNConfig, Params, masked_mean, masked_softmax
+from repro.core.hgnn import HGNNConfig, Params, rel_context
 from repro.core.raf import BranchAssignment
+from repro.core.relmod import SCOPE_CONTAINER, storage_key
 from repro.graph.sampler import SampledBatch, SampleSpec
 
 __all__ = [
@@ -44,6 +57,7 @@ __all__ = [
     "stack_params_from_dict",
     "stack_batch",
     "raf_spmd_forward",
+    "sync_stack_grads",
     "make_loss_fn",
     "make_train_step",
     "shard_map_nocheck",
@@ -64,7 +78,8 @@ class LevelPlan:
     slot_branch: np.ndarray  # [P, rb] original branch index, -1 for dummies
     parent_local: np.ndarray  # [P, rb] parent slot within the shard, level d-1
     parent_global: np.ndarray  # [P, rb] parent global slot (naive mode)
-    branch_u: np.ndarray  # [P, rb] index into the shard's layer-l param stack
+    # per scope the model declares: [P, rb] index into that scope's layer stack
+    slot_u: Dict[str, np.ndarray]
     valid: np.ndarray  # [P, rb] bool
 
     @property
@@ -79,13 +94,36 @@ class StackedPlan:
     num_shards: int
     d_pad: int
     levels: List[LevelPlan]
-    # per layer: list of (relation_key@layer) per shard slot — [P][U_l]
-    layer_params: Dict[int, List[List[str]]]
+    # (scope, layer) -> per-shard list of storage keys occupying stack slots
+    scope_keys: Dict[Tuple[str, int], List[List[str]]]
+    # (scope, layer) -> [P, U] global group id per slot (shared-param sync);
+    # slots holding the same storage key share an id, unused slots get
+    # singleton ids, so segment-summing gradients over groups is exact
+    slot_groups: Dict[Tuple[str, int], np.ndarray]
     src_types: List[List[str]]  # per level: src type per original branch
     dst_types: List[List[str]]  # per level: dst type per original branch
 
-    def u_of(self, layer: int) -> int:
-        return max(len(names) for names in self.layer_params[layer])
+    @property
+    def module(self):
+        return self.cfg.module
+
+    @property
+    def layers(self) -> List[int]:
+        return sorted({layer for (_, layer) in self.scope_keys})
+
+    def u_of(self, scope: str, layer: int) -> int:
+        return max(1, max(len(row) for row in self.scope_keys[(scope, layer)]))
+
+    def has_shared(self, scope: str, layer: int) -> bool:
+        """Whether any storage key occupies more than one stack slot (then
+        gradients need cross-slot summing to match the dict-mode trajectory)."""
+        rows = self.scope_keys[(scope, layer)]
+        keys = [nm for row in rows for nm in row]
+        return len(keys) != len(set(keys))
+
+    def layer_shape_ctx(self, layer: int):
+        d_in = self.d_pad if layer == 1 else self.cfg.hidden
+        return self.cfg.shape_ctx(d_src=d_in, d_dst=self.d_pad)
 
 
 def build_plan(
@@ -94,11 +132,7 @@ def build_plan(
     cfg: HGNNConfig,
     feat_dims: Dict[str, int],
 ) -> StackedPlan:
-    if cfg.model not in ("rgcn", "rgat"):
-        raise NotImplementedError(
-            "SPMD RAF executor supports rgcn/rgat; HGT uses the simulated "
-            "executor (per-node-type parameter structure; see DESIGN.md)"
-        )
+    module = cfg.module
     Pn = assignment.num_partitions
     k = spec.num_layers
     dims = lambda t: feat_dims.get(t, cfg.learnable_dim)
@@ -119,7 +153,7 @@ def build_plan(
     # group branches by owner, pad to uniform per-shard counts
     slot_of: List[Dict[int, Tuple[int, int]]] = []  # per level: branch -> (p, slot)
     level_plans: List[LevelPlan] = []
-    layer_params: Dict[int, List[List[str]]] = {}
+    scope_keys: Dict[Tuple[str, int], List[List[str]]] = {}
     for d in range(1, k + 1):
         layer = k - d + 1
         owners = assignment.owner[d - 1]
@@ -137,15 +171,20 @@ def build_plan(
                 smap[b] = (p, s)
         slot_of.append(smap)
 
-        # per-shard unique (rel@layer) param list
-        names = layer_params.setdefault(layer, [[] for _ in range(Pn)])
-        branch_u = np.zeros((Pn, rb), dtype=np.int64)
-        for p in range(Pn):
-            for s, b in enumerate(by_p[p]):
-                nm = f"{spec.levels[d - 1][b].rel.key}@{layer}"
-                if nm not in names[p]:
-                    names[p].append(nm)
-                branch_u[p, s] = names[p].index(nm)
+        # per-scope, per-shard unique storage-key lists + per-slot indices
+        slot_u: Dict[str, np.ndarray] = {}
+        for scope in module.scopes:
+            names = scope_keys.setdefault((scope, layer), [[] for _ in range(Pn)])
+            u_arr = np.zeros((Pn, rb), dtype=np.int64)
+            for p in range(Pn):
+                for s, b in enumerate(by_p[p]):
+                    bs = spec.levels[d - 1][b]
+                    ctx = rel_context(bs.rel, dst_types[d - 1][b], layer)
+                    nm = storage_key(scope, ctx)
+                    if nm not in names[p]:
+                        names[p].append(nm)
+                    u_arr[p, s] = names[p].index(nm)
+            slot_u[scope] = u_arr
 
         # parent mapping
         parent_local = np.zeros((Pn, rb), dtype=np.int64)
@@ -172,17 +211,37 @@ def build_plan(
                 slot_branch=slot_branch,
                 parent_local=parent_local,
                 parent_global=parent_global,
-                branch_u=branch_u,
+                slot_u=slot_u,
                 valid=valid,
             )
         )
+
+    # shared-slot groups: same storage key (any shard, any slot) -> same id;
+    # unused padding slots get fresh singleton ids
+    slot_groups: Dict[Tuple[str, int], np.ndarray] = {}
+    for (scope, layer), names in scope_keys.items():
+        U = max(1, max(len(row) for row in names))
+        uniq = sorted({nm for row in names for nm in row})
+        gid = {nm: i for i, nm in enumerate(uniq)}
+        groups = np.zeros((Pn, U), dtype=np.int64)
+        nxt = len(uniq)
+        for p in range(Pn):
+            for u in range(U):
+                if u < len(names[p]):
+                    groups[p, u] = gid[names[p][u]]
+                else:
+                    groups[p, u] = nxt
+                    nxt += 1
+        slot_groups[(scope, layer)] = groups
+
     return StackedPlan(
         spec=spec,
         cfg=cfg,
         num_shards=Pn,
         d_pad=d_pad,
         levels=level_plans,
-        layer_params=layer_params,
+        scope_keys=scope_keys,
+        slot_groups=slot_groups,
         src_types=src_types,
         dst_types=dst_types,
     )
@@ -193,44 +252,29 @@ def build_plan(
 # --------------------------------------------------------------------------
 
 
-def _pad_rows(w: np.ndarray, rows: int) -> np.ndarray:
-    out = np.zeros((rows,) + w.shape[1:], dtype=w.dtype)
-    out[: w.shape[0]] = w
-    return out
-
-
 def stack_params_from_dict(plan: StackedPlan, params: Params) -> Dict:
     """Pack dict-form parameters (``init_hgnn_params``) into per-layer stacks
-    [P, U_l, ...] with input dims padded to ``d_pad`` at the leaf layer.
-    Padding rows are zero, so padded feature slots contribute nothing and the
+    ``{f"layer{l}": {leaf: [P, U_scope, ...]}}`` with input dims padded to
+    the plan's common widths (``d_pad`` for feature-facing axes).  Padding
+    regions are zero, so padded feature slots contribute nothing and the
     stacked forward is bit-equivalent to the dict forward."""
-    cfg = plan.cfg
-    k = plan.spec.num_layers
+    module = plan.module
     stacks: Dict = {}
-    for layer, names_per_p in plan.layer_params.items():
-        U = plan.u_of(layer)
-        d_in = plan.d_pad if layer == 1 else cfg.hidden
-        get = lambda nm: jax.tree.map(np.asarray, params["rel"][nm])
-        w = np.zeros((plan.num_shards, U, d_in, cfg.hidden), np.float32)
-        b = np.zeros((plan.num_shards, U, cfg.hidden), np.float32)
-        extra = {}
-        if cfg.model == "rgat":
-            extra = {
-                "w_dst": np.zeros((plan.num_shards, U, plan.d_pad, cfg.hidden), np.float32),
-                "a_src": np.zeros((plan.num_shards, U, cfg.num_heads, cfg.head_dim), np.float32),
-                "a_dst": np.zeros((plan.num_shards, U, cfg.num_heads, cfg.head_dim), np.float32),
-            }
-        for p, names in enumerate(names_per_p):
-            for u, nm in enumerate(names):
-                pr = get(nm)
-                w[p, u] = _pad_rows(pr["w"], d_in)
-                b[p, u] = pr["b"]
-                if cfg.model == "rgat":
-                    extra["w_dst"][p, u] = _pad_rows(pr["w_dst"], plan.d_pad)
-                    extra["a_src"][p, u] = pr["a_src"]
-                    extra["a_dst"][p, u] = pr["a_dst"]
-        stacks[f"layer{layer}"] = {"w": jnp.asarray(w), "b": jnp.asarray(b),
-                                   **{k2: jnp.asarray(v) for k2, v in extra.items()}}
+    for layer in plan.layers:
+        sc = plan.layer_shape_ctx(layer)
+        entry = {}
+        for spec_ in module.specs:
+            names = plan.scope_keys[(spec_.scope, layer)]
+            U = plan.u_of(spec_.scope, layer)
+            padded = tuple(spec_.shape(sc))
+            arr = np.zeros((plan.num_shards, U) + padded, np.float32)
+            container = params[SCOPE_CONTAINER[spec_.scope]]
+            for p, row in enumerate(names):
+                for u, nm in enumerate(row):
+                    w = np.asarray(container[nm][spec_.name])
+                    arr[(p, u) + tuple(slice(0, s) for s in w.shape)] = w
+            entry[spec_.name] = jnp.asarray(arr)
+        stacks[f"layer{layer}"] = entry
     # copy (not alias) the head: the train step donates its inputs, and an
     # aliased caller-owned array would be deleted out from under the caller
     stacks["head"] = jax.tree.map(lambda a: jnp.array(a, copy=True), params["head"])
@@ -302,38 +346,28 @@ def stack_batch(
 # --------------------------------------------------------------------------
 
 
-def _agg_level(cfg: HGNNConfig, lp: LevelPlan, stacks, h_in, qfeat, mask, shard_idx):
+def _agg_level(plan: StackedPlan, lp: LevelPlan, stacks, h_in, qfeat, mask, shard_idx):
     """Relation-specific aggregation for one level on one shard.
+
+    Gathers each declared leaf's per-slot parameters through the plan's
+    scope index arrays and ``vmap``s the relation module's ``aggregate``
+    over the shard's branch slots.
 
     h_in  [rb, n_d, d_in] -> out [rb, n_prev, hidden]
     """
+    module = plan.module
     layer = stacks[f"layer{lp.layer}"]
-    u = jnp.asarray(lp.branch_u)[shard_idx]  # [rb]
     valid = jnp.asarray(lp.valid)[shard_idx]  # [rb]
-    w = layer["w"][0][u]  # [rb, d_in, H]
-    b = layer["b"][0][u]  # [rb, H]
+    p_slots = {
+        s.name: layer[s.name][0][jnp.asarray(lp.slot_u[s.scope])[shard_idx]]
+        for s in module.specs
+    }  # each [rb, ...]
     rb, n_d, d_in = h_in.shape
     f = lp.fanout
     n_prev = n_d // f
     hg = h_in.reshape(rb, n_prev, f, d_in)
     mg = mask.reshape(rb, n_prev, f)
-    if cfg.model == "rgcn":
-        agg = masked_mean(hg, mg)  # [rb, n_prev, d_in]
-        out = jnp.einsum("rnd,rdh->rnh", agg, w) + b[:, None, :]
-    else:  # rgat
-        nh, dh = cfg.num_heads, cfg.head_dim
-        w_dst = layer["w_dst"][0][u]
-        a_src = layer["a_src"][0][u]
-        a_dst = layer["a_dst"][0][u]
-        z = jnp.einsum("rnfd,rdh->rnfh", hg, w).reshape(rb, n_prev, f, nh, dh)
-        qz = jnp.einsum("rnd,rdh->rnh", qfeat, w_dst).reshape(rb, n_prev, nh, dh)
-        e = jnp.einsum("rnfhd,rhd->rnfh", z, a_src) + jnp.einsum(
-            "rnhd,rhd->rnh", qz, a_dst
-        )[:, :, None, :]
-        e = jax.nn.leaky_relu(e, negative_slope=0.2)
-        alpha = masked_softmax(e, mg[..., None], axis=2)
-        out = jnp.einsum("rnfh,rnfhd->rnhd", alpha, z).reshape(rb, n_prev, nh * dh)
-        out = out + b[:, None, :]
+    out = jax.vmap(module.aggregate)(p_slots, hg, qfeat, mg)  # [rb, n_prev, H]
     return out * valid[:, None, None].astype(out.dtype)
 
 
@@ -346,7 +380,7 @@ def raf_spmd_forward(
 ):
     """Per-shard body (runs inside shard_map).  Returns root embedding
     [B_local, hidden] (replicated over the model axis after the psum)."""
-    cfg, k = plan.cfg, plan.spec.num_layers
+    k = plan.spec.num_layers
     shard_idx = jax.lax.axis_index(model_axis)
     child: Optional[jnp.ndarray] = None
     for d in range(k, 0, -1):
@@ -356,7 +390,7 @@ def raf_spmd_forward(
         else:
             h_in = jax.nn.relu(child)
         out = _agg_level(
-            cfg, lp, stacks, h_in, arrays[f"qfeat{d}"], arrays[f"mask{d}"], shard_idx
+            plan, lp, stacks, h_in, arrays[f"qfeat{d}"], arrays[f"mask{d}"], shard_idx
         )
         if d == 1:
             partial = jnp.sum(out, axis=0)  # shard's partial aggregation [B, H]
@@ -381,6 +415,43 @@ def raf_spmd_forward(
 
 
 # --------------------------------------------------------------------------
+# shared-parameter gradient synchronization
+# --------------------------------------------------------------------------
+
+
+def sync_stack_grads(plan: StackedPlan, grads: Dict) -> Dict:
+    """Sum gradients across stack slots holding the *same* parameter and
+    broadcast the sum back to every copy.
+
+    A storage key can occupy several slots — a node type feeding relations
+    owned by different shards (HGT's K/Q/V), or one relation sampled into
+    branches assigned to different partitions.  ``stack_params_from_dict``
+    seeds all copies identically; summed (hence identical) gradients keep
+    the per-copy Adam trajectories identical too, so the stacked run follows
+    the dict-form run exactly — Prop 1 extends through training.  Under
+    GSPMD the segment-sum over the ``[P·U]`` group axis lowers to the
+    cross-shard collective this semantically is; scopes with no sharing are
+    left untouched (no collective emitted).
+    """
+    scope_of = {s.name: s.scope for s in plan.module.specs}
+    out = dict(grads)
+    for layer in plan.layers:
+        entry = dict(grads[f"layer{layer}"])
+        for leaf, g in entry.items():
+            scope = scope_of[leaf]
+            if not plan.has_shared(scope, layer):
+                continue
+            groups = plan.slot_groups[(scope, layer)]
+            seg = jnp.asarray(groups.reshape(-1))
+            nseg = int(groups.max()) + 1
+            flat = g.reshape((groups.size,) + g.shape[2:])
+            summed = jax.ops.segment_sum(flat, seg, num_segments=nseg)
+            entry[leaf] = summed[seg].reshape(g.shape)
+        out[f"layer{layer}"] = entry
+    return out
+
+
+# --------------------------------------------------------------------------
 # jitted train step
 # --------------------------------------------------------------------------
 
@@ -397,16 +468,16 @@ def _array_specs(plan: StackedPlan, data_axes, model_axis):
 
 
 def _stack_specs(plan: StackedPlan):
+    """Sharding specs for the parameter stacks: every leaf is sharded along
+    the leading (shard) axis, replicated elsewhere — derived from the
+    module's declared shapes, no per-model cases."""
     specs = {}
-    for layer in plan.layer_params:
-        entry = {"w": P("model", None, None, None), "b": P("model", None, None)}
-        if plan.cfg.model == "rgat":
-            entry.update(
-                w_dst=P("model", None, None, None),
-                a_src=P("model", None, None, None),
-                a_dst=P("model", None, None, None),
-            )
-        specs[f"layer{layer}"] = entry
+    for layer in plan.layers:
+        sc = plan.layer_shape_ctx(layer)
+        specs[f"layer{layer}"] = {
+            s.name: P("model", *([None] * (1 + len(s.shape(sc)))))
+            for s in plan.module.specs
+        }
     specs["head"] = {"w": P(None, None), "b": P(None)}
     return specs
 
@@ -492,7 +563,9 @@ def make_train_step(
 
     The shard_map body computes the root embedding (ending in the RAF psum);
     the classifier head + loss run outside under GSPMD, so gradients of the
-    replicated head are exact.  With ``learn_feats=True`` the step also
+    replicated head are exact.  Stack gradients pass through
+    :func:`sync_stack_grads` before Adam, so parameters shared across shard
+    slots stay consistent copies.  With ``learn_feats=True`` the step also
     returns gradients w.r.t. the gathered feature arrays (``qfeat*``/``hfeat*``)
     for the embed engine's sparse row updates.
     """
@@ -507,6 +580,7 @@ def make_train_step(
         def step(stacks, opt_state, arrays):
             feats, rest = split_arrays(arrays)
             loss, grads = grad_fn(stacks, feats, rest)
+            grads = sync_stack_grads(plan, grads)
             stacks, opt_state = adam_update(adam_cfg, stacks, grads, opt_state)
             return stacks, opt_state, loss
 
@@ -518,6 +592,7 @@ def make_train_step(
     def step_feats(stacks, opt_state, arrays):
         feats, rest = split_arrays(arrays)
         loss, (gs, gf) = grad_fn2(stacks, feats, rest)
+        gs = sync_stack_grads(plan, gs)
         stacks, opt_state = adam_update(adam_cfg, stacks, gs, opt_state)
         return stacks, opt_state, loss, gf
 

@@ -1,0 +1,372 @@
+"""Relation-module IR — HGNN variants as pure declarations (DESIGN.md §3).
+
+Heta's core factorization (paper Eq. 1) says *any* HGNN layer is a set of
+independent relation-specific aggregations (AGG_r) followed by one
+cross-relation aggregation (AGG_all).  Everything model-specific therefore
+fits in a small declarative unit, the **relation module**:
+
+  * a tuple of :class:`ParamSpec` — each parameter leaf named, shaped, and
+    *scoped*: does one copy exist per (relation, layer), per (source
+    node-type, layer), per (destination node-type, layer) or per
+    (edge-type, layer)?
+  * one pure ``aggregate(params, h_src, q_feats, mask)`` — AGG_r for a
+    single relation occurrence, written for unbatched ``[n, f, d]`` inputs.
+
+Every executor consumes the declaration instead of branching on model-name
+strings:
+
+  * the dict-form executors (``vanilla``, simulated ``raf``) resolve scoped
+    storage keys per relation occurrence and call ``aggregate`` directly;
+  * the SPMD executor (``raf_spmd``) stacks each scope's parameters into
+    per-shard slabs, gathers per-slot leaves via the plan's index arrays and
+    ``jax.vmap``s the *same* ``aggregate`` over the branch axis.
+
+Adding an HGNN variant is: subclass :class:`RelationModule`, declare specs,
+write ``aggregate``, decorate with :func:`register_relation_module` — all
+three executors (and the parameter stacking, sharding specs and shared-
+gradient synchronization) follow from the declaration.
+
+Scope -> storage layout inside the parameter dict (``init_hgnn_params``):
+
+  ================  =============  =============================
+  scope             container      storage key
+  ================  =============  =============================
+  ``relation``      ``rel``        ``{rel_key}@{layer}``
+  ``src_type``      ``ntype``      ``{src_type}@{layer}``
+  ``dst_type``      ``ntype``      ``{dst_type}@{layer}:q``
+  ``etype``         ``etype``      ``{etype}@{layer}``
+  ================  =============  =============================
+
+RNG keys are derived from the *storage key + leaf name*, never from
+consumption order, so a partition-restricted init (RAF workers materialize
+only their relations' parameters, plus the shared-scope parameters those
+relations use) is bit-identical to the full init — the property the Prop-1
+equivalence tests rest on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, Dict, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SCOPES",
+    "SCOPE_CONTAINER",
+    "ShapeCtx",
+    "ParamSpec",
+    "RelContext",
+    "RelationModule",
+    "register_relation_module",
+    "get_relation_module",
+    "available_models",
+    "storage_key",
+    "resolve_params",
+    "init_module_params",
+    "init_leaf",
+    "masked_mean",
+    "masked_softmax",
+]
+
+SCOPES = ("relation", "src_type", "dst_type", "etype")
+
+# scope -> top-level container inside the parameter dict
+SCOPE_CONTAINER = {
+    "relation": "rel",
+    "src_type": "ntype",
+    "dst_type": "ntype",
+    "etype": "etype",
+}
+
+
+# --------------------------------------------------------------------------
+# masked reductions (shared by the built-in aggregates and the executors)
+# --------------------------------------------------------------------------
+
+
+def masked_mean(h: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """h [..., f, d], mask [..., f] -> [..., d]; empty groups give zeros."""
+    w = mask.astype(h.dtype)
+    s = jnp.einsum("...fd,...f->...d", h, w)
+    return s / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1.0)
+
+
+def masked_softmax(e: jnp.ndarray, mask: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Softmax with masked slots excluded; all-masked groups give zeros."""
+    neg = jnp.asarray(jnp.finfo(e.dtype).min, e.dtype)
+    e = jnp.where(mask, e, neg)
+    e = e - jax.lax.stop_gradient(jnp.max(e, axis=axis, keepdims=True))
+    z = jnp.exp(e) * mask.astype(e.dtype)
+    return z / jnp.maximum(jnp.sum(z, axis=axis, keepdims=True), 1e-9)
+
+
+# --------------------------------------------------------------------------
+# the IR
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCtx:
+    """Dims a :class:`ParamSpec` shape function may depend on.
+
+    ``d_src`` is the aggregation-input dim of the relation's source nodes at
+    this layer (their feature dim at layer 1, ``hidden`` above); ``d_dst``
+    is the destination nodes' *input-feature* dim (attention queries always
+    come from input features — the tree-sampling variant, DESIGN.md §7).
+    """
+
+    hidden: int
+    num_heads: int
+    head_dim: int
+    d_src: int
+    d_dst: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter leaf of a relation module.
+
+    ``shape`` maps a :class:`ShapeCtx` to the leaf's shape; dims derived
+    from ``d_src``/``d_dst`` are the ones the SPMD executor zero-pads when
+    stacking heterogeneous feature dims to a common ``d_pad``.
+    """
+
+    name: str
+    scope: str  # one of SCOPES
+    shape: Callable[[ShapeCtx], Tuple[int, ...]]
+    init: str = "glorot"  # glorot | zeros
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if self.scope not in SCOPES:
+            raise ValueError(f"unknown param scope {self.scope!r}; scopes: {SCOPES}")
+        if self.init not in ("glorot", "zeros"):
+            raise ValueError(f"unknown init {self.init!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RelContext:
+    """One relation occurrence: everything scope keys may derive from."""
+
+    rel_key: str
+    etype: str
+    src_type: str
+    dst_type: str
+    layer: int
+
+
+def storage_key(scope: str, ctx: RelContext) -> str:
+    """Storage key of a ``scope``-scoped parameter group for ``ctx``."""
+    if scope == "relation":
+        return f"{ctx.rel_key}@{ctx.layer}"
+    if scope == "src_type":
+        return f"{ctx.src_type}@{ctx.layer}"
+    if scope == "dst_type":
+        return f"{ctx.dst_type}@{ctx.layer}:q"
+    if scope == "etype":
+        return f"{ctx.etype}@{ctx.layer}"
+    raise ValueError(f"unknown param scope {scope!r}")
+
+
+class RelationModule:
+    """Base relation module: declared parameter specs + one pure AGG_r.
+
+    ``aggregate`` takes the *resolved* flat leaf dict (``{spec.name:
+    array}``) and unbatched inputs:
+
+        h_src   [n, f, d_src]   neighbor embeddings, f per destination
+        q_feats [n, d_dst]      destination nodes' input features
+        mask    [n, f]          True for real (non-padded) neighbors
+
+    and returns ``[n, hidden]``.  It must be pure and shape-polymorphic in
+    ``n``/``f`` — the SPMD executor ``vmap``s it over a stacked branch axis,
+    so hyperparameters like head counts must be read off parameter shapes,
+    not captured state.
+    """
+
+    name: str = "?"
+    specs: Tuple[ParamSpec, ...] = ()
+
+    @property
+    def scopes(self) -> Tuple[str, ...]:
+        """Scopes this module uses, in spec order, deduplicated."""
+        return tuple(dict.fromkeys(s.scope for s in self.specs))
+
+    def aggregate(self, p: Dict[str, jnp.ndarray], h_src, q_feats, mask):
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        leaves = ", ".join(f"{s.name}:{s.scope}" for s in self.specs)
+        return f"<RelationModule {self.name} [{leaves}]>"
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_MODULES: Dict[str, RelationModule] = {}
+
+
+def register_relation_module(cls: Type[RelationModule]) -> Type[RelationModule]:
+    """Class decorator: instantiate + register under ``cls.name``."""
+    mod = cls()
+    if mod.name == "?":
+        raise ValueError(f"{cls.__name__} must set a `name` before registration")
+    if mod.name in _MODULES:
+        raise ValueError(
+            f"relation module {mod.name!r} is already registered "
+            f"({type(_MODULES[mod.name]).__name__}); pick a distinct name"
+        )
+    names = [s.name for s in mod.specs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"module {mod.name!r} declares duplicate leaf names: {names}")
+    _MODULES[mod.name] = mod
+    return cls
+
+
+def get_relation_module(name: str) -> RelationModule:
+    if name not in _MODULES:
+        raise KeyError(
+            f"unknown HGNN model {name!r}; registered: {available_models()}"
+        )
+    return _MODULES[name]
+
+
+def available_models() -> Tuple[str, ...]:
+    return tuple(sorted(_MODULES))
+
+
+# --------------------------------------------------------------------------
+# initialization + resolution
+# --------------------------------------------------------------------------
+
+
+def _glorot(key, shape, dtype):
+    fan_in, fan_out = shape[-2], shape[-1]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def init_leaf(key: jax.Array, spec: ParamSpec, skey: str, sc: ShapeCtx, dtype):
+    """Initialize one leaf; the RNG key is a pure function of the *names*
+    (storage key + leaf), so creation order never changes values."""
+    shape = tuple(spec.shape(sc))
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    k = jax.random.fold_in(key, zlib.crc32(f"{skey}/{spec.name}".encode()))
+    w = _glorot(k, shape, dtype)
+    return w * spec.scale if spec.scale != 1.0 else w
+
+
+def init_module_params(
+    key: jax.Array,
+    module: RelationModule,
+    params: Dict,
+    ctx: RelContext,
+    sc: ShapeCtx,
+    dtype,
+) -> None:
+    """Materialize (idempotently) the parameters ``module`` needs for one
+    relation occurrence into the scoped containers of ``params``.  Shared-
+    scope groups already present are left untouched, so any relation of a
+    partition-restricted init reproduces exactly the leaves the full init
+    would have given them."""
+    for spec in module.specs:
+        container = params[SCOPE_CONTAINER[spec.scope]]
+        skey = storage_key(spec.scope, ctx)
+        group = container.setdefault(skey, {})
+        if spec.name not in group:
+            group[spec.name] = init_leaf(key, spec, skey, sc, dtype)
+
+
+def resolve_params(
+    module: RelationModule, params: Dict, ctx: RelContext
+) -> Dict[str, jnp.ndarray]:
+    """Flat ``{leaf name: array}`` view of one relation occurrence's
+    parameters, gathered across the scoped containers."""
+    return {
+        s.name: params[SCOPE_CONTAINER[s.scope]][storage_key(s.scope, ctx)][s.name]
+        for s in module.specs
+    }
+
+
+# --------------------------------------------------------------------------
+# the built-in model zoo
+# --------------------------------------------------------------------------
+
+
+@register_relation_module
+class RGCNModule(RelationModule):
+    """R-GCN [39] — masked-mean neighbor aggregation + per-relation linear."""
+
+    name = "rgcn"
+    specs = (
+        ParamSpec("w", "relation", lambda c: (c.d_src, c.hidden)),
+        ParamSpec("b", "relation", lambda c: (c.hidden,), init="zeros"),
+    )
+
+    def aggregate(self, p, h_src, q_feats, mask):
+        return masked_mean(h_src, mask) @ p["w"] + p["b"]
+
+
+@register_relation_module
+class RGATModule(RelationModule):
+    """R-GAT [3] — per-relation multi-head attention; queries are the
+    destination nodes' *input* features (tree-sampling variant, DESIGN.md
+    §7)."""
+
+    name = "rgat"
+    specs = (
+        ParamSpec("w", "relation", lambda c: (c.d_src, c.hidden)),
+        ParamSpec("w_dst", "relation", lambda c: (c.d_dst, c.hidden)),
+        ParamSpec("a_src", "relation", lambda c: (c.num_heads, c.head_dim), scale=0.1),
+        ParamSpec("a_dst", "relation", lambda c: (c.num_heads, c.head_dim), scale=0.1),
+        ParamSpec("b", "relation", lambda c: (c.hidden,), init="zeros"),
+    )
+
+    def aggregate(self, p, h_src, q_feats, mask):
+        nh, dh = p["a_src"].shape
+        n, f, _ = h_src.shape
+        z = (h_src @ p["w"]).reshape(n, f, nh, dh)
+        qz = (q_feats @ p["w_dst"]).reshape(n, nh, dh)
+        e_src = jnp.einsum("nfhd,hd->nfh", z, p["a_src"])
+        e_dst = jnp.einsum("nhd,hd->nh", qz, p["a_dst"])
+        e = jax.nn.leaky_relu(e_src + e_dst[:, None, :], negative_slope=0.2)
+        alpha = masked_softmax(e, mask[:, :, None], axis=1)
+        out = jnp.einsum("nfh,nfhd->nhd", alpha, z).reshape(n, nh * dh)
+        return out + p["b"]
+
+
+@register_relation_module
+class HGTModule(RelationModule):
+    """HGT [21] — per-node-type K/Q/V projections + per-edge-type attention
+    and message matrices (simplified: no residual/prior-μ tricks).  The
+    per-node-type scopes are exactly the parameter-sharing structure the
+    SPMD stacking layer carries as ``src_type``/``dst_type`` index arrays."""
+
+    name = "hgt"
+    specs = (
+        ParamSpec("wk", "src_type", lambda c: (c.d_src, c.hidden)),
+        ParamSpec("wv", "src_type", lambda c: (c.d_src, c.hidden)),
+        ParamSpec("wq", "dst_type", lambda c: (c.d_dst, c.hidden)),
+        ParamSpec("w_att", "etype", lambda c: (c.num_heads, c.head_dim, c.head_dim)),
+        ParamSpec("w_msg", "etype", lambda c: (c.num_heads, c.head_dim, c.head_dim)),
+    )
+
+    def aggregate(self, p, h_src, q_feats, mask):
+        nh, dh, _ = p["w_att"].shape
+        n, f, _ = h_src.shape
+        k = (h_src @ p["wk"]).reshape(n, f, nh, dh)
+        v = (h_src @ p["wv"]).reshape(n, f, nh, dh)
+        q = (q_feats @ p["wq"]).reshape(n, nh, dh)
+        kw = jnp.einsum("nfhd,hde->nfhe", k, p["w_att"])
+        att = jnp.einsum("nfhe,nhe->nfh", kw, q) / jnp.sqrt(
+            jnp.asarray(dh, h_src.dtype)
+        )
+        alpha = masked_softmax(att, mask[:, :, None], axis=1)
+        msg = jnp.einsum("nfhd,hde->nfhe", v, p["w_msg"])
+        return jnp.einsum("nfh,nfhe->nhe", alpha, msg).reshape(n, nh * dh)

@@ -238,6 +238,40 @@ def test_sample_stream_shutdown_on_exception():
     assert not stream._prefetcher._thread.is_alive()  # clean shutdown
 
 
+# --------------------------------------------------------------------------
+# pipeline parity across HGNN models (the relation-module IR runs every
+# model on every executor — hgt × raf_spmd being the per-node-type case)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model,executor", [
+    ("rgat", "raf_spmd"),
+    ("hgt", "raf_spmd"),
+    ("hgt", "raf"),
+])
+def test_pipeline_parity_models(model, executor):
+    """With frozen feature tables staging is time-invariant, so pipeline
+    on/off must be bit-identical for every (model, executor) pair."""
+    from repro.api import (DataConfig, Heta, HetaConfig, ModelConfig,
+                           PartitionConfig, RunConfig)
+
+    def cfg(pipelined):
+        c = HetaConfig(
+            data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                            batch_size=16),
+            partition=PartitionConfig(num_partitions=2),
+            model=ModelConfig(model=model, hidden=32, train_learnable=False),
+            run=RunConfig(executor=executor, steps=3, lr=1e-2, seed=0),
+        )
+        return c.updated(pipeline=dict(enabled=True)) if pipelined else c
+
+    off = Heta(cfg(False)).run()
+    on = Heta(cfg(True)).run()
+    assert off["losses"] == on["losses"]  # bit-identical
+    assert on["pipeline"] and not off["pipeline"]
+    assert np.all(np.isfinite(on["losses"]))
+
+
 def test_seedless_epochs_vary_but_replay_deterministically():
     """epoch() without a seed draws fresh samples each call (multi-epoch
     training loops keep sampling variance), yet a fresh sampler replays the
