@@ -1,18 +1,37 @@
-"""Shared benchmark utilities: timers, CSV rows, and the α-β cost model used
-to project communication volumes to the paper's testbed wall-clock."""
+"""Shared benchmark utilities: timers, CSV rows, the machine-readable
+record sink behind ``BENCH_kernels.json``, and the α-β cost model used to
+project communication volumes to the paper's testbed wall-clock."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List
 
 ROWS: List[str] = []
+RECORDS: List[Dict] = []
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call: float, derived: str = "", **record) -> None:
+    """Print + collect one benchmark row.
+
+    Keyword fields (``shape=``, ``gflops=``, ``vmem_bytes=``, ...) make the
+    row machine-readable: it lands in :data:`RECORDS` and is written out by
+    :func:`write_records` — the repo's perf trajectory
+    (``BENCH_kernels.json``) instead of print-only CSV lines."""
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+    if record:
+        RECORDS.append({"op": name, "us": round(us_per_call, 3), **record})
+
+
+def write_records(path: str) -> None:
+    """Dump the structured rows collected so far as a JSON array."""
+    with open(path, "w") as f:
+        json.dump(RECORDS, f, indent=2)
+        f.write("\n")
+    print(f"wrote {len(RECORDS)} records -> {path}", flush=True)
 
 
 def time_call(fn: Callable, repeats: int = 5, warmup: int = 1) -> float:

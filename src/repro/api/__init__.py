@@ -27,8 +27,9 @@ Or collapse all stages: ``result = Heta(cfg).run()``.
 Configuration
 =============
 
-:class:`HetaConfig` is a typed tree of six sections — ``data``,
-``partition``, ``model``, ``cache``, ``run``, ``pipeline`` — that round-trips through
+:class:`HetaConfig` is a typed tree of seven sections — ``data``,
+``partition``, ``model``, ``cache``, ``run``, ``pipeline``, ``kernels`` —
+that round-trips through
 nested dicts (``to_dict``/``from_dict``), the historical flat-kwargs surface
 (``from_flat_kwargs``/``to_flat_kwargs``) and auto-generated CLI flags
 (``add_config_args``/``config_from_args`` — what ``python -m
@@ -67,6 +68,7 @@ from repro.api.config import (
     CacheConfig,
     DataConfig,
     HetaConfig,
+    KernelConfig,
     ModelConfig,
     PartitionConfig,
     PipelineConfig,
@@ -85,6 +87,7 @@ __all__ = [
     "CacheConfig",
     "RunConfig",
     "PipelineConfig",
+    "KernelConfig",
     "Heta",
     "HetaStageError",
     "PartitionReport",

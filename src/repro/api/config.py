@@ -10,6 +10,8 @@ dataclasses mirroring the pipeline stages:
   * :class:`RunConfig`       — executor, mesh, steps, lr, seed
   * :class:`PipelineConfig`  — async host pipeline (prefetch depth, snapshot
     staleness policy; see the ``repro.data`` package docstring)
+  * :class:`KernelConfig`    — fused Pallas kernel layer (per-op toggles,
+    interpret override; see ``repro.kernels`` and DESIGN.md §8)
 
 Three interchange formats round-trip losslessly:
 
@@ -36,6 +38,7 @@ __all__ = [
     "CacheConfig",
     "RunConfig",
     "PipelineConfig",
+    "KernelConfig",
     "HetaConfig",
     "add_config_args",
     "config_from_args",
@@ -198,6 +201,34 @@ class PipelineConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Fused Pallas kernel layer (``repro.kernels``, DESIGN.md §8).
+
+    ``enabled`` gates the whole layer; the per-op toggles select individual
+    kernels (``stacked_agg`` — the SPMD executor's stacked relation
+    aggregation; ``relation_agg`` — the unstacked dict-form variant;
+    ``gather`` — the cache-fetch row gather).  Backend policy lives in
+    ``repro.kernels.ops.kernel_choice``: compiled kernels run on TPU by
+    default, the jnp/vmap oracles elsewhere — unless ``interpret`` is
+    forced ``True``, which runs the Pallas interpreter anywhere (parity
+    tests/CI; a Python emulation, never a perf path).
+    """
+
+    enabled: bool = True
+    stacked_agg: bool = True
+    relation_agg: bool = True
+    gather: bool = True
+    interpret: Optional[bool] = None  # None = auto per backend
+
+    def __post_init__(self):
+        for f in ("enabled", "stacked_agg", "relation_agg", "gather"):
+            if not isinstance(getattr(self, f), bool):
+                raise ValueError(f"kernels.{f} must be a bool")
+        if self.interpret is not None and not isinstance(self.interpret, bool):
+            raise ValueError("kernels.interpret must be True, False or None")
+
+
+@dataclasses.dataclass(frozen=True)
 class HetaConfig:
     """The full run description; the single argument of :class:`repro.api.Heta`."""
 
@@ -207,8 +238,9 @@ class HetaConfig:
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
     run: RunConfig = dataclasses.field(default_factory=RunConfig)
     pipeline: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
+    kernels: KernelConfig = dataclasses.field(default_factory=KernelConfig)
 
-    SECTIONS = ("data", "partition", "model", "cache", "run", "pipeline")
+    SECTIONS = ("data", "partition", "model", "cache", "run", "pipeline", "kernels")
 
     # -- derived ------------------------------------------------------------
 
@@ -249,7 +281,8 @@ class HetaConfig:
                 raise TypeError(f"unknown config section {name!r}; sections: {cls.SECTIONS}")
             sec_cls = {"data": DataConfig, "partition": PartitionConfig,
                        "model": ModelConfig, "cache": CacheConfig,
-                       "run": RunConfig, "pipeline": PipelineConfig}[name]
+                       "run": RunConfig, "pipeline": PipelineConfig,
+                       "kernels": KernelConfig}[name]
             known = {f.name for f in dataclasses.fields(sec_cls)}
             bad = set(sec) - known
             if bad:
@@ -325,6 +358,11 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "pipeline": ("pipeline", "enabled", bool, bool),
     "prefetch_depth": ("pipeline", "depth", int, int),
     "snapshot_policy": ("pipeline", "snapshot", str, str),
+    "kernels": ("kernels", "enabled", bool, bool),
+    "kernel_stacked_agg": ("kernels", "stacked_agg", bool, bool),
+    "kernel_relation_agg": ("kernels", "relation_agg", bool, bool),
+    "kernel_gather": ("kernels", "gather", bool, bool),
+    "kernel_interpret": ("kernels", "interpret", lambda v: v, lambda v: v),
 }
 
 
@@ -345,6 +383,14 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("pipeline", "depth"): ("--prefetch-depth", int, "pipeline prefetch depth"),
     ("pipeline", "snapshot"): (
         "--snapshot-policy", str, f"learnable-table snapshot policy {SNAPSHOT_POLICIES}"),
+    ("kernels", "enabled"): ("--kernels", None, "fused Pallas kernel layer on/off"),
+    ("kernels", "stacked_agg"): (
+        "--kernel-stacked-agg", None, "stacked relation-aggregation kernel"),
+    ("kernels", "relation_agg"): (
+        "--kernel-relation-agg", None, "unstacked relation-aggregation kernel"),
+    ("kernels", "gather"): ("--kernel-gather", None, "cache-fetch row-gather kernel"),
+    ("kernels", "interpret"): (
+        "--kernel-interpret", None, "force Pallas interpret mode (parity debugging)"),
 }
 
 _SCALAR_PARSERS = {int: int, float: float, str: str, Optional[float]: float, bool: None}
@@ -356,7 +402,8 @@ def _cli_specs():
 
     for section, sec_cls in (("data", DataConfig), ("partition", PartitionConfig),
                              ("model", ModelConfig), ("cache", CacheConfig),
-                             ("run", RunConfig), ("pipeline", PipelineConfig)):
+                             ("run", RunConfig), ("pipeline", PipelineConfig),
+                             ("kernels", KernelConfig)):
         hints = typing.get_type_hints(sec_cls)
         for f in dataclasses.fields(sec_cls):
             default = getattr(sec_cls(), f.name)

@@ -220,6 +220,7 @@ class RafSimExecutor(Executor):
         cfg, spec, tables = sess.hgnn_cfg, sess.spec, _lookup_tables(sess)
         assignment = sess.assignment
         P = assignment.num_partitions
+        kernels = sess.config.kernels
 
         def loss(bundle, arrs):
             # one logical copy of the shared leaves (embed tables + head),
@@ -229,7 +230,7 @@ class RafSimExecutor(Executor):
                  "head": bundle["head"]}
                 for p in range(P)
             ]
-            return raf_loss(cfg, parts, tables, arrs, spec, assignment)
+            return raf_loss(cfg, parts, tables, arrs, spec, assignment, kernels)
 
         return SimpleNamespace(
             to_arrays=batch_to_arrays,
@@ -299,9 +300,11 @@ class RafSpmdExecutor(Executor):
             step=raf_spmd.make_train_step(
                 plan, mesh, sess.adam_cfg, data_axes=("data",),
                 local_combine=local_combine, learn_feats=learn,
+                kernels=sess.config.kernels,
             ),
             loss=raf_spmd.make_loss_fn(
                 plan, mesh, data_axes=("data",), local_combine=local_combine,
+                kernels=sess.config.kernels,
             ),
         )
 

@@ -237,6 +237,7 @@ class Heta:
             cache_bytes=cfg.cache.cache_bytes, adam=self.adam_cfg,
             hotness_only=cfg.cache.hotness_only,
             num_shards=int(np.prod(cfg.run.mesh_shape)), seed=cfg.run.seed,
+            kernels=cfg.kernels,
         )
         self.stage_times["profile_and_cache"] = time.perf_counter() - t0
         return CacheReport(

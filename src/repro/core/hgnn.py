@@ -207,11 +207,26 @@ def init_embed_tables(
 
 
 def agg_relation(
-    cfg: HGNNConfig, params: Params, ctx: RelContext, h_src, q_feats, mask
+    cfg: HGNNConfig, params: Params, ctx: RelContext, h_src, q_feats, mask,
+    kernels=None,
 ):
-    """AGG_r: [n, f, d_src] x [n, d_dst_feat] x [n, f] -> [n, hidden]."""
+    """AGG_r: [n, f, d_src] x [n, d_dst_feat] x [n, f] -> [n, hidden].
+
+    ``kernels`` routes ``mean_linear``-family modules through the fused
+    ``relation_agg`` Pallas kernel (its custom VJP keeps the op trainable);
+    other modules — and the default off-TPU backend — use the module's own
+    ``aggregate``.  The stacked variant on the SPMD executor lives in
+    ``repro.core.raf_spmd._agg_level``."""
     module = cfg.module
-    return module.aggregate(resolve_params(module, params, ctx), h_src, q_feats, mask)
+    p = resolve_params(module, params, ctx)
+    if kernels is not None and module.fused == "mean_linear":
+        from repro.kernels.ops import kernel_choice
+        from repro.kernels.relation_agg import relation_agg
+
+        use, interp = kernel_choice(kernels, "relation_agg")
+        if use:
+            return relation_agg(h_src, mask, p["w"], p["b"], interpret=interp)
+    return module.aggregate(p, h_src, q_feats, mask)
 
 
 # --------------------------------------------------------------------------
@@ -267,6 +282,7 @@ def hgnn_forward(
     spec: SampleSpec,
     branch_mask: Optional[Dict[Tuple[int, int], bool]] = None,
     return_partial: bool = False,
+    kernels=None,
 ) -> jnp.ndarray:
     """Evaluate the full metatree bottom-up; returns logits [B, classes].
 
@@ -274,6 +290,8 @@ def hgnn_forward(
     tables should be passed via ``params['embed']`` by the caller merging them
     in (they are gathered identically).  ``branch_mask`` drops branches (used
     by the RAF executors to evaluate only a partition's sub-metatrees).
+    ``kernels`` (see :func:`agg_relation`) opts per-relation aggregations
+    into the fused Pallas path — the vanilla oracle never passes it.
 
     ``return_partial=True`` returns the root's *partial aggregation* — the
     pre-AGG_all accumulation [B, hidden] — which is exactly what RAF workers
@@ -322,7 +340,7 @@ def hgnn_forward(
             mask = batch.masks[depth - 1][b].reshape(n, f)
             q_feats = feats_of(depth - 1, bs.parent)
             ctx = rel_context(bs.rel, dst_t, branch_layer(spec, depth))
-            out = agg_relation(cfg, params, ctx, h_src, q_feats, mask)
+            out = agg_relation(cfg, params, ctx, h_src, q_feats, mask, kernels)
             if sums[bs.parent] is None:
                 sums[bs.parent] = out
             else:

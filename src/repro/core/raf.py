@@ -180,6 +180,7 @@ def raf_forward(
     batch: BatchArrays,
     spec: SampleSpec,
     assignment: BranchAssignment,
+    kernels=None,
 ) -> jnp.ndarray:
     """Alg. 1 forward: per-partition partial aggregations, then AGG_all + head.
 
@@ -188,6 +189,8 @@ def raf_forward(
     worker's extra work (loss + head) is partition 0 by convention; with the
     ``allreduce`` exchange every partition computes it redundantly — both are
     the same math, so this function is exchange-style agnostic.
+    ``kernels`` opts the per-relation aggregations into the fused Pallas
+    path (see ``repro.core.hgnn.agg_relation``).
     """
     partials = []
     for p, params in enumerate(params_parts):
@@ -196,6 +199,7 @@ def raf_forward(
                 cfg, params, tables, batch, spec,
                 branch_mask=assignment.branch_mask(p),
                 return_partial=True,
+                kernels=kernels,
             )
         )
     root = sum(partials)  # AGG_all (cross-relation aggregation, paper Eq. 1)
@@ -211,8 +215,9 @@ def raf_loss(
     batch: BatchArrays,
     spec: SampleSpec,
     assignment: BranchAssignment,
+    kernels=None,
 ) -> jnp.ndarray:
-    logits = raf_forward(cfg, params_parts, tables, batch, spec, assignment)
+    logits = raf_forward(cfg, params_parts, tables, batch, spec, assignment, kernels)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     return jnp.mean(-jnp.take_along_axis(logp, batch.labels[:, None], axis=-1))
 

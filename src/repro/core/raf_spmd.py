@@ -346,28 +346,35 @@ def stack_batch(
 # --------------------------------------------------------------------------
 
 
-def _agg_level(plan: StackedPlan, lp: LevelPlan, stacks, h_in, qfeat, mask, shard_idx):
+def _agg_level(plan: StackedPlan, lp: LevelPlan, stacks, h_in, qfeat, mask,
+               shard_idx, kernels=None):
     """Relation-specific aggregation for one level on one shard.
 
-    Gathers each declared leaf's per-slot parameters through the plan's
-    scope index arrays and ``vmap``s the relation module's ``aggregate``
-    over the shard's branch slots.
+    Dispatches through :func:`repro.kernels.stacked_relation_agg.stacked_agg`
+    (DESIGN.md §8): on the fused path one Pallas call covers every branch
+    slot, reading each slot's weight block straight from the ``[U, ...]``
+    stack via scalar-prefetched scope indices; otherwise the historical
+    oracle gathers per-slot leaves and ``vmap``s the module's ``aggregate``.
+    The per-shard slot indices are *traced* (``shard_idx`` differs per
+    shard), which is exactly what the scalar-prefetch indirection supports.
 
     h_in  [rb, n_d, d_in] -> out [rb, n_prev, hidden]
     """
+    from repro.kernels.stacked_relation_agg import stacked_agg
+
     module = plan.module
     layer = stacks[f"layer{lp.layer}"]
     valid = jnp.asarray(lp.valid)[shard_idx]  # [rb]
-    p_slots = {
-        s.name: layer[s.name][0][jnp.asarray(lp.slot_u[s.scope])[shard_idx]]
-        for s in module.specs
-    }  # each [rb, ...]
+    local = {s.name: layer[s.name][0] for s in module.specs}  # each [U, ...]
+    slot_u = {
+        scope: jnp.asarray(lp.slot_u[scope])[shard_idx] for scope in module.scopes
+    }  # each [rb]
     rb, n_d, d_in = h_in.shape
     f = lp.fanout
     n_prev = n_d // f
     hg = h_in.reshape(rb, n_prev, f, d_in)
     mg = mask.reshape(rb, n_prev, f)
-    out = jax.vmap(module.aggregate)(p_slots, hg, qfeat, mg)  # [rb, n_prev, H]
+    out = stacked_agg(module, local, slot_u, hg, qfeat, mg, opts=kernels)
     return out * valid[:, None, None].astype(out.dtype)
 
 
@@ -377,9 +384,14 @@ def raf_spmd_forward(
     arrays: Dict,
     model_axis: str = "model",
     local_combine: bool = True,
+    kernels=None,
 ):
     """Per-shard body (runs inside shard_map).  Returns root embedding
-    [B_local, hidden] (replicated over the model axis after the psum)."""
+    [B_local, hidden] (replicated over the model axis after the psum).
+
+    ``kernels`` (a ``KernelConfig``/``KernelOptions``-shaped object or
+    ``None``) selects the aggregation backend per level — the fused stacked
+    Pallas kernels by default on TPU, the vmap oracle elsewhere."""
     k = plan.spec.num_layers
     shard_idx = jax.lax.axis_index(model_axis)
     child: Optional[jnp.ndarray] = None
@@ -390,7 +402,8 @@ def raf_spmd_forward(
         else:
             h_in = jax.nn.relu(child)
         out = _agg_level(
-            plan, lp, stacks, h_in, arrays[f"qfeat{d}"], arrays[f"mask{d}"], shard_idx
+            plan, lp, stacks, h_in, arrays[f"qfeat{d}"], arrays[f"mask{d}"],
+            shard_idx, kernels,
         )
         if d == 1:
             partial = jnp.sum(out, axis=0)  # shard's partial aggregation [B, H]
@@ -488,6 +501,7 @@ def _build_loss_fn(
     model_axis: str,
     data_axes: Tuple[str, ...],
     local_combine: bool,
+    kernels=None,
 ):
     """Shared closure of the train and eval steps: ``(loss_fn, split_arrays)``
     where ``loss_fn(stacks, feats, rest)`` is the scalar SPMD loss."""
@@ -504,7 +518,8 @@ def _build_loss_fn(
     def root_fn(rel_stacks, feats, rest):
         def body(stacks_s, feats_s, rest_s):
             return raf_spmd_forward(
-                plan, stacks_s, {**feats_s, **rest_s}, model_axis, local_combine
+                plan, stacks_s, {**feats_s, **rest_s}, model_axis, local_combine,
+                kernels,
             )
 
         return shard_map_nocheck(
@@ -536,9 +551,11 @@ def make_loss_fn(
     model_axis: str = "model",
     data_axes=("data",),
     local_combine: bool = True,
+    kernels=None,
 ):
     """Jitted evaluation-only loss: ``loss(stacks, arrays) -> scalar``."""
-    loss_fn, split_arrays = _build_loss_fn(plan, mesh, model_axis, data_axes, local_combine)
+    loss_fn, split_arrays = _build_loss_fn(plan, mesh, model_axis, data_axes,
+                                           local_combine, kernels)
 
     @jax.jit
     def eval_loss(stacks, arrays):
@@ -556,6 +573,7 @@ def make_train_step(
     data_axes=("data",),
     local_combine: bool = True,
     learn_feats: bool = False,
+    kernels=None,
 ):
     """Build the jitted SPMD RAF train step.
 
@@ -565,13 +583,16 @@ def make_train_step(
     the classifier head + loss run outside under GSPMD, so gradients of the
     replicated head are exact.  Stack gradients pass through
     :func:`sync_stack_grads` before Adam, so parameters shared across shard
-    slots stay consistent copies.  With ``learn_feats=True`` the step also
-    returns gradients w.r.t. the gathered feature arrays (``qfeat*``/``hfeat*``)
-    for the embed engine's sparse row updates.
+    slots stay consistent copies (the fused kernels' custom VJP already
+    accumulates slot gradients into each shard's ``[U, ...]`` rows —
+    cross-shard sharing remains this sync's job).  With ``learn_feats=True``
+    the step also returns gradients w.r.t. the gathered feature arrays
+    (``qfeat*``/``hfeat*``) for the embed engine's sparse row updates.
     """
     from repro.optim.adam import adam_update
 
-    loss_fn, split_arrays = _build_loss_fn(plan, mesh, model_axis, data_axes, local_combine)
+    loss_fn, split_arrays = _build_loss_fn(plan, mesh, model_axis, data_axes,
+                                           local_combine, kernels)
 
     if not learn_feats:
         grad_fn = jax.value_and_grad(loss_fn)

@@ -186,10 +186,25 @@ class RelationModule:
     ``n``/``f`` — the SPMD executor ``vmap``s it over a stacked branch axis,
     so hyperparameters like head counts must be read off parameter shapes,
     not captured state.
+
+    ``fused`` optionally names the stacked Pallas kernel family entry this
+    module's aggregate lowers to (DESIGN.md §8); ``None`` keeps the module
+    on the gather-then-vmap oracle path:
+
+      * ``"mean_linear"``      — masked-mean + projection.  Contract: leaves
+        named ``w`` ``[d_src, hidden]`` and ``b`` ``[hidden]`` sharing one
+        scope, and ``aggregate == masked_mean(h, mask) @ w + b``.
+      * ``"softmax_combine"``  — attention epilogue.  Contract: the module
+        implements :meth:`attn_parts` (and optionally :meth:`attn_bias`)
+        such that ``aggregate`` factors as logits/values projections
+        followed by ``masked_softmax`` + head-wise weighted combine; the
+        base-class ``_softmax_aggregate`` is that factoring, so modules
+        declaring this family should route ``aggregate`` through it.
     """
 
     name: str = "?"
     specs: Tuple[ParamSpec, ...] = ()
+    fused: Optional[str] = None  # "mean_linear" | "softmax_combine" | None
 
     @property
     def scopes(self) -> Tuple[str, ...]:
@@ -198,6 +213,29 @@ class RelationModule:
 
     def aggregate(self, p: Dict[str, jnp.ndarray], h_src, q_feats, mask):
         raise NotImplementedError
+
+    # -- softmax_combine family hooks -------------------------------------
+
+    def attn_parts(self, p: Dict[str, jnp.ndarray], h_src, q_feats):
+        """(logits ``[n, f, nh]``, values ``[n, f, nh, dh]``) of the masked
+        softmax+combine epilogue — everything of AGG_r *before* the softmax
+        (the weight-touching projections, which stay under XLA autodiff)."""
+        raise NotImplementedError
+
+    def attn_bias(self, p: Dict[str, jnp.ndarray]) -> Optional[jnp.ndarray]:
+        """Additive output bias ``[hidden]`` applied after the combine."""
+        return None
+
+    def _softmax_aggregate(self, p, h_src, q_feats, mask):
+        """The canonical ``softmax_combine`` factoring of ``aggregate`` —
+        the fused path replaces only the epilogue below with the Pallas
+        kernel, so oracle and fused math agree by construction."""
+        e, v = self.attn_parts(p, h_src, q_feats)
+        n, f, nh, dh = v.shape
+        alpha = masked_softmax(e, mask[:, :, None], axis=1)
+        out = jnp.einsum("nfh,nfhd->nhd", alpha, v).reshape(n, nh * dh)
+        b = self.attn_bias(p)
+        return out if b is None else out + b
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         leaves = ", ".join(f"{s.name}:{s.scope}" for s in self.specs)
@@ -304,6 +342,7 @@ class RGCNModule(RelationModule):
     """R-GCN [39] — masked-mean neighbor aggregation + per-relation linear."""
 
     name = "rgcn"
+    fused = "mean_linear"
     specs = (
         ParamSpec("w", "relation", lambda c: (c.d_src, c.hidden)),
         ParamSpec("b", "relation", lambda c: (c.hidden,), init="zeros"),
@@ -320,6 +359,7 @@ class RGATModule(RelationModule):
     §7)."""
 
     name = "rgat"
+    fused = "softmax_combine"
     specs = (
         ParamSpec("w", "relation", lambda c: (c.d_src, c.hidden)),
         ParamSpec("w_dst", "relation", lambda c: (c.d_dst, c.hidden)),
@@ -328,7 +368,7 @@ class RGATModule(RelationModule):
         ParamSpec("b", "relation", lambda c: (c.hidden,), init="zeros"),
     )
 
-    def aggregate(self, p, h_src, q_feats, mask):
+    def attn_parts(self, p, h_src, q_feats):
         nh, dh = p["a_src"].shape
         n, f, _ = h_src.shape
         z = (h_src @ p["w"]).reshape(n, f, nh, dh)
@@ -336,9 +376,13 @@ class RGATModule(RelationModule):
         e_src = jnp.einsum("nfhd,hd->nfh", z, p["a_src"])
         e_dst = jnp.einsum("nhd,hd->nh", qz, p["a_dst"])
         e = jax.nn.leaky_relu(e_src + e_dst[:, None, :], negative_slope=0.2)
-        alpha = masked_softmax(e, mask[:, :, None], axis=1)
-        out = jnp.einsum("nfh,nfhd->nhd", alpha, z).reshape(n, nh * dh)
-        return out + p["b"]
+        return e, z
+
+    def attn_bias(self, p):
+        return p["b"]
+
+    def aggregate(self, p, h_src, q_feats, mask):
+        return self._softmax_aggregate(p, h_src, q_feats, mask)
 
 
 @register_relation_module
@@ -349,6 +393,7 @@ class HGTModule(RelationModule):
     SPMD stacking layer carries as ``src_type``/``dst_type`` index arrays."""
 
     name = "hgt"
+    fused = "softmax_combine"
     specs = (
         ParamSpec("wk", "src_type", lambda c: (c.d_src, c.hidden)),
         ParamSpec("wv", "src_type", lambda c: (c.d_src, c.hidden)),
@@ -357,7 +402,7 @@ class HGTModule(RelationModule):
         ParamSpec("w_msg", "etype", lambda c: (c.num_heads, c.head_dim, c.head_dim)),
     )
 
-    def aggregate(self, p, h_src, q_feats, mask):
+    def attn_parts(self, p, h_src, q_feats):
         nh, dh, _ = p["w_att"].shape
         n, f, _ = h_src.shape
         k = (h_src @ p["wk"]).reshape(n, f, nh, dh)
@@ -367,6 +412,8 @@ class HGTModule(RelationModule):
         att = jnp.einsum("nfhe,nhe->nfh", kw, q) / jnp.sqrt(
             jnp.asarray(dh, h_src.dtype)
         )
-        alpha = masked_softmax(att, mask[:, :, None], axis=1)
         msg = jnp.einsum("nfhd,hde->nfhe", v, p["w_msg"])
-        return jnp.einsum("nfh,nfhe->nhe", alpha, msg).reshape(n, nh * dh)
+        return att, msg
+
+    def aggregate(self, p, h_src, q_feats, mask):
+        return self._softmax_aggregate(p, h_src, q_feats, mask)

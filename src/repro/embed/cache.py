@@ -143,10 +143,14 @@ class FeatureCache:
         allocation: CacheAllocation,
         hotness: HotnessProfile,
         num_shards: int = 1,
+        kernels=None,
     ):
         self.host = dict(host_tables)
         self.learnable = dict(learnable_types)
         self.num_shards = num_shards
+        # kernels config knob: device-resident hit gathers go through the
+        # scalar-prefetch gather_rows kernel when the backend supports it
+        self.kernels = kernels
         self.host_m: Dict[str, np.ndarray] = {}
         self.host_v: Dict[str, np.ndarray] = {}
         self.caches: Dict[str, _TypeCache] = {}
@@ -172,6 +176,14 @@ class FeatureCache:
 
     # -- reads --------------------------------------------------------------
 
+    def _device_gather(self, data: jnp.ndarray, slots: np.ndarray) -> jnp.ndarray:
+        """Device-side row gather of cached rows — the paper-§6 cache fetch
+        hot path, routed through the scalar-prefetch ``gather_rows`` kernel
+        when the ``kernels.gather`` knob resolves to it for this backend."""
+        from repro.kernels.gather_rows import gather_rows_cfg
+
+        return gather_rows_cfg(data, jnp.asarray(slots), self.kernels)
+
     def fetch(self, ntype: str, nids: np.ndarray) -> jnp.ndarray:
         """Gather rows for ``nids``; cache hits read device memory, misses
         transfer from host.  Returns a device array [len(nids), d]."""
@@ -183,8 +195,12 @@ class FeatureCache:
         c.hits += int(hit.sum())
         c.misses += int((~hit).sum())
         if hit.all():
-            return c.data[jnp.asarray(slots)]
+            return self._device_gather(c.data, slots)
         rows_miss = jnp.asarray(self.host[ntype][nids[~hit]])
+        # partial hits: `slots[hit]` has a different length nearly every
+        # batch — a jitted Pallas call would recompile per length, so the
+        # mixed path stays on the XLA gather (only the stable batch-sized
+        # full-hit shape goes through the kernel)
         rows_hit = c.data[jnp.asarray(slots[hit])]
         out = jnp.zeros((len(nids), self.host[ntype].shape[1]), rows_hit.dtype)
         out = out.at[jnp.asarray(np.nonzero(hit)[0])].set(rows_hit)

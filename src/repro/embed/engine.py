@@ -39,6 +39,7 @@ class EmbedEngine:
         hotness_only: bool = False,
         num_shards: int = 1,
         seed: int = 0,
+        kernels=None,
     ):
         self.graph = graph
         self.learnable_dim = learnable_dim
@@ -66,7 +67,8 @@ class EmbedEngine:
             hotness, penalties, cache_bytes, graph.num_nodes, hotness_only
         )
         self.cache = FeatureCache(
-            host, self.learnable_types, self.allocation, hotness, num_shards
+            host, self.learnable_types, self.allocation, hotness, num_shards,
+            kernels=kernels,
         )
         self.penalties = penalties
 

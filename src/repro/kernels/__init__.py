@@ -1,13 +1,21 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-  * relation_agg   — fused masked-mean neighbor aggregation + projection
-                     (R-GCN AGG_r hotspot, paper Eq. 1)
+  * stacked_relation_agg — one level's AGG_r for *all* branch slots in a
+                     single call: grid over (slot, node block), per-slot
+                     scope indices scalar-prefetched so weight blocks come
+                     straight from the [U, ...] stacks (the SPMD executor's
+                     default aggregation path, DESIGN.md §8)
+  * relation_agg   — unstacked fused masked-mean aggregation + projection
+                     (R-GCN AGG_r on the dict-form executors, paper Eq. 1)
   * flash_attention — blocked online-softmax attention (R-GAT / LM stack;
                      sliding-window mode enables the 500k decode shape)
   * gather_rows    — scalar-prefetch embedding/feature row gather
                      (cache fetch path, paper §6)
 
 Each package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper with padding + backend dispatch) and ref.py (pure-jnp oracle).
-Kernels are validated in interpret mode on CPU; TPU is the target.
+wrapper) and ref.py (pure-jnp oracle); padding, block clamping and backend
+selection are shared via ``repro.kernels.ops``.  Backend policy
+(``ops.kernel_choice``): compiled Pallas on TPU, the jnp/vmap oracle
+elsewhere unless interpret mode is explicitly forced (tests/CI).  Kernels
+are validated in interpret mode on CPU; TPU is the target.
 """

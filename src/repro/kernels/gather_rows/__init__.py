@@ -1,4 +1,4 @@
-from repro.kernels.gather_rows.ops import gather_rows
+from repro.kernels.gather_rows.ops import gather_rows, gather_rows_cfg
 from repro.kernels.gather_rows.ref import gather_rows_ref
 
-__all__ = ["gather_rows", "gather_rows_ref"]
+__all__ = ["gather_rows", "gather_rows_cfg", "gather_rows_ref"]

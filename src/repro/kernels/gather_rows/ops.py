@@ -1,14 +1,42 @@
-"""Public op: row gather with backend dispatch."""
+"""Public op: row gather with backend dispatch.
+
+``gather_rows`` is the scalar-prefetch cache-fetch kernel (paper §6); the
+production consumer is ``repro.embed.cache.FeatureCache.fetch`` (device
+cache hits), gated by the ``kernels.gather`` config knob via
+:func:`gather_rows_cfg`.  The op carries a ``custom_vjp`` (backward is the
+transpose scatter-add) so it is also safe on differentiated gather paths.
+"""
 
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.gather_rows.kernel import gather_rows_pallas
 from repro.kernels.gather_rows.ref import gather_rows_ref
+from repro.kernels.ops import kernel_choice, zero_cotangent
 
-__all__ = ["gather_rows"]
+__all__ = ["gather_rows", "gather_rows_cfg"]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gather_pallas_vjp(interpret: bool, table, idx):
+    return gather_rows_pallas(table, idx, interpret=interpret)
+
+
+def _vjp_fwd(interpret, table, idx):
+    return _gather_pallas_vjp(interpret, table, idx), (table.shape, table.dtype, idx)
+
+
+def _vjp_bwd(interpret, res, g):
+    shape, dtype, idx = res
+    dt = jnp.zeros(shape, dtype).at[idx].add(g.astype(dtype))
+    return dt, zero_cotangent(idx)
+
+
+_gather_pallas_vjp.defvjp(_vjp_fwd, _vjp_bwd)
 
 
 def gather_rows(
@@ -21,4 +49,14 @@ def gather_rows(
         return gather_rows_ref(table, idx)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return gather_rows_pallas(table, idx, interpret=interpret)
+    return _gather_pallas_vjp(bool(interpret), table, idx)
+
+
+def gather_rows_cfg(table: jnp.ndarray, idx: jnp.ndarray, opts=None) -> jnp.ndarray:
+    """Config-gated gather: Pallas when the ``kernels.gather`` knob resolves
+    to it for this backend (see ``repro.kernels.ops.kernel_choice``), else
+    the jnp take."""
+    use, interp = kernel_choice(opts, "gather")
+    if not use or idx.shape[0] == 0:  # empty gather: nothing for the grid
+        return gather_rows_ref(table, idx)
+    return _gather_pallas_vjp(interp, table, idx)

@@ -1,0 +1,139 @@
+"""Shared padding / blocking / backend-dispatch layer of the kernel tree.
+
+Every kernel package's public op resolves three questions the same way, so
+the answers live here instead of being re-derived per op:
+
+  * **backend selection** — :func:`kernel_choice` maps a
+    :class:`KernelOptions`-shaped object (``repro.api.config.KernelConfig``
+    satisfies it) to ``(use_pallas, interpret)``.  On TPU the compiled
+    kernel is the default; off TPU the Pallas path runs only when
+    ``interpret`` is explicitly forced (tests/CI), otherwise the caller's
+    jnp oracle is the fallback — interpret mode is a Python emulation and
+    must never be silently chosen on a hot path.
+  * **block clamping** — :func:`clamp_block` keeps requested MXU-aligned
+    block sizes within the actual (possibly tiny) array dims, with the
+    ≥8-sublane floor TPU tiling wants.
+  * **padding** — :func:`pad_to` / :func:`pad_axes` zero-pad axes up to
+    block multiples; callers slice the result back to true shapes.
+
+Keeping this in one place is what lets ``BENCH_kernels.json`` report VMEM
+figures derived from the *same* block parameters the dispatch actually
+uses (see ``benchmarks/kernels_bench.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "KernelOptions",
+    "kernel_choice",
+    "clamp_block",
+    "agg_blocks",
+    "agg_vmem_bytes",
+    "pad_to",
+    "pad_axes",
+    "zero_cotangent",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOptions:
+    """Kernel-layer knobs (mirrors ``repro.api.config.KernelConfig`` — any
+    object with these attributes works, so the api layer stays jax-free).
+
+    ``interpret``: ``None`` auto-selects (compiled on TPU, jnp fallback
+    elsewhere); ``True`` forces Pallas interpret mode (parity tests);
+    ``False`` forces the compiled kernel (TPU only — elsewhere it still
+    falls back).
+    """
+
+    enabled: bool = True
+    stacked_agg: bool = True
+    relation_agg: bool = True
+    gather: bool = True
+    interpret: Optional[bool] = None
+
+
+_DEFAULTS = KernelOptions()
+
+
+def kernel_choice(opts, op: str) -> Tuple[bool, bool]:
+    """Resolve ``(use_pallas, interpret)`` for the op toggle named ``op``.
+
+    ``opts`` may be ``None`` (defaults), a :class:`KernelOptions`, or any
+    object exposing ``enabled`` / ``interpret`` / per-op boolean attrs.
+    """
+    if opts is None:
+        opts = _DEFAULTS
+    if not getattr(opts, "enabled", True) or not getattr(opts, op, True):
+        return False, False
+    interpret = getattr(opts, "interpret", None)
+    if jax.default_backend() == "tpu":
+        return True, bool(interpret)
+    # off-TPU: Pallas only when interpret is explicitly forced
+    if interpret:
+        return True, True
+    return False, False
+
+
+def clamp_block(requested: int, size: int, floor: int = 8) -> int:
+    """Clamp a requested block edge to the array dim (≥ ``floor`` sublanes)."""
+    return min(requested, max(floor, size))
+
+
+def agg_blocks(
+    n: int, f: int, d_in: int, d_out: int,
+    block_n: int = 128, block_out: int = 128, block_in: int = 512,
+) -> Tuple[int, int, int]:
+    """The (bn, bo, bc) block edges the masked-mean+projection dispatches
+    (stacked and unstacked) actually use for a shape."""
+    return (
+        clamp_block(block_n, n),
+        clamp_block(block_out, d_out),
+        clamp_block(block_in, d_in),
+    )
+
+
+def agg_vmem_bytes(
+    n: int, f: int, d_in: int, d_out: int,
+    block_n: int = 128, block_out: int = 128, block_in: int = 512,
+    bytes_per_elem: int = 4,
+) -> int:
+    """Static VMEM working set per grid step of the masked-mean+projection
+    kernels: h block + mask + weight tile + bias + out tile (input dtype)
+    plus the float32 accumulator — one formula, derived from the same
+    clamped blocks the dispatch uses, so benchmark VMEM figures can never
+    drift from the ops."""
+    bn, bo, bc = agg_blocks(n, f, d_in, d_out, block_n, block_out, block_in)
+    elems = bn * f * bc + bn * f + bc * bo + bo + bn * bo
+    return elems * bytes_per_elem + bn * bo * 4
+
+
+def pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to the next multiple of ``mult``."""
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pad_axes(x: jnp.ndarray, mults: Dict[int, int]) -> jnp.ndarray:
+    """Zero-pad several axes at once: ``{axis: multiple}``."""
+    for axis, mult in mults.items():
+        x = pad_to(x, axis, mult)
+    return x
+
+
+def zero_cotangent(x):
+    """The cotangent custom VJPs must return for bool/int primals (jax's
+    ``float0`` convention — mask and index operands of the kernels)."""
+    return np.zeros(jnp.shape(x), dtype=jax.dtypes.float0)

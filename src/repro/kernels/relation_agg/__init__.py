@@ -1,4 +1,9 @@
-from repro.kernels.relation_agg.ops import relation_agg
+from repro.kernels.relation_agg.ops import (
+    relation_agg,
+    relation_agg_blocks,
+    relation_agg_vmem_bytes,
+)
 from repro.kernels.relation_agg.ref import relation_agg_ref
 
-__all__ = ["relation_agg", "relation_agg_ref"]
+__all__ = ["relation_agg", "relation_agg_blocks", "relation_agg_vmem_bytes",
+           "relation_agg_ref"]

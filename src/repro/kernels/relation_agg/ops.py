@@ -1,31 +1,85 @@
 """Public op: relation aggregation with automatic padding + backend dispatch.
 
 ``relation_agg(h, mask, w, b)`` pads n/d_in/d_out up to block multiples,
-invokes the Pallas kernel (interpret mode off-TPU), and slices the result.
-``use_pallas=False`` falls back to the jnp oracle (same math, used by the
-SPMD executors where XLA fusion already handles it well).
+invokes the Pallas kernel (interpret mode must be forced off-TPU), and
+slices the result.  ``use_pallas=False`` — or the off-TPU default without a
+forced interpret — falls back to the jnp oracle (same math; XLA fusion
+already handles the dict-form executors well).
+
+The Pallas path carries a ``jax.custom_vjp``: the backward recomputes the
+masked mean and produces ``(dh, dw, db)`` as plain XLA contractions, so the
+dict-form RAF executor can *train* through the fused kernel (the stacked
+SPMD variant lives in ``repro.kernels.stacked_relation_agg``).
+
+Blocking / padding / backend selection come from the shared
+``repro.kernels.ops`` layer; :func:`relation_agg_vmem_bytes` derives the
+per-grid-step VMEM working set from the same clamped block parameters the
+dispatch uses (consumed by ``benchmarks/kernels_bench.py``).
 """
 
 from __future__ import annotations
 
+import dataclasses
+from functools import partial
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.kernels.ops import agg_blocks, agg_vmem_bytes, pad_to, zero_cotangent
 from repro.kernels.relation_agg.kernel import relation_agg_pallas
 from repro.kernels.relation_agg.ref import relation_agg_ref
 
-__all__ = ["relation_agg"]
+__all__ = ["relation_agg", "relation_agg_blocks", "relation_agg_vmem_bytes"]
+
+# blocking + VMEM accounting shared with the stacked family (ops layer)
+relation_agg_blocks = agg_blocks
+relation_agg_vmem_bytes = agg_vmem_bytes
 
 
-def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+@dataclasses.dataclass(frozen=True)
+class _AggCfg:
+    bn: int
+    bo: int
+    bc: int
+    interpret: bool
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _relation_agg_pallas_vjp(cfg: _AggCfg, h, mask, w, b):
+    return _pallas_fwd(cfg, h, mask, w, b)
+
+
+def _pallas_fwd(cfg: _AggCfg, h, mask, w, b):
+    n, f, d_in = h.shape
+    d_out = w.shape[1]
+    hp = pad_to(pad_to(h, 0, cfg.bn), 2, cfg.bc)
+    mp = pad_to(mask, 0, cfg.bn)
+    wp = pad_to(pad_to(w, 0, cfg.bc), 1, cfg.bo)
+    bp = pad_to(b, 0, cfg.bo)
+    out = relation_agg_pallas(
+        hp, mp, wp, bp,
+        block_n=cfg.bn, block_out=cfg.bo, block_in=cfg.bc, interpret=cfg.interpret,
+    )
+    return out[:n, :d_out]
+
+
+def _vjp_fwd(cfg, h, mask, w, b):
+    return _pallas_fwd(cfg, h, mask, w, b), (h, mask, w)
+
+
+def _vjp_bwd(cfg, res, g):
+    h, mask, w = res
+    mw = mask.astype(h.dtype)
+    cnt = jnp.maximum(mw.sum(-1, keepdims=True), 1.0)
+    mean = jnp.einsum("nfd,nf->nd", h, mw) / cnt
+    dmean = g @ w.T  # [n, d_in]
+    dh = (dmean / cnt)[:, None, :] * mw[:, :, None]
+    dw = mean.T @ g
+    db = g.sum(0)
+    return dh, zero_cotangent(mask), dw, db
+
+
+_relation_agg_pallas_vjp.defvjp(_vjp_fwd, _vjp_bwd)
 
 
 def relation_agg(
@@ -44,15 +98,7 @@ def relation_agg(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n, f, d_in = h.shape
-    d_out = w.shape[1]
-    bn = min(block_n, max(8, n))
-    bo = min(block_out, max(8, d_out))
-    bc = min(block_in, max(8, d_in))
-    hp = _pad_to(_pad_to(h, 0, bn), 2, bc)
-    mp = _pad_to(mask, 0, bn)
-    wp = _pad_to(_pad_to(w, 0, bc), 1, bo)
-    bp = _pad_to(b, 0, bo)
-    out = relation_agg_pallas(
-        hp, mp, wp, bp, block_n=bn, block_out=bo, block_in=bc, interpret=interpret
+    bn, bo, bc = relation_agg_blocks(
+        n, f, d_in, w.shape[1], block_n, block_out, block_in
     )
-    return out[:n, :d_out]
+    return _relation_agg_pallas_vjp(_AggCfg(bn, bo, bc, bool(interpret)), h, mask, w, b)

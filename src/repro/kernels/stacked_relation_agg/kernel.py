@@ -1,0 +1,237 @@
+"""Pallas TPU kernels: stacked relation aggregation for all branch slots.
+
+One ``pallas_call`` runs a whole level of the SPMD executor — the grid's
+leading dimension is the shard's branch-slot axis, and the per-slot scope
+indices (``LevelPlan.slot_u``) ride in as **scalar-prefetch** operands.
+Each grid step's ``index_map`` therefore reads its weight block *directly
+from the ``[U, ...]`` stack in HBM*: a parameter shared by many slots is
+DMA'd once per slot-step straight out of the single stacked copy — never
+materialized as a gathered ``[rb, ...]`` duplicate in HBM, which is what
+the gather-then-vmap path pays every step ("Characterizing and
+Understanding HGNN Training on GPUs" finds exactly this redundant parameter
+movement dominating HGNN kernels; HiHGNN builds on the same reusability).
+
+Three kernels:
+
+  * :func:`stacked_mean_linear_pallas` — the rgcn-family AGG_r: masked-mean
+    over the fanout fused with the output projection.  Grid (slot, node
+    block, d_out block, d_in chunk); float32 VMEM accumulator across d_in
+    chunks; mean is never written to HBM.
+  * :func:`stacked_mean_linear_dh_pallas` — the hand-written backward for
+    the neighbor activations: ``dh = (g @ w[slot]ᵀ) · mask / cnt``, again
+    reading weight blocks via scalar prefetch (no gathered ``wᵀ`` copies).
+  * :func:`stacked_softmax_combine_pallas` — the attention-family epilogue
+    (rgat/hgt): masked softmax over the fanout fused with the head-wise
+    weighted combine, so attention probabilities never round-trip to HBM.
+    Logit/value projections stay outside (they carry the module-specific
+    einsums and remain under XLA autodiff).
+
+All shapes arrive pre-padded to block multiples (``ops.py`` owns padding
+and slicing); fanout ``f`` stays whole — sampled fanouts are 3–25, so the
+reduction never crosses blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "stacked_mean_linear_pallas",
+    "stacked_mean_linear_dh_pallas",
+    "stacked_softmax_combine_pallas",
+]
+
+
+# --------------------------------------------------------------------------
+# masked-mean + projection (rgcn family), forward
+# --------------------------------------------------------------------------
+
+
+def _mean_linear_kernel(u_ref, h_ref, m_ref, w_ref, b_ref, out_ref, acc_ref,
+                        *, n_chunks: int):
+    c = pl.program_id(3)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h = h_ref[0]  # [bn, f, bc]
+    m = m_ref[0].astype(h.dtype)  # [bn, f]
+    # identical formulation to relmod.masked_mean (operand order included),
+    # so the interpret-mode forward is bit-equal to the vmap oracle
+    s = jnp.einsum("nfd,nf->nd", h, m)
+    cnt = jnp.maximum(jnp.sum(m, axis=-1, keepdims=True), 1.0)
+    mean = s / cnt
+    acc_ref[...] += jax.lax.dot(
+        mean.astype(w_ref.dtype), w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(c == n_chunks - 1)
+    def _done():
+        out_ref[0] = (
+            acc_ref[...] + b_ref[0].astype(jnp.float32)[None, :]
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_out", "block_in", "interpret")
+)
+def stacked_mean_linear_pallas(
+    h: jnp.ndarray,  # [rb, n, f, d_in]   (n, d_in pre-padded to blocks)
+    mask: jnp.ndarray,  # [rb, n, f]
+    w: jnp.ndarray,  # [U, d_in, d_out]
+    b: jnp.ndarray,  # [U, d_out]
+    slot_u: jnp.ndarray,  # [rb] int32 — slot -> stack row (scalar prefetch)
+    block_n: int = 128,
+    block_out: int = 128,
+    block_in: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    rb, n, f, d_in = h.shape
+    d_out = w.shape[2]
+    bn, bo, bc = block_n, block_out, block_in
+    grid = (rb, pl.cdiv(n, bn), pl.cdiv(d_out, bo), pl.cdiv(d_in, bc))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, f, bc), lambda s, i, o, c, u: (s, i, 0, c)),
+            pl.BlockSpec((1, bn, f), lambda s, i, o, c, u: (s, i, 0)),
+            pl.BlockSpec((1, bc, bo), lambda s, i, o, c, u: (u[s], c, o)),
+            pl.BlockSpec((1, bo), lambda s, i, o, c, u: (u[s], o)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, bo), lambda s, i, o, c, u: (s, i, o)),
+        scratch_shapes=[pltpu.VMEM((bn, bo), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_mean_linear_kernel, n_chunks=grid[3]),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rb, n, d_out), h.dtype),
+        interpret=interpret,
+    )(slot_u.astype(jnp.int32), h, mask, w, b)
+
+
+# --------------------------------------------------------------------------
+# masked-mean + projection, backward w.r.t. the neighbor activations
+# --------------------------------------------------------------------------
+
+
+def _mean_linear_dh_kernel(u_ref, g_ref, m_ref, w_ref, dh_ref, acc_ref,
+                           *, n_chunks: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[0]  # [bn, bk]
+    w = w_ref[0]  # [bc, bk]
+    # dmean partial: g @ w^T accumulated over d_out chunks
+    acc_ref[...] += jax.lax.dot_general(
+        g.astype(w.dtype), w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_chunks - 1)
+    def _done():
+        m = m_ref[0].astype(jnp.float32)  # [bn, f]
+        cnt = jnp.maximum(jnp.sum(m, axis=-1, keepdims=True), 1.0)
+        dmean = acc_ref[...] / cnt  # [bn, bc]
+        dh_ref[0] = (dmean[:, None, :] * m[:, :, None]).astype(dh_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_out", "block_in", "interpret")
+)
+def stacked_mean_linear_dh_pallas(
+    g: jnp.ndarray,  # [rb, n, d_out]
+    mask: jnp.ndarray,  # [rb, n, f]
+    w: jnp.ndarray,  # [U, d_in, d_out]
+    slot_u: jnp.ndarray,  # [rb] int32
+    block_n: int = 128,
+    block_out: int = 128,
+    block_in: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    rb, n, d_out = g.shape
+    f = mask.shape[2]
+    d_in = w.shape[1]
+    bn, bo, bc = block_n, block_out, block_in
+    grid = (rb, pl.cdiv(n, bn), pl.cdiv(d_in, bc), pl.cdiv(d_out, bo))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bo), lambda s, i, c, k, u: (s, i, k)),
+            pl.BlockSpec((1, bn, f), lambda s, i, c, k, u: (s, i, 0)),
+            pl.BlockSpec((1, bc, bo), lambda s, i, c, k, u: (u[s], c, k)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, f, bc), lambda s, i, c, k, u: (s, i, 0, c)),
+        scratch_shapes=[pltpu.VMEM((bn, bc), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_mean_linear_dh_kernel, n_chunks=grid[3]),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rb, n, f, d_in), g.dtype),
+        interpret=interpret,
+    )(slot_u.astype(jnp.int32), g, mask, w)
+
+
+# --------------------------------------------------------------------------
+# masked softmax + head-wise combine (rgat/hgt epilogue)
+# --------------------------------------------------------------------------
+
+
+def _softmax_combine_kernel(e_ref, m_ref, v_ref, out_ref, *, num_heads: int,
+                            head_dim: int):
+    e = e_ref[0]  # [bn, f, nh]
+    m = m_ref[0]  # [bn, f] bool
+    v = v_ref[0]  # [bn, f, nh*dh]
+    # identical numerics to relmod.masked_softmax
+    neg = jnp.asarray(jnp.finfo(e.dtype).min, e.dtype)
+    em = jnp.where(m[:, :, None], e, neg)
+    em = em - jnp.max(em, axis=1, keepdims=True)
+    z = jnp.exp(em) * m[:, :, None].astype(e.dtype)
+    alpha = z / jnp.maximum(jnp.sum(z, axis=1, keepdims=True), 1e-9)
+    bn, f, nh = alpha.shape
+    ar = jnp.broadcast_to(
+        alpha[:, :, :, None], (bn, f, nh, head_dim)
+    ).reshape(bn, f, nh * head_dim)
+    out_ref[0] = jnp.sum(ar * v.astype(ar.dtype), axis=1).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_heads", "head_dim", "block_n", "interpret")
+)
+def stacked_softmax_combine_pallas(
+    e: jnp.ndarray,  # [rb, n, f, nh]
+    mask: jnp.ndarray,  # [rb, n, f]
+    v: jnp.ndarray,  # [rb, n, f, nh*dh]
+    num_heads: int,
+    head_dim: int,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    rb, n, f, nh = e.shape
+    H = v.shape[3]
+    bn = block_n
+    grid = (rb, pl.cdiv(n, bn))
+    return pl.pallas_call(
+        functools.partial(
+            _softmax_combine_kernel, num_heads=num_heads, head_dim=head_dim
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, f, nh), lambda s, i: (s, i, 0, 0)),
+            pl.BlockSpec((1, bn, f), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, bn, f, H), lambda s, i: (s, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, H), lambda s, i: (s, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rb, n, H), e.dtype),
+        interpret=interpret,
+    )(e, mask, v)

@@ -1,0 +1,284 @@
+"""Public op: stacked relation aggregation — dispatch, padding, custom VJP.
+
+:func:`stacked_agg` is the single entry point the SPMD executor's
+``_agg_level`` calls per level (DESIGN.md §8).  Dispatch, driven by the
+module's ``fused`` declaration and the resolved backend
+(``repro.kernels.ops.kernel_choice``):
+
+  * ``fused == "mean_linear"``     -> :func:`stacked_mean_linear` — the
+    fully-fused Pallas kernel (scalar-prefetch slot→stack indirection).
+  * ``fused == "softmax_combine"`` -> logit/value projections via the
+    module's ``attn_parts`` (vmapped, XLA autodiff) + the Pallas masked
+    softmax+combine epilogue.
+  * anything else, or a non-TPU backend without forced interpret ->
+    :func:`~repro.kernels.stacked_relation_agg.ref.stacked_agg_ref`, the
+    gather-then-vmap oracle.
+
+Both Pallas ops carry a ``jax.custom_vjp``:
+
+  * ``stacked_mean_linear``'s backward produces the weight gradient
+    **directly in stack form** ``[U, d_in, d_out]`` (per-slot contributions
+    segment-summed over ``slot_u`` — autodiff of the gathered path would
+    yield per-slot ``[rb, ...]`` grads scattered back afterwards), and the
+    neighbor-activation gradient through the scalar-prefetch ``dh`` kernel,
+    so the backward reads weights from the stack exactly like the forward.
+    Cross-*shard* sharing stays ``sync_stack_grads``' job: this op sums
+    within a shard's slots, the executor's existing sync sums across
+    shards' stack rows — composition, no overlap.
+  * ``stacked_softmax_combine``'s backward is the closed-form softmax
+    Jacobian (recomputed probabilities, no saved alpha), matching autodiff
+    of ``relmod.masked_softmax`` including the all-masked-row case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import (
+    agg_blocks,
+    agg_vmem_bytes,
+    clamp_block,
+    kernel_choice,
+    pad_axes,
+    pad_to,
+    zero_cotangent,
+)
+from repro.kernels.stacked_relation_agg.kernel import (
+    stacked_mean_linear_dh_pallas,
+    stacked_mean_linear_pallas,
+    stacked_softmax_combine_pallas,
+)
+from repro.kernels.stacked_relation_agg.ref import stacked_agg_grouped, stacked_agg_ref
+
+__all__ = [
+    "stacked_agg",
+    "stacked_mean_linear",
+    "stacked_softmax_combine",
+    "stacked_agg_ref",
+    "stacked_agg_grouped",
+    "stacked_mean_linear_blocks",
+    "stacked_mean_linear_vmem_bytes",
+    "stacked_softmax_combine_vmem_bytes",
+]
+
+
+# --------------------------------------------------------------------------
+# block derivation + VMEM accounting (single source for op and benchmarks)
+# --------------------------------------------------------------------------
+
+
+# the stacked forward's per-step working set matches the unstacked kernel's
+# (the slot axis contributes a block edge of 1) — one shared formula in the
+# ops layer, so BENCH figures can never drift from the dispatch
+stacked_mean_linear_blocks = agg_blocks
+stacked_mean_linear_vmem_bytes = agg_vmem_bytes
+
+
+def stacked_softmax_combine_vmem_bytes(
+    n: int, f: int, num_heads: int, head_dim: int,
+    block_n: int = 128, bytes_per_elem: int = 4,
+) -> int:
+    bn = clamp_block(block_n, n)
+    H = num_heads * head_dim
+    elems = bn * f * num_heads + bn * f + bn * f * H + bn * H
+    return elems * bytes_per_elem
+
+
+# --------------------------------------------------------------------------
+# mean_linear: fused Pallas forward + stack-form custom VJP
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _MLCfg:
+    bn: int
+    bo: int
+    bc: int
+    interpret: bool
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _stacked_ml(cfg: _MLCfg, h, mask, w, b, slot_u):
+    return _ml_fwd_impl(cfg, h, mask, w, b, slot_u)
+
+
+def _ml_fwd_impl(cfg, h, mask, w, b, slot_u):
+    rb, n, f, d_in = h.shape
+    d_out = w.shape[2]
+    hp = pad_axes(h, {1: cfg.bn, 3: cfg.bc})
+    mp = pad_to(mask, 1, cfg.bn)
+    wp = pad_axes(w, {1: cfg.bc, 2: cfg.bo})
+    bp = pad_to(b, 1, cfg.bo)
+    out = stacked_mean_linear_pallas(
+        hp, mp, wp, bp, slot_u,
+        block_n=cfg.bn, block_out=cfg.bo, block_in=cfg.bc, interpret=cfg.interpret,
+    )
+    return out[:, :n, :d_out]
+
+
+def _ml_vjp_fwd(cfg, h, mask, w, b, slot_u):
+    return _ml_fwd_impl(cfg, h, mask, w, b, slot_u), (h, mask, w, slot_u)
+
+
+def _ml_vjp_bwd(cfg, res, g):
+    h, mask, w, slot_u = res
+    rb, n, f, d_in = h.shape
+    U, _, d_out = w.shape
+    # dh through the scalar-prefetch kernel — weight blocks read from the
+    # stack, same indirection as the forward
+    gp = pad_axes(g, {1: cfg.bn, 2: cfg.bo})
+    mp = pad_to(mask, 1, cfg.bn)
+    wp = pad_axes(w, {1: cfg.bc, 2: cfg.bo})
+    dh = stacked_mean_linear_dh_pallas(
+        gp, mp, wp, slot_u,
+        block_n=cfg.bn, block_out=cfg.bo, block_in=cfg.bc, interpret=cfg.interpret,
+    )[:, :n, :, :d_in]
+    # dw/db accumulate straight into the [U, ...] stack: per-slot outer
+    # products segment-summed over slot_u (slots sharing a stack row sum,
+    # exactly like autodiff of the dict-form forward sums occurrences)
+    mw = mask.astype(h.dtype)
+    cnt = jnp.maximum(mw.sum(-1, keepdims=True), 1.0)
+    mean = jnp.einsum("rnfd,rnf->rnd", h, mw) / cnt
+    pw = jnp.einsum("rnd,rno->rdo", mean, g)
+    dw = jax.ops.segment_sum(pw, slot_u, num_segments=U)
+    db = jax.ops.segment_sum(jnp.sum(g, axis=1), slot_u, num_segments=U)
+    return dh, zero_cotangent(mask), dw, db, zero_cotangent(slot_u)
+
+
+_stacked_ml.defvjp(_ml_vjp_fwd, _ml_vjp_bwd)
+
+
+def stacked_mean_linear(
+    h: jnp.ndarray,  # [rb, n, f, d_in]
+    mask: jnp.ndarray,  # [rb, n, f]
+    w: jnp.ndarray,  # [U, d_in, d_out]
+    b: jnp.ndarray,  # [U, d_out]
+    slot_u: jnp.ndarray,  # [rb] int
+    block_n: int = 128,
+    block_out: int = 128,
+    block_in: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    rb, n, f, d_in = h.shape
+    bn, bo, bc = stacked_mean_linear_blocks(
+        n, f, d_in, w.shape[2], block_n, block_out, block_in
+    )
+    cfg = _MLCfg(bn, bo, bc, bool(interpret))
+    return _stacked_ml(cfg, h, mask, w, b, slot_u.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# softmax_combine: Pallas epilogue + closed-form custom VJP
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _SCCfg:
+    bn: int
+    num_heads: int
+    head_dim: int
+    interpret: bool
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _stacked_sc(cfg: _SCCfg, e, mask, v):
+    return _sc_fwd_impl(cfg, e, mask, v)
+
+
+def _sc_fwd_impl(cfg, e, mask, v):
+    rb, n, f, nh = e.shape
+    vf = v.reshape(rb, n, f, nh * cfg.head_dim)
+    ep = pad_to(e, 1, cfg.bn)
+    mp = pad_to(mask, 1, cfg.bn)
+    vp = pad_to(vf, 1, cfg.bn)
+    out = stacked_softmax_combine_pallas(
+        ep, mp, vp, num_heads=nh, head_dim=cfg.head_dim,
+        block_n=cfg.bn, interpret=cfg.interpret,
+    )
+    return out[:, :n]
+
+
+def _sc_alpha(e, mask):
+    neg = jnp.asarray(jnp.finfo(e.dtype).min, e.dtype)
+    em = jnp.where(mask[:, :, :, None], e, neg)
+    em = em - jnp.max(em, axis=2, keepdims=True)
+    z = jnp.exp(em) * mask[:, :, :, None].astype(e.dtype)
+    return z / jnp.maximum(jnp.sum(z, axis=2, keepdims=True), 1e-9)
+
+
+def _sc_vjp_fwd(cfg, e, mask, v):
+    return _sc_fwd_impl(cfg, e, mask, v), (e, mask, v)
+
+
+def _sc_vjp_bwd(cfg, res, g):
+    e, mask, v = res
+    rb, n, f, nh = e.shape
+    alpha = _sc_alpha(e, mask)  # [rb, n, f, nh]
+    gh = g.reshape(rb, n, nh, cfg.head_dim)
+    dalpha = jnp.einsum("rnfhd,rnhd->rnfh", v, gh)
+    tot = jnp.sum(alpha * dalpha, axis=2, keepdims=True)
+    de = alpha * (dalpha - tot)
+    dv = jnp.einsum("rnfh,rnhd->rnfhd", alpha, gh)
+    return de, zero_cotangent(mask), dv
+
+
+_stacked_sc.defvjp(_sc_vjp_fwd, _sc_vjp_bwd)
+
+
+def stacked_softmax_combine(
+    e: jnp.ndarray,  # [rb, n, f, nh]
+    mask: jnp.ndarray,  # [rb, n, f]
+    v: jnp.ndarray,  # [rb, n, f, nh, dh]
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    rb, n, f, nh = e.shape
+    dh = v.shape[-1]
+    cfg = _SCCfg(clamp_block(block_n, n), nh, dh, bool(interpret))
+    return _stacked_sc(cfg, e, mask, v)
+
+
+# --------------------------------------------------------------------------
+# the executor entry point
+# --------------------------------------------------------------------------
+
+
+def stacked_agg(
+    module,
+    stacks: Dict[str, jnp.ndarray],  # {leaf: [U_scope, ...]} one shard's slabs
+    slot_u: Dict[str, jnp.ndarray],  # {scope: [rb] int} per-slot stack rows
+    h: jnp.ndarray,  # [rb, n, f, d_in]
+    q: jnp.ndarray,  # [rb, n, d_dst]
+    mask: jnp.ndarray,  # [rb, n, f]
+    opts=None,
+    block_n: int = 128,
+    block_out: int = 128,
+    block_in: int = 512,
+) -> jnp.ndarray:
+    """One level's AGG_r for every branch slot (see module docstring)."""
+    use, interp = kernel_choice(opts, "stacked_agg")
+    scope_of = {s.name: s.scope for s in module.specs}
+    if use and module.fused == "mean_linear":
+        # the family contract is leaves named w/b sharing one scope; fall
+        # through to the oracle for exotic declarations rather than
+        # miscompute (or crash on a missing leaf)
+        if scope_of.get("w") is not None and scope_of.get("w") == scope_of.get("b"):
+            return stacked_mean_linear(
+                h, mask, stacks["w"], stacks["b"], slot_u[scope_of["w"]],
+                block_n=block_n, block_out=block_out, block_in=block_in,
+                interpret=interp,
+            )
+    if use and module.fused == "softmax_combine":
+        p_slots = {name: stacks[name][slot_u[scope_of[name]]] for name in stacks}
+        e, v = jax.vmap(module.attn_parts)(p_slots, h, q)
+        out = stacked_softmax_combine(
+            e, mask, v, block_n=block_n, interpret=interp
+        )
+        bias = module.attn_bias(p_slots)  # [rb, hidden] or None
+        return out if bias is None else out + bias[:, None, :]
+    return stacked_agg_ref(module, stacks, slot_u, h, q, mask)

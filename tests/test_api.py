@@ -301,6 +301,25 @@ def test_pipeline_evaluate_parity():
     assert s_off.evaluate(3) == s_on.evaluate(3)
 
 
+def test_kernel_config_round_trips():
+    cfg = HetaConfig().updated(kernels=dict(enabled=False, stacked_agg=False,
+                                            interpret=True))
+    assert HetaConfig.from_dict(cfg.to_dict()) == cfg
+    assert HetaConfig.from_flat_kwargs(**cfg.to_flat_kwargs()) == cfg
+    with pytest.raises(ValueError, match="kernels.enabled"):
+        HetaConfig().updated(kernels=dict(enabled="yes"))
+    with pytest.raises(ValueError, match="interpret"):
+        HetaConfig().updated(kernels=dict(interpret="auto"))
+    # derived CLI flags (tri-state interpret: absent -> None)
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    got = config_from_args(ap.parse_args(
+        ["--no-kernels", "--kernel-interpret", "--no-kernel-gather"]))
+    assert not got.kernels.enabled and got.kernels.interpret is True
+    assert not got.kernels.gather and got.kernels.stacked_agg
+    assert config_from_args(ap.parse_args([])).kernels.interpret is None
+
+
 def test_pipeline_config_round_trips():
     cfg = HetaConfig().updated(pipeline=dict(enabled=True, depth=3,
                                              snapshot="fresh"))

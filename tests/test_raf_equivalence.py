@@ -87,14 +87,18 @@ def test_prop1_featureless_and_varying_dims():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
 
 
+@pytest.mark.parametrize("kernels_on", [False, True], ids=["kernels_off", "kernels_on"])
 @pytest.mark.parametrize("model", ["rgcn", "rgat", "hgt"])
-def test_prop1_spmd_stacked(model):
+def test_prop1_spmd_stacked(model, kernels_on):
     """The stacked/padded SPMD representation is bit-equivalent to the dict
     forward for every registered model — including HGT's per-node-type
     parameter structure (single-device mesh; the multi-device case runs in
-    test_multidevice.py via subprocess)."""
+    test_multidevice.py via subprocess).  Parametrized over the kernel
+    layer: ``kernels_on`` forces the fused Pallas path in interpret mode."""
     from repro.core import raf_spmd
+    from repro.kernels.ops import KernelOptions
 
+    kernels = KernelOptions(interpret=True) if kernels_on else KernelOptions(enabled=False)
     g = ogbn_mag_like(scale=0.002)
     mp, spec, b, cfg, feat_dims, key, params, tables = _setup(g, model, 2)
     arrs = batch_to_arrays(b)
@@ -118,7 +122,8 @@ def test_prop1_spmd_stacked(model):
     rest = {k: v for k, v in arrays.items() if "feat" not in k}
 
     def body(st, fe, re_):
-        return raf_spmd.raf_spmd_forward(plan, st, {**fe, **re_}, "model", True)
+        return raf_spmd.raf_spmd_forward(plan, st, {**fe, **re_}, "model", True,
+                                         kernels)
 
     root = raf_spmd.shard_map_nocheck(
         body,
@@ -131,15 +136,19 @@ def test_prop1_spmd_stacked(model):
     np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), atol=2e-5)
 
 
+@pytest.mark.parametrize("kernels_on", [False, True], ids=["kernels_off", "kernels_on"])
 @pytest.mark.parametrize("model", ["rgcn", "rgat", "hgt"])
-def test_prop1_spmd_gradients_match_vanilla(model):
+def test_prop1_spmd_gradients_match_vanilla(model, kernels_on):
     """Backprop through the stacked SPMD loss: gradients gathered back
     through the plan's scope index arrays equal the dict-form gradients
     (autodiff sums slot uses exactly like the dict forward sums relation
-    occurrences)."""
+    occurrences).  With ``kernels_on`` the same holds through the fused
+    Pallas kernels' custom VJPs (stack-form weight gradients)."""
     from repro.core import raf_spmd
     from repro.core.relmod import SCOPE_CONTAINER
+    from repro.kernels.ops import KernelOptions
 
+    kernels = KernelOptions(interpret=True) if kernels_on else KernelOptions(enabled=False)
     g = ogbn_mag_like(scale=0.002)
     mp, spec, b, cfg, feat_dims, key, params, tables = _setup(g, model, 2)
     arrs = batch_to_arrays(b)
@@ -153,7 +162,8 @@ def test_prop1_spmd_gradients_match_vanilla(model):
     arrays = raf_spmd.stack_batch(plan, b, tables_np)
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    loss_fn, split = raf_spmd._build_loss_fn(plan, mesh, "model", ("data",), True)
+    loss_fn, split = raf_spmd._build_loss_fn(plan, mesh, "model", ("data",), True,
+                                             kernels)
     feats, rest = split(arrays)
     gstacks = jax.grad(loss_fn)(stacks, feats, rest)
     gstacks = raf_spmd.sync_stack_grads(plan, gstacks)  # single shard: identity

@@ -1,0 +1,305 @@
+"""Stacked relation-aggregation kernel family: parity sweeps against the
+gather-then-vmap oracle (interpret mode on CPU; TPU is the target).
+
+Covers forward AND custom-VJP parity over non-block-multiple shapes,
+all-False mask rows, dummy padding slots, shared stack rows (the HGT
+pattern), the grouped "stacked XLA" oracle, the executor-level fused-path
+contract (rgcn bit-equality, DESIGN.md §8) and a hypothesis-style property
+test through the ``_hypothesis_compat`` shim.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.relmod import ShapeCtx, get_relation_module
+from repro.kernels.ops import KernelOptions
+from repro.kernels.stacked_relation_agg import (
+    stacked_agg,
+    stacked_agg_grouped,
+    stacked_agg_ref,
+    stacked_mean_linear,
+    stacked_mean_linear_vmem_bytes,
+    stacked_softmax_combine,
+)
+
+rng = np.random.default_rng(7)
+OPTS_ON = KernelOptions(interpret=True)
+
+
+def _mean_linear_case(rb, n, f, di, do, U, seed=0, dummy_slots=()):
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.standard_normal((U, di, do)) * 0.1, jnp.float32)
+    b = jnp.asarray(r.standard_normal((U, do)) * 0.1, jnp.float32)
+    h = jnp.asarray(r.standard_normal((rb, n, f, di)), jnp.float32)
+    q = jnp.asarray(r.standard_normal((rb, n, di)), jnp.float32)
+    mask = np.asarray(r.random((rb, n, f)) > 0.3)
+    mask[0, 0, :] = False  # an all-False row (empty neighborhood)
+    for s in dummy_slots:  # dummy padding slots: all-False masks, slot_u 0
+        mask[s] = False
+    slot_u = r.integers(0, U, rb)
+    slot_u[list(dummy_slots)] = 0
+    return h, q, jnp.asarray(mask), w, b, jnp.asarray(slot_u)
+
+
+# --------------------------------------------------------------------------
+# mean_linear (rgcn family)
+# --------------------------------------------------------------------------
+
+# non-block-multiple n/f/rb/d on purpose: padding paths must be exact
+ML_SHAPES = [
+    (5, 17, 4, 37, 24, 3),     # tiny/ragged everywhere
+    (1, 1, 1, 1, 1, 1),        # degenerate minimum
+    (8, 130, 3, 129, 65, 8),   # one past the n/d_out block edges
+    (12, 64, 25, 128, 64, 6),  # mag-ish, shared slots (U < rb)
+]
+
+
+@pytest.mark.parametrize("rb,n,f,di,do,U", ML_SHAPES)
+def test_stacked_mean_linear_forward_bit_equal(rb, n, f, di, do, U):
+    mod = get_relation_module("rgcn")
+    h, q, mask, w, b, slot_u = _mean_linear_case(rb, n, f, di, do, U, seed=rb * n)
+    ref = stacked_agg_ref(mod, {"w": w, "b": b}, {"relation": slot_u}, h, q, mask)
+    out = stacked_mean_linear(h, mask, w, b, slot_u, interpret=True)
+    # fp32 interpret mode is bit-equal to the vmap oracle — the acceptance
+    # contract of the fused path, not merely close (holds whenever d_in
+    # fits one chunk, i.e. every sampled feature/hidden width ≤ block_in)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_stacked_mean_linear_forward_chunked_d_in():
+    """d_in wider than block_in (donor's 789-wide features) splits the
+    contraction across VMEM accumulator chunks — fp32 reassociation, so
+    close (not bit-equal) to the single-matmul oracle."""
+    mod = get_relation_module("rgcn")
+    rb, n, f, di, do, U = 3, 200, 7, 789, 349, 2
+    h, q, mask, w, b, slot_u = _mean_linear_case(rb, n, f, di, do, U, seed=600)
+    ref = stacked_agg_ref(mod, {"w": w, "b": b}, {"relation": slot_u}, h, q, mask)
+    out = stacked_mean_linear(h, mask, w, b, slot_u, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dummy_slots", [(), (1, 3)])
+def test_stacked_mean_linear_vjp_matches_oracle(dummy_slots):
+    mod = get_relation_module("rgcn")
+    rb, n, f, di, do, U = 6, 33, 5, 40, 28, 3  # shared rows: U < rb
+    h, q, mask, w, b, slot_u = _mean_linear_case(
+        rb, n, f, di, do, U, seed=11, dummy_slots=dummy_slots
+    )
+    valid = jnp.asarray([s not in dummy_slots for s in range(rb)], jnp.float32)
+
+    def loss_fused(w_, b_, h_):
+        out = stacked_mean_linear(h_, mask, w_, b_, slot_u, interpret=True)
+        return jnp.sum((out * valid[:, None, None]) ** 2)
+
+    def loss_ref(w_, b_, h_):
+        out = stacked_agg_ref(mod, {"w": w_, "b": b_}, {"relation": slot_u},
+                              h_, q, mask)
+        return jnp.sum((out * valid[:, None, None]) ** 2)
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2))(w, b, h)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(w, b, h)
+    for name, a, c in zip(("dw", "db", "dh"), gf, gr):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(c), atol=1e-5, rtol=1e-5,
+            err_msg=f"{name} mismatch (dummy_slots={dummy_slots})",
+        )
+
+
+def test_stacked_mean_linear_grad_lands_in_stack_rows():
+    """Slots sharing a stack row sum their contributions into that one row
+    (the custom VJP's segment-sum), and unused rows get exactly zero."""
+    rb, n, f, di, do, U = 4, 9, 3, 12, 8, 3
+    h, q, mask, w, b, _ = _mean_linear_case(rb, n, f, di, do, U, seed=5)
+    slot_u = jnp.asarray([0, 0, 1, 1])  # row 2 unused
+
+    def loss(w_):
+        return jnp.sum(stacked_mean_linear(h, mask, w_, b, slot_u, interpret=True))
+
+    dw = jax.grad(loss)(w)
+    np.testing.assert_array_equal(np.asarray(dw[2]), np.zeros((di, do), np.float32))
+    assert float(jnp.abs(dw[0]).max()) > 0 and float(jnp.abs(dw[1]).max()) > 0
+
+
+@given(
+    rb=st.integers(1, 6), n=st.integers(1, 40), f=st.integers(1, 6),
+    di=st.integers(1, 70), do=st.integers(1, 70), U=st.integers(1, 4),
+)
+@settings(max_examples=10, deadline=None)
+def test_stacked_mean_linear_property(rb, n, f, di, do, U):
+    mod = get_relation_module("rgcn")
+    h, q, mask, w, b, slot_u = _mean_linear_case(
+        rb, n, f, di, do, U, seed=rb * 1000 + n * 10 + di
+    )
+    ref = stacked_agg_ref(mod, {"w": w, "b": b}, {"relation": slot_u}, h, q, mask)
+    out = stacked_mean_linear(h, mask, w, b, slot_u, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# softmax_combine epilogue (rgat/hgt family)
+# --------------------------------------------------------------------------
+
+
+def _attn_case(rb, n, f, nh, dh, seed=0):
+    r = np.random.default_rng(seed)
+    e = jnp.asarray(r.standard_normal((rb, n, f, nh)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((rb, n, f, nh, dh)), jnp.float32)
+    mask = np.asarray(r.random((rb, n, f)) > 0.3)
+    mask[0, 0, :] = False
+    return e, jnp.asarray(mask), v
+
+
+@pytest.mark.parametrize("rb,n,f,nh,dh", [
+    (3, 21, 4, 2, 5),
+    (1, 1, 1, 1, 1),
+    (5, 130, 3, 4, 16),
+])
+def test_stacked_softmax_combine_parity(rb, n, f, nh, dh):
+    from repro.core.relmod import masked_softmax
+
+    e, mask, v = _attn_case(rb, n, f, nh, dh, seed=n)
+    alpha = masked_softmax(e, mask[:, :, :, None], axis=2)
+    ref = jnp.einsum("rnfh,rnfhd->rnhd", alpha, v).reshape(rb, n, nh * dh)
+    out = stacked_softmax_combine(e, mask, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6, rtol=1e-6)
+
+    def loss_fused(e_, v_):
+        return jnp.sum(stacked_softmax_combine(e_, mask, v_, interpret=True) ** 2)
+
+    def loss_ref(e_, v_):
+        a = masked_softmax(e_, mask[:, :, :, None], axis=2)
+        return jnp.sum(jnp.einsum("rnfh,rnfhd->rnhd", a, v_) ** 2)
+
+    gf = jax.grad(loss_fused, argnums=(0, 1))(e, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(e, v)
+    for name, a, c in zip(("de", "dv"), gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5,
+                                   rtol=1e-5, err_msg=name)
+
+
+# --------------------------------------------------------------------------
+# full dispatch: every registered model, fused vs oracle vs grouped
+# --------------------------------------------------------------------------
+
+
+def _module_case(model, rb, n, f, di, dd, hidden, nh, seed=0):
+    r = np.random.default_rng(seed)
+    mod = get_relation_module(model)
+    sc = ShapeCtx(hidden, nh, hidden // nh, di, dd)
+    U_of = {s: u for s, u in zip(mod.scopes, (3, 2, 5, 4))}
+    stacks = {
+        s.name: jnp.asarray(
+            r.standard_normal((U_of[s.scope],) + tuple(s.shape(sc))) * 0.1,
+            jnp.float32,
+        )
+        for s in mod.specs
+    }
+    slot_np = {s: r.integers(0, U_of[s], rb) for s in mod.scopes}
+    slot_u = {s: jnp.asarray(v) for s, v in slot_np.items()}
+    h = jnp.asarray(r.standard_normal((rb, n, f, di)), jnp.float32)
+    q = jnp.asarray(r.standard_normal((rb, n, dd)), jnp.float32)
+    mask = np.asarray(r.random((rb, n, f)) > 0.3)
+    mask[0, 1, :] = False
+    return mod, stacks, slot_np, slot_u, h, q, jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("model", ["rgcn", "rgat", "hgt"])
+def test_stacked_agg_fused_and_grouped_match_oracle(model):
+    mod, stacks, slot_np, slot_u, h, q, mask = _module_case(
+        model, rb=5, n=19, f=4, di=23, dd=17, hidden=32, nh=4, seed=3
+    )
+    ref = stacked_agg_ref(mod, stacks, slot_u, h, q, mask)
+    out = stacked_agg(mod, stacks, slot_u, h, q, mask, opts=OPTS_ON)
+    grp = stacked_agg_grouped(mod, stacks, slot_np, h, q, mask)
+    tol = 0 if model == "rgcn" else 1e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+    np.testing.assert_allclose(np.asarray(grp), np.asarray(ref), atol=1e-6)
+
+    def loss_fused(st, h_):
+        return jnp.sum(stacked_agg(mod, st, slot_u, h_, q, mask, opts=OPTS_ON) ** 2)
+
+    def loss_ref(st, h_):
+        return jnp.sum(stacked_agg_ref(mod, st, slot_u, h_, q, mask) ** 2)
+
+    gf = jax.grad(loss_fused, argnums=(0, 1))(stacks, h)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(stacks, h)
+    for a, c in zip(jax.tree.leaves(gf), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5, rtol=1e-5)
+
+
+def test_stacked_agg_disabled_is_oracle():
+    mod, stacks, slot_np, slot_u, h, q, mask = _module_case(
+        "rgcn", rb=3, n=8, f=3, di=10, dd=10, hidden=16, nh=4, seed=4
+    )
+    off = stacked_agg(mod, stacks, slot_u, h, q, mask,
+                      opts=KernelOptions(enabled=False))
+    ref = stacked_agg_ref(mod, stacks, slot_u, h, q, mask)
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(ref))
+
+
+def test_vmem_budget():
+    """Static VMEM per grid step stays under the 16 MiB budget at the
+    paper's largest shapes (IGB-HET feature width, fanout 25)."""
+    assert stacked_mean_linear_vmem_bytes(25600, 25, 1024, 64) <= 16 * 2**20
+    assert stacked_mean_linear_vmem_bytes(4096, 25, 789, 349) <= 16 * 2**20
+
+
+# --------------------------------------------------------------------------
+# executor level: the raf_spmd fused forward is bit-equal for rgcn
+# --------------------------------------------------------------------------
+
+
+def test_raf_spmd_fused_forward_bit_equal_rgcn():
+    """`raf_spmd` forward through the fused path (interpret mode) is
+    bit-equal to the vmap path for rgcn — the executor-level acceptance
+    contract on top of the op-level sweeps above."""
+    from repro.core import raf_spmd
+    from repro.core.hgnn import HGNNConfig, batch_to_arrays
+    from repro.core.meta_partition import meta_partition
+    from repro.core.raf import assign_branches
+    from repro.graph.sampler import NeighborSampler, SampleSpec
+    from repro.graph.synthetic import ogbn_mag_like
+    from jax.sharding import PartitionSpec as P
+
+    g = ogbn_mag_like(scale=0.002)
+    mp = meta_partition(g, 2, num_layers=2)
+    spec = SampleSpec.from_metatree(mp.metatree, (4, 3))
+    b = NeighborSampler(g, spec, 8, seed=1).sample_batch(g.train_nodes[:8])
+    cfg = HGNNConfig(model="rgcn", hidden=32, num_layers=2,
+                     num_classes=g.num_classes)
+    feat_dims = {t: g.feat_dim(t) for t in g.num_nodes if g.feat_dim(t)}
+    params = __import__("repro.core.hgnn", fromlist=["init_hgnn_params"]).init_hgnn_params(
+        jax.random.PRNGKey(0), cfg, spec, feat_dims)
+
+    assignment = assign_branches(spec, mp).fold(1, spec)
+    plan = raf_spmd.build_plan(spec, assignment, cfg, feat_dims)
+    stacks = raf_spmd.stack_params_from_dict(plan, params)
+    tables = {t: np.asarray(f) for t, f in g.features.items()}
+    for t in g.num_nodes:
+        if t not in tables:
+            tables[t] = np.zeros((g.num_nodes[t], cfg.learnable_dim), np.float32)
+    arrays = raf_spmd.stack_batch(plan, b, tables)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    arr_specs = raf_spmd._array_specs(plan, ("data",), "model")
+    rel_specs = {k: v for k, v in raf_spmd._stack_specs(plan).items() if k != "head"}
+    feats = {k: v for k, v in arrays.items() if "feat" in k}
+    rest = {k: v for k, v in arrays.items() if "feat" not in k}
+
+    def run(kernels):
+        def body(st, fe, re_):
+            return raf_spmd.raf_spmd_forward(plan, st, {**fe, **re_}, "model",
+                                             True, kernels)
+        return raf_spmd.shard_map_nocheck(
+            body, mesh=mesh,
+            in_specs=(rel_specs, {k: arr_specs[k] for k in feats},
+                      {k: arr_specs[k] for k in rest}),
+            out_specs=P(("data",), None),
+        )({k: v for k, v in stacks.items() if k != "head"}, feats, rest)
+
+    vmap_root = run(KernelOptions(enabled=False))
+    fused_root = run(KernelOptions(interpret=True))
+    np.testing.assert_array_equal(np.asarray(fused_root), np.asarray(vmap_root))
