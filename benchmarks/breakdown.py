@@ -10,13 +10,22 @@ Built entirely on the public session + staged-executor surface
 hand-rolled training loop), and reports the async-pipeline overlap: the
 ``pipelined`` mode re-runs the same steps through ``pipeline.enabled`` and
 emits serial vs overlapped step time plus the overlap fraction
-(host work hidden behind the device step)."""
+(host work hidden behind the device step).
+
+``--num-workers 0,1,2,4`` adds the multi-worker sampling sweep
+(DESIGN.md §9): pure sampling throughput of the thread producer vs N-process
+pools over the shared-memory graph store, identical batches per position at
+every worker count.  Rows are machine-readable (``samples_per_s``, ``cpus``,
+``speedup_vs_1w``) and land in ``BENCH_pipeline.json`` via
+``--records-out`` — the host-pipeline leg of the perf trajectory."""
 
 from __future__ import annotations
 
+import os
 import time
 
-from benchmarks._util import dram_random_time, emit, net_time, timed_fit
+from benchmarks._util import (dram_random_time, emit, net_time, timed_fit,
+                              write_records)
 from repro.api import (
     CacheConfig, DataConfig, Heta, HetaConfig, ModelConfig, PartitionConfig,
     RunConfig,
@@ -113,5 +122,118 @@ def run_pipelined(scale: float = 0.002, batch: int = 32, fanouts=(5, 4),
     return results
 
 
+def run_worker_sweep(scale: float = 0.01, batch: int = 64, fanouts=(10, 10),
+                     steps: int = 32, workers=(0, 1, 2, 4),
+                     repeats: int = 3):
+    """Sampling-throughput scaling of the host pipeline's producer.
+
+    Every configuration materializes the *same* batches for the same
+    positions (``batch_at`` purity); only who computes them differs —
+    the single thread (``workers=0``) or an N-process pool over the
+    shared-memory graph store.  Throughput is measured at the consumer,
+    after a warmup that absorbs spawn + first-touch cost, as the best of
+    ``repeats`` consecutive ``steps``-batch segments (best-of de-noises
+    interference from co-tenants on shared machines), so the number is
+    the steady-state rate the device loop would see.  ``cpus`` is recorded
+    with every row: scaling saturates at the core count, so a 2-core
+    container cannot show more than 2x of *aggregate* CPU — though it can
+    exceed 2x vs a 1-worker baseline that leaves the consumer core idle."""
+    from repro.data.prefetch import Prefetcher
+    from repro.data.worker_pool import (EpochSchedule, SampleStageTask,
+                                        WorkerPool)
+    from repro.graph.sampler import NeighborSampler
+    from repro.graph.shm import share_graph
+
+    sess = Heta(HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=scale, fanouts=fanouts,
+                        batch_size=batch),
+        partition=PartitionConfig(num_partitions=2),
+        run=RunConfig(seed=3),
+    ))
+    sess.build_graph()
+    sess.partition()
+    g, spec = sess.graph, sess.spec
+    E = NeighborSampler(g, spec, batch).steps_per_epoch()
+    sched = EpochSchedule(7, E)
+    warm = 2
+    results = {}
+    for w in workers:
+        n = steps * repeats + warm
+        store = None
+        if w == 0:
+            sampler = NeighborSampler(g, spec, batch, seed=1)
+
+            def make(i, _s=sampler, _sched=sched):
+                seed, idx = _sched.seed_and_index(i)
+                return _s.batch_at(idx, epoch_seed=seed)
+
+            src = Prefetcher(make, depth=2, num_items=n, name="sweep-thread")
+        else:
+            store = share_graph(g, include_features=False)
+            task = SampleStageTask(handle=store.handle, spec=spec,
+                                   batch_size=batch, sampler_seed=1,
+                                   schedule=sched)
+            src = WorkerPool(task, num_workers=w, depth=2, num_items=n)
+        try:
+            it = iter(src)
+            for _ in range(warm):
+                next(it)
+            wall = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for _ in range(steps):
+                    next(it)
+                wall = min(wall, time.perf_counter() - t0)
+        finally:
+            src.close()
+            if store is not None:
+                store.unlink()
+        sps = steps * batch / wall
+        results[w] = sps
+        emit(f"pipeline/sampling/workers{w}", wall / steps * 1e6,
+             f"{sps:,.0f} samples/s",
+             workers=w, samples_per_s=round(sps, 1), batch_size=batch,
+             fanouts=list(fanouts), kind="sampling", cpus=os.cpu_count())
+    base = results.get(1)
+    if base:
+        for w in sorted(results):
+            if w > 1:
+                emit(f"pipeline/sampling/scaling_1_to_{w}",
+                     0.0, f"{results[w] / base:.2f}x vs 1 worker "
+                     f"({os.cpu_count()} cpus)",
+                     workers=w, speedup_vs_1w=round(results[w] / base, 3),
+                     kind="sampling_scaling", cpus=os.cpu_count())
+    if 0 in results and len(results) > 1:
+        best = max(v for k, v in results.items() if k > 0)
+        emit("pipeline/sampling/pool_vs_thread", 0.0,
+             f"best pool {best / results[0]:.2f}x the single thread",
+             speedup_vs_thread=round(best / results[0], 3),
+             kind="sampling_scaling", cpus=os.cpu_count())
+    return results
+
+
+def _parse_workers(s: str):
+    return tuple(int(x) for x in s.split(","))
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--num-workers", type=_parse_workers, default=None,
+                    help="comma list, e.g. 0,1,2,4: run the multi-worker "
+                         "sampling-throughput sweep")
+    ap.add_argument("--sweep-steps", type=int, default=48,
+                    help="timed batches per sweep configuration")
+    ap.add_argument("--records-out", type=str, default=None,
+                    help="write machine-readable rows here "
+                         "(e.g. BENCH_pipeline.json)")
+    ap.add_argument("--skip-stages", action="store_true",
+                    help="only the worker sweep, skip the per-stage breakdown")
+    args = ap.parse_args()
+    if not args.skip_stages:
+        run()
+    if args.num_workers is not None:
+        run_worker_sweep(steps=args.sweep_steps, workers=args.num_workers)
+    if args.records_out:
+        write_records(args.records_out)

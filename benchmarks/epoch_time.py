@@ -69,13 +69,16 @@ def _measured_step(model: str, local: bool) -> float:
     return float(np.median(sess.step_times[2:]))
 
 
-def _measured_fit(pipelined: bool, steps: int = 16) -> tuple:
+def _measured_fit(pipelined: bool, steps: int = 16,
+                  num_workers: int = 0) -> tuple:
     """End-to-end fit wall time per step, async host pipeline on vs off —
     identical batches either way (per-batch sampler RNG), so the difference
     is purely the sample+stage work hidden behind the device step.  On a
     CPU-only host the win is modest (the producer shares cores + the GIL
     with the jitted step); the breakdown benchmark reports the overlap
-    fraction the stream actually achieved."""
+    fraction the stream actually achieved.  ``num_workers`` selects the
+    producer: the background thread (0) or a sampler process pool that also
+    stages frozen-table batches worker-side (DESIGN.md §9)."""
     cfg = HetaConfig(
         data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(5, 4),
                         batch_size=32),
@@ -86,13 +89,41 @@ def _measured_fit(pipelined: bool, steps: int = 16) -> tuple:
                       steps=steps),
     )
     if pipelined:
-        cfg = cfg.updated(pipeline=dict(enabled=True))
+        cfg = cfg.updated(pipeline=dict(enabled=True,
+                                        num_workers=num_workers))
     sess = Heta(cfg)
     sess.build_graph()
     sess.partition()
     sess.profile_and_cache()
     sess.compile()
-    return timed_fit(sess, steps)
+    try:
+        # warmup inside timed_fit spawns the pool; the timed fit reuses it,
+        # so the figure is steady-state, not worker spawn cost
+        return timed_fit(sess, steps)
+    finally:
+        sess.close_pipeline()
+
+
+def run_worker_fit_sweep(workers=(0, 1, 2, 4), steps: int = 16):
+    """End-to-end fit per-step wall time across sampler worker counts —
+    same model, same batches (bit-identical for any worker count); emits
+    machine-readable rows for ``BENCH_pipeline.json``."""
+    import os
+
+    t_serial, _ = _measured_fit(pipelined=False, steps=steps)
+    emit("pipeline/fit/serial_step", t_serial * 1e6, "no pipeline",
+         workers=-1, kind="fit", batch_size=32, cpus=os.cpu_count())
+    for w in workers:
+        t_w, overlap = _measured_fit(pipelined=True, steps=steps,
+                                     num_workers=w)
+        emit(f"pipeline/fit/workers{w}", t_w * 1e6,
+             f"overlap {overlap:.2f}, {t_serial / max(t_w, 1e-12):.2f}x vs "
+             "serial",
+             workers=w, kind="fit", batch_size=32,
+             samples_per_s=round(32 / max(t_w, 1e-12), 1),
+             overlap_fraction=round(overlap, 3),
+             speedup_vs_serial=round(t_serial / max(t_w, 1e-12), 3),
+             cpus=os.cpu_count())
 
 
 def run():
@@ -123,4 +154,23 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    from benchmarks._util import write_records
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--num-workers", default=None,
+                    help="comma list, e.g. 0,1,2,4: sweep sampler worker "
+                         "counts through an end-to-end fit")
+    ap.add_argument("--records-out", type=str, default=None,
+                    help="write machine-readable rows here")
+    ap.add_argument("--skip-main", action="store_true",
+                    help="only the worker sweep, skip the epoch-time runs")
+    args = ap.parse_args()
+    if not args.skip_main:
+        run()
+    if args.num_workers is not None:
+        run_worker_fit_sweep(
+            workers=tuple(int(x) for x in str(args.num_workers).split(",")))
+    if args.records_out:
+        write_records(args.records_out)

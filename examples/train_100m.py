@@ -7,6 +7,9 @@ the regime Heta's cache targets (paper §2.3: learnable-feature updates are
 24-35% of DGL's epoch time).
 
 Run:  PYTHONPATH=src python examples/train_100m.py [--steps 200]
+      (add --pipeline for the async host pipeline, --num-workers N to feed
+      the device from N sampler processes over the shared-memory graph
+      store — DESIGN.md §9)
 """
 
 import argparse
@@ -24,16 +27,24 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch-size", type=int, default=128)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="overlap host sampling+staging with the device step")
+    ap.add_argument("--num-workers", type=int, default=0,
+                    help="sampler worker processes (0 = one thread)")
     args = ap.parse_args()
 
-    sess = Heta(HetaConfig(
+    cfg = HetaConfig(
         data=DataConfig(dataset="freebase", scale=0.001, fanouts=(10, 5),
                         batch_size=args.batch_size),
         partition=PartitionConfig(num_partitions=4),
         model=ModelConfig(model="rgat", hidden=64),
         cache=CacheConfig(cache_mb=32),
         run=RunConfig(executor="raf_spmd", steps=args.steps, log_every=10),
-    ))
+    )
+    if args.pipeline or args.num_workers:
+        cfg = cfg.updated(pipeline=dict(enabled=True,
+                                        num_workers=args.num_workers))
+    sess = Heta(cfg)
 
     g = sess.build_graph()
     learnable_rows = sum(g.num_nodes.values())
@@ -45,11 +56,16 @@ def main():
     t0 = time.time()
     m = sess.run()
     dt = time.time() - t0
+    sess.close_pipeline()
     losses = m["losses"]
     k = max(1, len(losses) // 10)
     print(f"\nloss: first-{k}-avg {np.mean(losses[:k]):.4f} -> "
           f"last-{k}-avg {np.mean(losses[-k:]):.4f}")
     print(f"total {dt/60:.1f} min, median step {m['step_time_s']*1e3:.0f} ms")
+    if m["pipeline"]:
+        print(f"pipeline: {m['sampler_workers']} workers, "
+              f"{m['samples_per_s']:,.0f} samples/s, "
+              f"overlap {m['overlap_fraction']:.2f}")
     print(f"cache hit rates: { {t: round(r, 2) for t, r in m['hit_rates'].items()} }")
 
 

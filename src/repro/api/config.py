@@ -185,11 +185,20 @@ class RunConfig:
 class PipelineConfig:
     """Async host pipeline: overlap sampling + feature staging with the
     device step (see the ``repro.data`` package docstring for the design
-    and the staleness semantics of ``snapshot``)."""
+    and the staleness semantics of ``snapshot``).
+
+    ``num_workers`` selects the producer: 0 (default) keeps the single
+    background thread; N > 0 runs a pool of N sampler *processes* over a
+    shared-memory graph store (``repro.data.worker_pool``, DESIGN.md §9) —
+    bit-identical batches for any worker count, ``depth`` prefetched items
+    per worker.  When staging reads training learnable tables the pool
+    stages on the consumer against fresh tables regardless of ``snapshot``
+    (worker processes cannot observe the trainer's table writes)."""
 
     enabled: bool = False
     depth: int = 2  # prefetched batches kept ready ahead of the device step
     snapshot: str = "stale"  # stale (max overlap) | fresh (bit-exact staging)
+    num_workers: int = 0  # 0 = thread producer; N > 0 = sampler process pool
 
     def __post_init__(self):
         if self.depth < 1:
@@ -197,6 +206,16 @@ class PipelineConfig:
         if self.snapshot not in SNAPSHOT_POLICIES:
             raise ValueError(
                 f"snapshot must be one of {SNAPSHOT_POLICIES}, got {self.snapshot!r}"
+            )
+        if self.num_workers < 0:
+            raise ValueError(
+                f"num_workers must be >= 0, got {self.num_workers}"
+            )
+        if self.num_workers > 0 and not self.enabled:
+            raise ValueError(
+                "pipeline.num_workers > 0 requires pipeline.enabled "
+                "(pass --pipeline / pipeline=dict(enabled=True, ...)); a "
+                "worker pool only exists inside the async host pipeline"
             )
 
 
@@ -358,6 +377,7 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "pipeline": ("pipeline", "enabled", bool, bool),
     "prefetch_depth": ("pipeline", "depth", int, int),
     "snapshot_policy": ("pipeline", "snapshot", str, str),
+    "num_workers": ("pipeline", "num_workers", int, int),
     "kernels": ("kernels", "enabled", bool, bool),
     "kernel_stacked_agg": ("kernels", "stacked_agg", bool, bool),
     "kernel_relation_agg": ("kernels", "relation_agg", bool, bool),
@@ -383,6 +403,8 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("pipeline", "depth"): ("--prefetch-depth", int, "pipeline prefetch depth"),
     ("pipeline", "snapshot"): (
         "--snapshot-policy", str, f"learnable-table snapshot policy {SNAPSHOT_POLICIES}"),
+    ("pipeline", "num_workers"): (
+        "--num-workers", int, "sampler worker processes (0 = single thread)"),
     ("kernels", "enabled"): ("--kernels", None, "fused Pallas kernel layer on/off"),
     ("kernels", "stacked_agg"): (
         "--kernel-stacked-agg", None, "stacked relation-aggregation kernel"),

@@ -41,6 +41,18 @@ exposes graph / spec / assignment / engine / hgnn_cfg):
   ``stage_reads_tables(sess, plan) -> bool``
       whether ``stage`` reads the learnable feature tables (drives the
       pipeline's snapshot staleness policy; see ``repro.data``).
+  ``worker_stage_recipe(sess, plan) -> picklable | None``
+      a picklable recipe with which a *sampler worker process* can perform
+      the host part of ``stage`` against frozen tables exported into the
+      shared-memory graph store (``repro.data.staging.stack_batch_host``),
+      or None when staging must stay consumer-side (default; also whenever
+      staging reads learnable tables that train — workers cannot observe
+      the trainer's writes).  Drives the worker pool's staging placement
+      (DESIGN.md §9).
+  ``stage_from_host(sess, plan, batch, host_arrays) -> arrays``
+      consumer-side completion of worker staging: device placement of the
+      host arrays a worker produced under the recipe; with
+      ``host_arrays=None`` falls back to the full ``stage`` (the default).
   ``loss_and_metrics(sess, plan, state, batch) -> (loss, metrics)``  eval only
 
 Register your own with ``@executors.register("name")``.
@@ -109,6 +121,16 @@ class Executor:
         """True when ``stage`` snapshots the learnable feature tables, i.e.
         background staging can observe stale rows (see ``repro.data``)."""
         return False
+
+    def worker_stage_recipe(self, sess, plan):
+        """Picklable host-staging recipe for sampler worker processes, or
+        None when staging must stay consumer-side (the default)."""
+        return None
+
+    def stage_from_host(self, sess, plan, batch, host_arrays):
+        """Finish staging from worker-produced host arrays.  The base
+        protocol has no worker staging, so this is the full ``stage``."""
+        return self.stage(sess, plan, batch)
 
     def loss_and_metrics(self, sess, plan, state, batch):
         raise NotImplementedError
@@ -344,6 +366,30 @@ class RafSpmdExecutor(Executor):
 
     def stage_reads_tables(self, sess, plan) -> bool:
         return bool(plan.learn_feats)
+
+    def worker_stage_recipe(self, sess, plan):
+        """With frozen tables the whole host side of :meth:`stage` — the
+        padded feature gathers of ``stack_batch`` — can run inside sampler
+        workers against tables exported into the shm store; the consumer
+        only device-puts.  While learnable tables train, workers cannot see
+        the trainer's row updates, so staging stays consumer-side (None)."""
+        if plan.learn_feats:
+            return None
+        from repro.core import raf_spmd
+
+        return raf_spmd.stack_recipe(plan.plan)
+
+    def stage_from_host(self, sess, plan, batch, host_arrays):
+        if host_arrays is None:
+            return self.stage(sess, plan, batch)
+        import jax.numpy as jnp
+
+        from repro.core import raf_spmd
+
+        return raf_spmd.shard_arrays(
+            plan.plan, plan.mesh,
+            {k: jnp.asarray(v) for k, v in host_arrays.items()},
+        )
 
     def step_staged(self, sess, plan, state, batch, arrays):
         t0 = time.perf_counter()

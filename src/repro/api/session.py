@@ -97,7 +97,12 @@ class Heta:
         # fit-loop overlap accounting (wall vs serial sum; see results())
         self._fit_wall_s = 0.0
         self._fit_serial_s = 0.0
+        self._fit_steps = 0
         self._steps_done = 0
+        # persistent sampler pool: [store, pool, next_global_step, workers]
+        # (spawn + shm export amortize across fit() calls; see _acquire_pool)
+        self._pool_cache = None
+        self._pool_atexit_cb = None
 
     # -- stage guards --------------------------------------------------------
 
@@ -315,10 +320,14 @@ class Heta:
 
         With ``pipeline.enabled`` the loop is driven by a
         :class:`repro.data.SampleStream`: sampling + staging for batch
-        *i+1* runs in a background thread while batch *i* trains, under the
-        configured snapshot staleness policy.  Batches are bit-identical to
-        the serial path (per-batch RNG), and the stream is closed — thread
-        joined — on normal exit and on error."""
+        *i+1* runs in the background while batch *i* trains, under the
+        configured snapshot staleness policy — in one producer thread by
+        default, or in ``pipeline.num_workers`` sampler processes over a
+        shared-memory graph store (DESIGN.md §9).  The pool + store persist
+        across consecutive ``fit()`` calls (spawn cost amortizes; see
+        :meth:`close_pipeline`) and are torn down on error.  Batches are
+        bit-identical to the serial path for any worker count (per-batch
+        RNG)."""
         self._require("state", "compile", "fit")
         steps = self.config.run.steps if steps is None else steps
         log_every = self.config.run.log_every
@@ -344,17 +353,36 @@ class Heta:
             start = self._steps_done
             defer = (pcfg.snapshot == "fresh"
                      and self.executor.stage_reads_tables(self, self.plan))
-            with SampleStream(
-                lambda i: self._batch_for_step(start + i),
-                lambda b: self.executor.stage(self, self.plan, b),
-                num_steps=steps, depth=pcfg.depth, defer_stage=defer,
-            ) as stream:
-                for batch, arrays, host_s in stream:
-                    logged(self._consume(batch, arrays, host_s))
+            stream_kw = {}
+            if pcfg.num_workers > 0:
+                stream_kw = dict(
+                    num_workers=pcfg.num_workers,
+                    pool=self._acquire_pool(start),
+                    finish_stage=lambda b, host: self.executor.stage_from_host(
+                        self, self.plan, b, host),
+                )
+            try:
+                with SampleStream(
+                    lambda i: self._batch_for_step(start + i),
+                    lambda b: self.executor.stage(self, self.plan, b),
+                    num_steps=steps, depth=pcfg.depth, defer_stage=defer,
+                    **stream_kw,
+                ) as stream:
+                    for batch, arrays, host_s in stream:
+                        logged(self._consume(batch, arrays, host_s))
+                        if self._pool_cache is not None and stream_kw:
+                            self._pool_cache[2] += 1  # pool stays in sync
+            except BaseException:
+                # a failed pooled fit leaves pool position and _steps_done
+                # out of sync (and possibly dead workers): tear down so the
+                # next fit starts a fresh, aligned pool
+                self.close_pipeline()
+                raise
         else:
             for _ in range(steps):
                 logged(self.step())
         self._fit_wall_s += time.perf_counter() - t_wall
+        self._fit_steps += len(self.step_times) - n0
         self._fit_serial_s += sum(self.host_times[n0:]) + sum(self.step_times[n0:])
         return self.results()
 
@@ -362,7 +390,9 @@ class Heta:
         """Mean held-out-batch loss via the executor's eval path (no update).
 
         With ``pipeline.enabled``, batches are prefetched in the background
-        (eval staging never trains tables, so this is always bit-exact)."""
+        — by a thread, or by ``pipeline.num_workers`` sampler processes
+        over a shared-memory graph store (eval staging never trains tables,
+        so any producer is always bit-exact)."""
         from repro.graph.sampler import NeighborSampler
 
         self._require("state", "compile", "evaluate")
@@ -380,12 +410,28 @@ class Heta:
             losses.append(loss)
             return m
 
-        if self.config.pipeline.enabled:
+        pcfg = self.config.pipeline
+        if pcfg.enabled and pcfg.num_workers > 0:
+            from repro.data.worker_pool import EpochSchedule, WorkerPool
+
+            store, task = self._pool_task(
+                EpochSchedule(eval_seed, sampler.steps_per_epoch()),
+                eval_seed,
+            )
+            try:
+                with WorkerPool(task, num_workers=pcfg.num_workers,
+                                depth=pcfg.depth, num_items=n,
+                                name="eval-pool") as pool:
+                    for b, _, _ in pool:
+                        metrics = consume(b)
+            finally:
+                store.unlink()
+        elif pcfg.enabled:
             from repro.data.prefetch import Prefetcher
 
             with Prefetcher(
                 lambda i: sampler.batch_at(i, epoch_seed=eval_seed),
-                depth=self.config.pipeline.depth, num_items=n,
+                depth=pcfg.depth, num_items=n,
                 name="eval-stream",
             ) as pf:
                 for b in pf:
@@ -422,12 +468,21 @@ class Heta:
         # pipeline (0 when serial: wall >= host + step by construction)
         serial = self._fit_serial_s
         overlap = max(0.0, 1.0 - self._fit_wall_s / serial) if serial > 0 else 0.0
+        # seeds consumed per second of fit() wall time — the host-pipeline
+        # throughput figure the worker-pool benchmarks sweep
+        samples_per_s = (
+            self._fit_steps * self.config.data.batch_size / self._fit_wall_s
+            if self._fit_wall_s > 0 else 0.0
+        )
         return {
             "losses": list(self.losses),
             "step_time_s": float(np.median(timed)),
             "host_time_s": float(np.median(self.host_times or [0.0])),
             "setup_s": setup,
             "pipeline": bool(self.config.pipeline.enabled),
+            "sampler_workers": (self.config.pipeline.num_workers
+                                if self.config.pipeline.enabled else 0),
+            "samples_per_s": float(samples_per_s),
             "overlap_fraction": float(overlap),
             "hit_rates": self.engine.cache.hit_rates(),
             "partitioning": self.mp.summary(),
@@ -438,21 +493,124 @@ class Heta:
 
     # -- internal ---------------------------------------------------------------
 
-    def _batch_for_step(self, s: int):
-        """The training batch of global step ``s`` — a pure function of
-        ``(config seed, s)``, so the serial loop and the async stream (which
-        materializes batches ahead, possibly out of thread) see identical
-        data.  Epoch ``e`` starts at step ``e * steps_per_epoch`` and
-        shuffles with the seed the legacy epoch-iterator used at that
-        boundary (``run.seed + 2 + first_step_of_epoch``)."""
+    def _schedule(self, start_step: int = 0):
+        """The epoch schedule of the training loop: epoch ``e`` starts at
+        step ``e * steps_per_epoch`` and shuffles with the seed the legacy
+        epoch-iterator used at that boundary (``run.seed + 2 +
+        first_step_of_epoch``).  One shared object — serial loop, thread
+        stream and every pool worker all derive batches from it."""
+        from repro.data.worker_pool import EpochSchedule
+
         E = self.sampler.steps_per_epoch()
         if E == 0:
             raise ValueError(
                 f"batch_size ({self.config.data.batch_size}) exceeds the "
                 f"number of train nodes ({len(self.graph.train_nodes)})"
             )
-        e, i = divmod(s, E)
-        return self.sampler.batch_at(i, epoch_seed=self.config.run.seed + 2 + e * E)
+        return EpochSchedule(self.config.run.seed + 2, E,
+                             start_step=start_step)
+
+    def _batch_for_step(self, s: int):
+        """The training batch of global step ``s`` — a pure function of
+        ``(config seed, s)``, so the serial loop and the async stream (which
+        materializes batches ahead, possibly out of thread or out of
+        process) see identical data."""
+        epoch_seed, i = self._schedule().seed_and_index(s)
+        return self.sampler.batch_at(i, epoch_seed=epoch_seed)
+
+    def _acquire_pool(self, start_step: int):
+        """The persistent sampler pool positioned at ``start_step``.
+
+        Spawning workers and exporting the shm store cost ~a second; one
+        pool therefore serves consecutive ``fit()`` calls as long as the
+        requested start lines up with where the pool's stripe left off
+        (tracked in ``_pool_cache``) and the worker count is unchanged.
+        Misalignment — a serial ``step()`` in between, a config change, a
+        prior failure — tears the old pool down and spawns a fresh one.
+        ``close_pipeline()`` (also invoked on fit errors) releases
+        everything explicitly; GC of the session is the fallback."""
+        from repro.data.worker_pool import WorkerPool
+
+        pcfg = self.config.pipeline
+        if self._pool_cache is not None:
+            store, pool, next_step, workers = self._pool_cache
+            if (workers == pcfg.num_workers and next_step == start_step
+                    and not pool._closed):
+                return pool
+            self.close_pipeline()
+        store, task = self._pool_task(
+            self._schedule(start_step), self.config.run.seed + 1,
+            recipe=self.executor.worker_stage_recipe(self, self.plan),
+        )
+        pool = WorkerPool(task, num_workers=pcfg.num_workers,
+                          depth=pcfg.depth, num_items=None)
+        self._pool_cache = [store, pool, start_step, pcfg.num_workers]
+        if self._pool_atexit_cb is None:
+            # scripts that train and simply exit must not leave the store
+            # to the resource tracker's leaked-segment shutdown path (it
+            # cleans up, but warns); weakref so the hook never pins the
+            # session alive
+            import atexit
+            import weakref
+
+            ref = weakref.ref(self)
+
+            def _cleanup(_ref=ref):
+                sess = _ref()
+                if sess is not None:
+                    sess.close_pipeline()
+
+            atexit.register(_cleanup)
+            self._pool_atexit_cb = _cleanup
+        return pool
+
+    def close_pipeline(self) -> None:
+        """Tear down the persistent sampler pool and unlink its shm store.
+
+        Idempotent; safe to call any time.  Sessions that ran pooled fits
+        release their workers and segments here (or implicitly at GC)."""
+        cb, self._pool_atexit_cb = self._pool_atexit_cb, None
+        if cb is not None:
+            import atexit
+
+            try:  # don't accumulate dead hooks across many sessions
+                atexit.unregister(cb)
+            except Exception:
+                pass
+        if self._pool_cache is None:
+            return
+        store, pool, _, _ = self._pool_cache
+        self._pool_cache = None
+        try:
+            pool.close()
+        finally:
+            store.unlink()
+
+    def _pool_task(self, schedule, sampler_seed: int, recipe=None):
+        """Shared-memory graph store + picklable sampling task for a worker
+        pool following ``schedule`` (the caller owns the store:
+        ``_acquire_pool`` parks it in ``_pool_cache``, ``evaluate`` unlinks
+        per call).  Frozen-table staging moves into the workers when the
+        executor provides a ``recipe`` — exactly the tables its branches
+        read are exported into the store; with ``recipe=None`` workers
+        sample only and staging stays consumer-side."""
+        from repro.data.worker_pool import SampleStageTask
+        from repro.graph.shm import share_graph
+
+        tables = None
+        if recipe is not None:
+            snapshot = self.engine.tables_snapshot()
+            tables = {t: snapshot[t] for t in recipe.table_types()}
+        store = share_graph(self.graph, include_features=False, tables=tables)
+        task = SampleStageTask(
+            handle=store.handle,
+            spec=self.spec,
+            batch_size=self.config.data.batch_size,
+            sampler_seed=sampler_seed,
+            schedule=schedule,
+            recipe=recipe,
+        )
+        return store, task
 
     def _next_batch(self):
         return self._batch_for_step(self._steps_done)

@@ -49,6 +49,7 @@ from repro.core.compat import shard_map_nocheck
 from repro.core.hgnn import HGNNConfig, Params, rel_context
 from repro.core.raf import BranchAssignment
 from repro.core.relmod import SCOPE_CONTAINER, storage_key
+from repro.data.staging import StackRecipe, stack_batch_host
 from repro.graph.sampler import SampledBatch, SampleSpec
 
 __all__ = [
@@ -56,6 +57,7 @@ __all__ = [
     "build_plan",
     "stack_params_from_dict",
     "stack_batch",
+    "stack_recipe",
     "raf_spmd_forward",
     "sync_stack_grads",
     "make_loss_fn",
@@ -286,6 +288,17 @@ def stack_params_from_dict(plan: StackedPlan, params: Params) -> Dict:
 # --------------------------------------------------------------------------
 
 
+def stack_recipe(plan: StackedPlan) -> StackRecipe:
+    """The plan's picklable host-staging recipe (memoized on the plan) —
+    what a jax-free sampler worker needs to run :func:`stack_batch_host`
+    (see ``repro.data.staging`` and DESIGN.md §9)."""
+    recipe = getattr(plan, "_stack_recipe", None)
+    if recipe is None:
+        recipe = StackRecipe.from_plan(plan)
+        plan._stack_recipe = recipe
+    return recipe
+
+
 def stack_batch(
     plan: StackedPlan,
     batch: SampledBatch,
@@ -298,47 +311,14 @@ def stack_batch(
     shard's branches touch only node types present in its partition, matching
     Heta's locality argument; we materialize all shards' slices because the
     test/driver processes run every shard on one host.
+
+    The host-side gather work is the shared numpy core
+    :func:`repro.data.staging.stack_batch_host` — the multi-worker sampling
+    pool runs the same function inside worker processes, so worker-staged
+    and consumer-staged batches are bit-identical by construction.
     """
-    spec, k = plan.spec, plan.spec.num_layers
-    B = batch.batch_size
-    dp = plan.d_pad
-
-    def padded_gather(t: str, nids: np.ndarray) -> np.ndarray:
-        tab = tables[t]
-        out = np.zeros((len(nids), dp), np.float32)
-        out[:, : tab.shape[1]] = tab[nids]
-        return out
-
-    arrays: Dict = {"seeds": jnp.asarray(batch.seeds), "labels": jnp.asarray(batch.labels)}
-    n_prev = B
-    for d in range(1, k + 1):
-        lp = plan.levels[d - 1]
-        lv = batch.levels[d - 1]
-        n_d = lv.nids.shape[1]
-        mask = np.zeros((plan.num_shards, lp.rb, n_d), bool)
-        qfeat = np.zeros((plan.num_shards, lp.rb, n_prev, dp), np.float32)
-        hfeat = (
-            np.zeros((plan.num_shards, lp.rb, n_d, dp), np.float32) if d == k else None
-        )
-        for p in range(plan.num_shards):
-            for s in range(lp.rb):
-                b = lp.slot_branch[p, s]
-                if b < 0:
-                    continue
-                mask[p, s] = lv.mask[b]
-                dst_t = plan.dst_types[d - 1][b]
-                parent_nids = (
-                    batch.seeds if d == 1 else batch.levels[d - 2].nids[spec.levels[d - 1][b].parent]
-                )
-                qfeat[p, s] = padded_gather(dst_t, parent_nids)
-                if d == k:
-                    hfeat[p, s] = padded_gather(plan.src_types[d - 1][b], lv.nids[b])
-        arrays[f"mask{d}"] = jnp.asarray(mask.reshape(plan.num_shards * lp.rb, n_d))
-        arrays[f"qfeat{d}"] = jnp.asarray(qfeat.reshape(plan.num_shards * lp.rb, n_prev, dp))
-        if d == k:
-            arrays[f"hfeat{d}"] = jnp.asarray(hfeat.reshape(plan.num_shards * lp.rb, n_d, dp))
-        n_prev = n_d
-    return arrays
+    host = stack_batch_host(stack_recipe(plan), batch, tables)
+    return {k: jnp.asarray(v) for k, v in host.items()}
 
 
 # --------------------------------------------------------------------------

@@ -13,8 +13,24 @@ DistDGLv2/HopGNN recipe, behind three pieces:
     :class:`~repro.data.sample_stream.SampleStream` (HGNN path) sit on it.
 
 :class:`~repro.data.sample_stream.SampleStream`
-    Runs sample → snapshot → stack → shard in the producer thread and
-    yields ``(batch, arrays, host_seconds)`` ready for the device step.
+    The host-pipeline facade: runs sample → snapshot → stack → shard in the
+    background and yields ``(batch, arrays, host_seconds)`` ready for the
+    device step.  ``num_workers=0`` selects the thread ``Prefetcher``
+    (bit-for-bit today's behavior); ``num_workers>0`` selects the process
+    pool below.
+
+:class:`~repro.data.worker_pool.WorkerPool`
+    N sampler *processes* over a shared-memory graph store
+    (``repro.graph.shm``), lifting the one-CPU-core ceiling of the thread
+    producer (paper Fig. 10 — host sampling dominates once RAF removes
+    network traffic).  Worker ``w`` samples the interleaved stripe
+    ``w, w+N, ...``; per-worker bounded queues round-robined by the
+    consumer reconstruct strict step order; ``batch_at`` purity makes any
+    worker count bit-identical.  Staging placement follows the snapshot
+    policy: frozen-table batches are staged *inside* workers via the shared
+    numpy core (``repro.data.staging.stack_batch_host``) against tables
+    exported into the store, while learnable-"fresh" staging stays on the
+    consumer.  Architecture: DESIGN.md §9.
 
 **The staged-step protocol.**  Executors (``repro.api.executors``) split
 one training step into two public methods::
@@ -51,5 +67,23 @@ in the background observes tables before steps *i..i+k-1* wrote back:
 from repro.data.pipeline import SyntheticCorpus, TokenPipeline
 from repro.data.prefetch import Prefetcher
 from repro.data.sample_stream import SampleStream
+from repro.data.staging import StackRecipe, stack_batch_host
+from repro.data.worker_pool import (
+    EpochSchedule,
+    SampleStageTask,
+    WorkerDiedError,
+    WorkerPool,
+)
 
-__all__ = ["SyntheticCorpus", "TokenPipeline", "Prefetcher", "SampleStream"]
+__all__ = [
+    "SyntheticCorpus",
+    "TokenPipeline",
+    "Prefetcher",
+    "SampleStream",
+    "StackRecipe",
+    "stack_batch_host",
+    "EpochSchedule",
+    "SampleStageTask",
+    "WorkerDiedError",
+    "WorkerPool",
+]

@@ -82,15 +82,24 @@ class Prefetcher:
                 if not self._put(item):
                     return  # closed while waiting for queue space
         except BaseException as exc:  # noqa: BLE001 — delivered to consumer
-            self._put(_Failure(exc))
+            try:
+                if not self._stop.is_set():
+                    self._put(_Failure(exc))
+            except BaseException:
+                # interpreter teardown: queue internals may already be gone;
+                # a daemon thread must exit silently, not spray noise
+                pass
 
-    def _put(self, item) -> bool:
+    # queue.Full is bound as a default arg: at interpreter shutdown module
+    # globals can be cleared under a daemon thread's feet, and a NameError
+    # here would masquerade as a producer failure
+    def _put(self, item, _Full=queue.Full) -> bool:
         """Blocking put that aborts (returns False) once close() is called."""
         while not self._stop.is_set():
             try:
                 self._q.put(item, timeout=_POLL_S)
                 return True
-            except queue.Full:
+            except _Full:
                 continue
         return False
 
@@ -125,32 +134,48 @@ class Prefetcher:
 
     # -- lifecycle -----------------------------------------------------------
 
-    def close(self, timeout: float = 5.0) -> None:
+    def close(self, timeout: float = 5.0, warn: bool = True,
+              _Empty=queue.Empty) -> None:
         """Stop the producer, drain the queue, and join the thread.
 
-        Idempotent; after it returns ``__next__`` raises
-        :class:`RuntimeError`.  A producer stuck inside ``make`` longer than
-        ``timeout`` cannot be killed from here — that case is reported with
-        a :class:`RuntimeWarning` (the daemon thread exits at its next
-        queue/stop check and cannot re-enter ``make``).
+        Idempotent — including after a producer failure already shut the
+        stream down from ``__next__``, and when called again mid-teardown.
+        After it returns ``__next__`` raises :class:`RuntimeError`.  A
+        producer stuck inside ``make`` longer than ``timeout`` cannot be
+        killed from here — that case is reported with a
+        :class:`RuntimeWarning` (the daemon thread exits at its next
+        queue/stop check and cannot re-enter ``make``).  ``warn=False``
+        suppresses the warning — used by ``__del__``, where a stream GC'd
+        mid-run at interpreter shutdown must not spray warnings from a
+        half-torn-down runtime.
         """
-        if self._closed:
+        if getattr(self, "_closed", True):  # True: constructor failed early
             return
         self._closed = True
-        self._stop.set()
+        stop = getattr(self, "_stop", None)
+        thread = getattr(self, "_thread", None)
+        if stop is None or thread is None:  # constructor failed part-way
+            return
+        stop.set()
         # the producer may be blocked on a full queue; drain so its
         # stop-aware put() observes the event and the thread exits
         try:
             while True:
                 self._q.get_nowait()
-        except queue.Empty:
+        except _Empty:
             pass
-        self._thread.join(timeout=timeout)
-        if self._thread.is_alive():
+        except BaseException:
+            pass  # queue internals gone at interpreter shutdown
+        try:
+            thread.join(timeout=timeout)
+        except RuntimeError:
+            # joining from the thread itself / runtime tearing down
+            return
+        if warn and thread.is_alive():
             import warnings
 
             warnings.warn(
-                f"{self._thread.name}: producer still inside make() after "
+                f"{thread.name}: producer still inside make() after "
                 f"{timeout}s close timeout; it will exit at its next stop "
                 "check", RuntimeWarning, stacklevel=2,
             )
@@ -161,8 +186,10 @@ class Prefetcher:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def __del__(self):  # best-effort: don't leak threads on GC
+    def __del__(self):
+        # best-effort: don't leak threads on GC, and stay silent when the
+        # GC runs at interpreter shutdown (no warnings, no queue errors)
         try:
-            self.close(timeout=0.1)
-        except Exception:
+            self.close(timeout=0.1, warn=False)
+        except BaseException:
             pass

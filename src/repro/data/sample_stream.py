@@ -1,26 +1,42 @@
-"""SampleStream — the async HGNN host pipeline (sample → snapshot → stack →
-shard in the background, device step in the foreground).
+"""SampleStream — the async HGNN host pipeline facade.
 
-Built on :class:`~repro.data.prefetch.Prefetcher`; see the ``repro.data``
-package docstring for the staged-step protocol and the staleness policy this
-implements.  The stream is deliberately decoupled from ``repro.api`` — it
-takes two callables:
+Runs sample → snapshot → stack → shard in the background and yields
+``(batch, arrays, host_seconds)`` ready for the device step, selecting one
+of two engines (see the ``repro.data`` package docstring and DESIGN.md §9):
 
-  ``make_batch(i)  -> batch``   deterministic batch for pipeline step ``i``
-                                (``NeighborSampler.batch_at`` under the hood,
-                                so prefetch order cannot change the data)
-  ``stage(batch)   -> arrays``  the executor's public host-staging seam
-                                (``Executor.stage``)
+``num_workers == 0`` (default)
+    Today's thread pipeline, bit-for-bit: one
+    :class:`~repro.data.prefetch.Prefetcher` producer thread runs
 
-and yields ``(batch, arrays, host_seconds)`` tuples, where ``host_seconds``
-is the sample+stage time actually spent on this item (measured inside the
-producer, so the consumer can compute the overlap fraction: host work that
-ran concurrently with the device step costs no wall time).
+      ``make_batch(i) -> batch``   deterministic batch for pipeline step ``i``
+      ``stage(batch)  -> arrays``  the executor's host-staging seam
 
-``defer_stage=True`` implements the ``"fresh"`` snapshot policy: the
-producer only samples, and staging runs synchronously in ``__next__`` — used
-when staging reads learnable tables and the caller wants bit-exact parity
-with the serial loop instead of staleness-bounded overlap.
+    ``defer_stage=True`` implements the ``"fresh"`` snapshot policy: the
+    producer only samples and staging runs synchronously in ``__next__``.
+
+``num_workers > 0``
+    A :class:`~repro.data.worker_pool.WorkerPool` of sampler processes over
+    a shared-memory graph store.  The caller supplies ``worker_task`` (a
+    picklable :class:`~repro.data.worker_pool.SampleStageTask` yielding
+    ``(batch, host_arrays | None, host_s)``) and ``finish_stage(batch,
+    host_arrays) -> arrays`` — the consumer-side completion (device
+    placement of worker-staged arrays, or the executor's full ``stage``
+    when workers only sample, e.g. while learnable tables train).
+    ``make_batch``/``stage``/``defer_stage`` are ignored in this mode; the
+    time ``finish_stage`` spends on the consumer is added to the item's
+    ``host_seconds`` (it is not overlapped).
+
+    Alternatively the caller passes an already-running ``pool`` it owns
+    (spawn cost amortized across many ``fit`` calls — the session does
+    this): the stream then draws exactly ``num_steps`` items and its
+    ``close()`` leaves the pool alive for the next stream.
+
+In both modes ``host_seconds`` is the sample+stage time actually spent on
+the item, measured where it ran, so the consumer can compute the overlap
+fraction (host work that ran concurrently with the device step costs no
+wall time).  Exceptions raised in any producer — thread or process —
+surface in the consumer's ``__next__``; ``close()`` joins everything and is
+idempotent.
 """
 
 from __future__ import annotations
@@ -36,29 +52,86 @@ __all__ = ["SampleStream"]
 class SampleStream:
     def __init__(
         self,
-        make_batch: Callable[[int], object],
-        stage: Callable[[object], object],
+        make_batch: Optional[Callable[[int], object]] = None,
+        stage: Optional[Callable[[object], object]] = None,
         num_steps: Optional[int] = None,
         depth: int = 2,
         defer_stage: bool = False,
+        num_workers: int = 0,
+        worker_task: Optional[object] = None,
+        finish_stage: Optional[Callable[[object, object], object]] = None,
+        pool: Optional[object] = None,
     ):
+        if num_workers < 0:
+            raise ValueError(f"num_workers must be >= 0, got {num_workers}")
         self._stage = stage
         self._defer = defer_stage
+        self._finish = finish_stage
+        self._pool = None
+        self._owns_pool = True
+        self._remaining = None
+        self._prefetcher = None
 
-        def produce(i: int) -> Tuple[object, object, float]:
-            t0 = time.perf_counter()
-            batch = make_batch(i)
-            arrays = None if defer_stage else stage(batch)
-            return batch, arrays, time.perf_counter() - t0
+        if num_workers == 0:
+            if make_batch is None or stage is None:
+                raise ValueError("thread mode requires make_batch and stage")
 
-        self._prefetcher = Prefetcher(produce, depth=depth,
-                                      num_items=num_steps,
-                                      name="sample-stream")
+            def produce(i: int) -> Tuple[object, object, float]:
+                t0 = time.perf_counter()
+                batch = make_batch(i)
+                arrays = None if defer_stage else stage(batch)
+                return batch, arrays, time.perf_counter() - t0
+
+            self._prefetcher = Prefetcher(produce, depth=depth,
+                                          num_items=num_steps,
+                                          name="sample-stream")
+        else:
+            if self._finish is None:
+                if stage is None:
+                    raise ValueError(
+                        "pool mode requires finish_stage (or stage as the "
+                        "consumer-side fallback)"
+                    )
+                self._finish = lambda batch, host: stage(batch)
+            if pool is not None:
+                # externally-owned, open-ended pool: draw num_steps items,
+                # leave it running on close
+                self._pool = pool
+                self._owns_pool = False
+                self._remaining = num_steps
+            else:
+                if worker_task is None:
+                    raise ValueError(
+                        "num_workers > 0 requires a picklable worker_task "
+                        "(see repro.data.worker_pool.SampleStageTask) or an "
+                        "already-running pool"
+                    )
+                from repro.data.worker_pool import WorkerPool
+
+                self._pool = WorkerPool(worker_task, num_workers=num_workers,
+                                        depth=depth, num_items=num_steps,
+                                        name="sample-pool")
+
+    @property
+    def num_workers(self) -> int:
+        return self._pool.num_workers if self._pool is not None else 0
 
     def __iter__(self) -> "SampleStream":
         return self
 
     def __next__(self) -> Tuple[object, object, float]:
+        if self._pool is not None:
+            if self._remaining is not None:
+                if self._remaining <= 0:
+                    raise StopIteration
+                self._remaining -= 1
+            batch, host, host_s = next(self._pool)
+            # consumer-side completion: device placement of worker-staged
+            # arrays, or full (fresh) staging when workers only sampled —
+            # either way this slice of host time is NOT overlapped
+            t0 = time.perf_counter()
+            arrays = self._finish(batch, host)
+            return batch, arrays, host_s + time.perf_counter() - t0
         batch, arrays, host_s = next(self._prefetcher)
         if self._defer:
             # "fresh" snapshot policy: stage on the consumer, against the
@@ -69,7 +142,10 @@ class SampleStream:
         return batch, arrays, host_s
 
     def close(self) -> None:
-        self._prefetcher.close()
+        if self._pool is not None and self._owns_pool:
+            self._pool.close()
+        if self._prefetcher is not None:
+            self._prefetcher.close()
 
     def __enter__(self) -> "SampleStream":
         return self

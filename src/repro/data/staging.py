@@ -1,0 +1,135 @@
+"""Host-side batch staging, factored out of the SPMD executor.
+
+``repro.core.raf_spmd.stack_batch`` assembles the stacked device arrays for
+one sampled batch — masks, padded parent-feature gathers (``qfeat``), and
+leaf-feature gathers (``hfeat``) laid out branch-major per shard.  All of
+that work is pure numpy; only the final device placement needs jax.  This
+module holds the numpy core so that:
+
+  * the SPMD executor's ``stage`` and the multi-worker sampling pool
+    (``repro.data.worker_pool``, DESIGN.md §9) run the **same** code — a
+    worker-staged batch is bit-identical to a consumer-staged one by
+    construction, not by parallel maintenance of two gather loops;
+  * sampler worker processes stay jax-free: a :class:`StackRecipe` is a
+    small picklable extract of the :class:`~repro.core.raf_spmd.StackedPlan`
+    (slot→branch maps and type names — no jitted functions, no jnp arrays),
+    so shipping it to a spawned worker costs a few kilobytes and no jax
+    import.
+
+The recipe is built by :meth:`StackRecipe.from_plan` via duck typing on the
+plan's public attributes, keeping this module import-light in both
+directions (no ``repro.core`` import here, no ``repro.data`` import needed
+to *define* the plan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+__all__ = ["StackRecipe", "stack_batch_host"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StackRecipe:
+    """Picklable description of the host staging of a stacked batch.
+
+    Per level ``d`` (1-based, index ``d-1`` in the tuples below):
+    ``slot_branch[d-1]`` maps ``[num_shards, rb]`` stack slots to original
+    branch indices (-1 = padding slot); ``src_types``/``dst_types`` give the
+    feature table feeding each branch; ``parents`` gives each branch's parent
+    branch at level ``d-1``.  ``d_pad`` is the common padded feature width.
+    """
+
+    num_shards: int
+    d_pad: int
+    num_layers: int
+    slot_branch: Tuple[np.ndarray, ...]
+    src_types: Tuple[Tuple[str, ...], ...]
+    dst_types: Tuple[Tuple[str, ...], ...]
+    parents: Tuple[Tuple[int, ...], ...]
+
+    @classmethod
+    def from_plan(cls, plan) -> "StackRecipe":
+        """Extract the staging recipe from a ``StackedPlan`` (duck-typed)."""
+        spec = plan.spec
+        return cls(
+            num_shards=int(plan.num_shards),
+            d_pad=int(plan.d_pad),
+            num_layers=int(spec.num_layers),
+            slot_branch=tuple(np.asarray(lp.slot_branch) for lp in plan.levels),
+            src_types=tuple(tuple(row) for row in plan.src_types),
+            dst_types=tuple(tuple(row) for row in plan.dst_types),
+            parents=tuple(
+                tuple(int(b.parent) for b in lv) for lv in spec.levels
+            ),
+        )
+
+    def table_types(self) -> Tuple[str, ...]:
+        """Node types whose feature tables staging reads."""
+        out = set()
+        for row in self.src_types:
+            out.update(row)
+        for row in self.dst_types:
+            out.update(row)
+        return tuple(sorted(out))
+
+
+def _padded_gather(tab: np.ndarray, nids: np.ndarray, d_pad: int) -> np.ndarray:
+    out = np.zeros((len(nids), d_pad), np.float32)
+    out[:, : tab.shape[1]] = tab[nids]
+    return out
+
+
+def stack_batch_host(
+    recipe: StackRecipe,
+    batch,
+    tables: Dict[str, np.ndarray],
+) -> Dict[str, np.ndarray]:
+    """The numpy core of ``raf_spmd.stack_batch``: assemble the stacked host
+    arrays for one :class:`~repro.graph.sampler.SampledBatch`.
+
+    ``tables`` must hold a feature table for every node type the recipe's
+    branches touch (frozen learnable tables included).  Returns the
+    ``seeds``/``labels``/``mask{d}``/``qfeat{d}``/``hfeat{k}`` dict the SPMD
+    executor device-puts; values are plain numpy so a worker process can
+    compute them and ship them over a queue.
+    """
+    k, dp, P = recipe.num_layers, recipe.d_pad, recipe.num_shards
+    B = batch.batch_size
+    out: Dict[str, np.ndarray] = {
+        "seeds": np.asarray(batch.seeds),
+        "labels": np.asarray(batch.labels),
+    }
+    n_prev = B
+    for d in range(1, k + 1):
+        sb = recipe.slot_branch[d - 1]
+        rb = sb.shape[1]
+        lv = batch.levels[d - 1]
+        n_d = lv.nids.shape[1]
+        mask = np.zeros((P, rb, n_d), bool)
+        qfeat = np.zeros((P, rb, n_prev, dp), np.float32)
+        hfeat = np.zeros((P, rb, n_d, dp), np.float32) if d == k else None
+        for p in range(P):
+            for s in range(rb):
+                b = int(sb[p, s])
+                if b < 0:
+                    continue
+                mask[p, s] = lv.mask[b]
+                parent_nids = (
+                    batch.seeds if d == 1
+                    else batch.levels[d - 2].nids[recipe.parents[d - 1][b]]
+                )
+                qfeat[p, s] = _padded_gather(
+                    tables[recipe.dst_types[d - 1][b]], parent_nids, dp)
+                if d == k:
+                    hfeat[p, s] = _padded_gather(
+                        tables[recipe.src_types[d - 1][b]], lv.nids[b], dp)
+        out[f"mask{d}"] = mask.reshape(P * rb, n_d)
+        out[f"qfeat{d}"] = qfeat.reshape(P * rb, n_prev, dp)
+        if d == k:
+            out[f"hfeat{d}"] = hfeat.reshape(P * rb, n_d, dp)
+        n_prev = n_d
+    return out

@@ -1,0 +1,353 @@
+"""Process-pool sampling over a shared-memory graph (DESIGN.md §9).
+
+The thread :class:`~repro.data.prefetch.Prefetcher` caps host throughput at
+one CPU core; this module lifts the host pipeline onto N worker *processes*:
+
+  * **stripe assignment** — worker ``w`` of ``W`` computes items
+    ``w, w+W, w+2W, ...``.  Each worker produces its stripe strictly in
+    order onto its own bounded queue, so the consumer reconstructs global
+    step order by round-robining the queues (``step i`` is always the head
+    of queue ``i % W``) — a reorder buffer with zero bookkeeping, and
+    bounded lookahead of ``W × depth`` items.
+  * **determinism** — tasks are pure functions of their item index
+    (``NeighborSampler.batch_at`` under an :class:`EpochSchedule`), so the
+    stripe decomposition cannot change the data: any worker count, including
+    the thread path, yields bit-identical batches.
+  * **zero-copy graph** — workers attach the shared-memory graph store
+    (``repro.graph.shm``) named in the task; only the few-hundred-byte
+    handle crosses the process boundary at startup, never the graph.
+  * **failure discipline** — an exception anywhere in a worker (setup or
+    per-item) is shipped to the consumer and re-raised from ``__next__``
+    after the pool shuts down; a worker that dies without a word raises
+    :class:`WorkerDiedError`.  ``close()`` is idempotent, drains the queues,
+    joins every process, and terminates stragglers.
+
+Workers are **spawned** (never forked — the parent owns jax threads) and
+deliberately jax-free: a :class:`SampleStageTask` imports only numpy-level
+modules, so spawn cost is numpy import plus a shared-memory attach.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import multiprocessing as mp
+import os
+import queue as _queue
+import sys
+import time
+import traceback
+from typing import Optional, Tuple
+
+__all__ = [
+    "WorkerPool",
+    "WorkerDiedError",
+    "EpochSchedule",
+    "SampleStageTask",
+]
+
+_POLL_S = 0.05
+
+
+class WorkerDiedError(RuntimeError):
+    """A worker process exited without posting a result or a failure."""
+
+
+class _Done:
+    """Queue sentinel: this worker's stripe is exhausted."""
+
+
+class _Failure:
+    """Queue sentinel: a worker raised; carries the exception + traceback."""
+
+    def __init__(self, exc: BaseException, tb: str):
+        self.exc = exc
+        self.tb = tb
+
+
+def _put(q, stop, item) -> bool:
+    """Blocking put that aborts (returns False) once the pool is stopping."""
+    while not stop.is_set():
+        try:
+            q.put(item, timeout=_POLL_S)
+            return True
+        except _queue.Full:
+            continue
+    return False
+
+
+@contextlib.contextmanager
+def _spawnable_main():
+    """Make ``spawn`` work when ``__main__`` has a phantom ``__file__``.
+
+    ``python - <<EOF`` scripts (CI smoke jobs, ad-hoc drivers) leave
+    ``__main__.__file__ = "<stdin>"``; spawn's preparation step would try to
+    re-run that non-file in every worker and crash.  Hiding the attribute
+    while the workers start makes spawn skip main-module re-execution —
+    correct here, since pool tasks live in importable modules, never in
+    ``__main__``."""
+    main = sys.modules.get("__main__")
+    path = getattr(main, "__file__", None)
+    phantom = (
+        main is not None and path is not None
+        and getattr(main, "__spec__", None) is None
+        and not os.path.exists(path)
+    )
+    if phantom:
+        del main.__file__
+    try:
+        yield
+    finally:
+        if phantom:
+            main.__file__ = path
+
+
+def _picklable_failure(exc: BaseException) -> _Failure:
+    """Wrap ``exc`` so it survives the queue (exotic exceptions that don't
+    pickle are downgraded to a RuntimeError carrying their repr)."""
+    import pickle
+
+    tb = traceback.format_exc()
+    try:
+        pickle.loads(pickle.dumps(exc))
+        return _Failure(exc, tb)
+    except BaseException:
+        return _Failure(RuntimeError(f"worker failure: {exc!r}"), tb)
+
+
+def _worker_main(task, wid: int, num_workers: int,
+                 num_items: Optional[int], q, stop) -> None:
+    """Entry point of one spawned worker: setup, stripe loop, teardown."""
+    try:
+        task.setup()
+    except BaseException as exc:  # noqa: BLE001 — delivered to the consumer
+        _put(q, stop, _picklable_failure(exc))
+        return
+    try:
+        i = wid
+        while not stop.is_set() and (num_items is None or i < num_items):
+            item = task(i)
+            if not _put(q, stop, item):
+                return
+            i += num_workers
+        if not stop.is_set():
+            _put(q, stop, _Done())
+    except BaseException as exc:  # noqa: BLE001
+        _put(q, stop, _picklable_failure(exc))
+    finally:
+        try:
+            task.teardown()
+        except BaseException:
+            pass
+
+
+class WorkerPool:
+    """Ordered fan-out of ``task(0), task(1), ...`` over N processes.
+
+    ``task`` must be picklable with three hooks: ``setup()`` (once, in the
+    worker), ``__call__(i)`` (the item for global index ``i``), and
+    ``teardown()`` (best-effort, at exit).  Iterator + context manager;
+    items come back strictly in index order.
+    """
+
+    def __init__(
+        self,
+        task,
+        num_workers: int,
+        depth: int = 2,
+        num_items: Optional[int] = None,
+        name: str = "sampler-pool",
+    ):
+        if num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if num_items is not None and num_items < 0:
+            raise ValueError(f"num_items must be >= 0, got {num_items}")
+        ctx = mp.get_context("spawn")
+        self.num_workers = num_workers
+        self.num_items = num_items
+        self._stop = ctx.Event()
+        self._queues = [ctx.Queue(maxsize=depth) for _ in range(num_workers)]
+        self._procs = []
+        self._next = 0
+        self._closed = False
+        self._done = False
+        try:
+            with _spawnable_main():
+                for w in range(num_workers):
+                    p = ctx.Process(
+                        target=_worker_main,
+                        args=(task, w, num_workers, num_items,
+                              self._queues[w], self._stop),
+                        name=f"{name}-{w}",
+                        daemon=True,
+                    )
+                    p.start()
+                    self._procs.append(p)
+        except BaseException:
+            self.close()
+            raise
+
+    # -- consumer side -------------------------------------------------------
+
+    def __iter__(self) -> "WorkerPool":
+        return self
+
+    def __next__(self):
+        if self._closed:
+            raise RuntimeError("WorkerPool is closed")
+        if self._done:
+            raise StopIteration
+        w = self._next % self.num_workers
+        q, proc = self._queues[w], self._procs[w]
+        while True:
+            try:
+                item = q.get(timeout=_POLL_S)
+                break
+            except _queue.Empty:
+                if not proc.is_alive():
+                    # a last put may still be in flight in the feeder pipe
+                    try:
+                        item = q.get(timeout=_POLL_S)
+                        break
+                    except _queue.Empty:
+                        self.close()
+                        raise WorkerDiedError(
+                            f"worker {w} exited (code {proc.exitcode}) without "
+                            f"delivering item {self._next}"
+                        ) from None
+        if isinstance(item, _Done):
+            # stripes interleave: worker w done at position i means every
+            # worker's next index is >= num_items — iteration is complete
+            self._done = True
+            raise StopIteration
+        if isinstance(item, _Failure):
+            self.close()
+            if item.tb:
+                item.exc.__cause__ = RuntimeError(
+                    f"worker traceback:\n{item.tb}")
+            raise item.exc
+        self._next += 1
+        return item
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop all workers, drain the queues, join (terminate stragglers).
+
+        Idempotent; after it returns ``__next__`` raises RuntimeError."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        deadline = time.monotonic() + timeout
+        while any(p.is_alive() for p in self._procs):
+            # drain so workers blocked on a full queue observe the stop event
+            for q in self._queues:
+                try:
+                    while True:
+                        q.get_nowait()
+                except (_queue.Empty, OSError, ValueError):
+                    pass
+            if time.monotonic() >= deadline:
+                break
+            for p in self._procs:
+                p.join(timeout=_POLL_S)
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=1.0)
+        for q in self._queues:
+            try:
+                q.cancel_join_thread()
+                q.close()
+            except BaseException:
+                pass
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # best-effort: never leak processes
+        try:
+            self.close(timeout=0.5)
+        except BaseException:
+            pass
+
+
+# --------------------------------------------------------------------------
+# the sampling task
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochSchedule:
+    """Maps a global step to ``(epoch_seed, step-in-epoch)``.
+
+    Epoch ``e`` covers global steps ``[e*E, (e+1)*E)`` and shuffles with
+    ``epoch_seed_base + e*E`` — the session's historical seeding, shared
+    here so the serial loop, the thread stream and every pool worker derive
+    identical batches from identical positions."""
+
+    epoch_seed_base: int
+    steps_per_epoch: int
+    start_step: int = 0
+    shuffle: bool = True
+
+    def seed_and_index(self, i: int) -> Tuple[int, int]:
+        s = self.start_step + i
+        e, idx = divmod(s, self.steps_per_epoch)
+        return self.epoch_seed_base + e * self.steps_per_epoch, idx
+
+
+@dataclasses.dataclass
+class SampleStageTask:
+    """The pool task of the HGNN host pipeline: sample (and optionally
+    stage) the batch at one global step.
+
+    ``handle`` names the shared-memory graph store; ``recipe`` (a
+    :class:`~repro.data.staging.StackRecipe`, or None) moves the frozen-table
+    host staging into the worker — its feature tables must have been
+    exported into the store (``share_graph(..., tables=...)``).  Returns
+    ``(batch, host_arrays | None, host_seconds)`` per item, mirroring the
+    thread stream's payload.
+    """
+
+    handle: object  # repro.graph.shm.GraphHandle
+    spec: object  # repro.graph.sampler.SampleSpec
+    batch_size: int
+    sampler_seed: int
+    schedule: EpochSchedule
+    recipe: object = None
+
+    def setup(self) -> None:
+        from repro.graph.sampler import NeighborSampler
+        from repro.graph.shm import attach
+
+        self._attached = attach(self.handle)
+        self._sampler = NeighborSampler(
+            self._attached.graph, self.spec, self.batch_size,
+            seed=self.sampler_seed,
+        )
+        self._tables = self._attached.tables
+
+    def __call__(self, i: int):
+        from repro.data.staging import stack_batch_host
+
+        t0 = time.perf_counter()
+        epoch_seed, idx = self.schedule.seed_and_index(i)
+        batch = self._sampler.batch_at(
+            idx, epoch_seed=epoch_seed, shuffle=self.schedule.shuffle)
+        host = (
+            stack_batch_host(self.recipe, batch, self._tables)
+            if self.recipe is not None else None
+        )
+        return batch, host, time.perf_counter() - t0
+
+    def teardown(self) -> None:
+        attached = getattr(self, "_attached", None)
+        if attached is not None:
+            attached.close()

@@ -20,6 +20,7 @@ Two pieces:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -148,6 +149,10 @@ class FeatureCache:
         self.host = dict(host_tables)
         self.learnable = dict(learnable_types)
         self.num_shards = num_shards
+        # guards the hit/miss counters: fetch() runs in the async pipeline's
+        # producer thread while hit_rates()/miss_time() read from the
+        # consumer — same lock discipline EmbedEngine uses for snapshots
+        self._stats_lock = threading.Lock()
         # kernels config knob: device-resident hit gathers go through the
         # scalar-prefetch gather_rows kernel when the backend supports it
         self.kernels = kernels
@@ -192,8 +197,9 @@ class FeatureCache:
             return jnp.asarray(self.host[ntype][nids])
         slots = c.slot_of[nids]
         hit = slots >= 0
-        c.hits += int(hit.sum())
-        c.misses += int((~hit).sum())
+        with self._stats_lock:
+            c.hits += int(hit.sum())
+            c.misses += int((~hit).sum())
         if hit.all():
             return self._device_gather(c.data, slots)
         rows_miss = jnp.asarray(self.host[ntype][nids[~hit]])
@@ -253,21 +259,24 @@ class FeatureCache:
 
     def hit_rates(self) -> Dict[str, float]:
         out = {}
-        for t, c in self.caches.items():
-            tot = c.hits + c.misses
-            out[t] = c.hits / tot if tot else 0.0
+        with self._stats_lock:
+            for t, c in self.caches.items():
+                tot = c.hits + c.misses
+                out[t] = c.hits / tot if tot else 0.0
         return out
 
     def reset_stats(self) -> None:
-        for c in self.caches.values():
-            c.hits = c.misses = 0
+        with self._stats_lock:
+            for c in self.caches.values():
+                c.hits = c.misses = 0
 
     def miss_time(self, penalties: MissPenaltyProfile, bytes_per_elem: int = 4) -> float:
         """Estimated seconds spent on cache misses so far (penalty model)."""
         t_total = 0.0
-        for t, c in self.caches.items():
-            rb = row_bytes(penalties.dims[t], penalties.learnable[t], bytes_per_elem)
-            t_total += c.misses * penalties.ratios[t] * rb
+        with self._stats_lock:
+            for t, c in self.caches.items():
+                rb = row_bytes(penalties.dims[t], penalties.learnable[t], bytes_per_elem)
+                t_total += c.misses * penalties.ratios[t] * rb
         return t_total
 
     def consistency_check(self) -> bool:

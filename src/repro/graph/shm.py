@@ -1,0 +1,303 @@
+"""Shared-memory backing for :class:`~repro.graph.hetgraph.HetGraph`.
+
+The multi-worker sampling pool (``repro.data.worker_pool``, DESIGN.md §9)
+feeds N sampler processes from **one** copy of the graph: topology
+(``indptr``/``indices`` per mono-relation CSR), labels, the train-node set,
+and optionally frozen feature tables are exported once into a single
+:mod:`multiprocessing.shared_memory` segment, and each worker maps them
+zero-copy — no pickling of the graph per task, no per-worker replicas.
+
+Three pieces:
+
+:func:`share_graph`
+    Owner side.  Copies the graph's arrays into a fresh named segment and
+    returns a :class:`SharedHetGraph` whose picklable :attr:`~SharedHetGraph.
+    handle` describes the layout.  Creation is transactional: any failure
+    while populating the segment closes **and unlinks** it before re-raising,
+    so an error path never leaks a ``/dev/shm`` segment.
+
+:func:`attach`
+    Worker side.  Maps the segment named by a :class:`GraphHandle` and
+    rebuilds a read-only :class:`HetGraph` (plus any exported staging tables)
+    whose numpy arrays are views into the shared buffer.  Attaching never
+    registers with the ``resource_tracker`` (workers must not unlink the
+    owner's segment at exit, nor warn about "leaked" memory they don't own).
+
+Lifecycle
+    ``SharedHetGraph.close()`` unmaps the owner's view; ``unlink()`` (also
+    run by ``__exit__`` and, best-effort, ``__del__``) removes the segment
+    from the OS.  ``AttachedHetGraph.close()`` unmaps a worker's view and is
+    likewise idempotent.  :func:`live_segments` lists segments still present
+    under ``/dev/shm`` — the leak check used by tests and CI.
+
+This module is deliberately jax-free: sampler workers import it (via
+``repro.data.worker_pool``) and must stay lightweight numpy processes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import secrets
+from multiprocessing import shared_memory
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.hetgraph import CSR, HetGraph, Relation
+
+__all__ = [
+    "GraphHandle",
+    "SharedHetGraph",
+    "AttachedHetGraph",
+    "share_graph",
+    "attach",
+    "live_segments",
+]
+
+_ALIGN = 64  # byte alignment of each array inside the segment
+SEGMENT_PREFIX = "heta-shm-"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayRef:
+    """Location of one array inside the shared segment."""
+
+    offset: int
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphHandle:
+    """Picklable description of a shared graph segment.
+
+    Workers receive this (a few hundred bytes) instead of the graph itself;
+    :func:`attach` turns it back into a :class:`HetGraph` of zero-copy views.
+    Array keys: ``rel/<i>/indptr|indices`` (relation order matches
+    :attr:`relations`), ``labels``, ``train_nodes``, ``feat/<ntype>`` and
+    ``table/<name>`` for exported staging tables.
+    """
+
+    segment: str
+    owner_pid: int
+    num_nodes: Tuple[Tuple[str, int], ...]
+    relations: Tuple[Tuple[str, str, str], ...]
+    target_type: str
+    num_classes: int
+    graph_name: str
+    arrays: Tuple[Tuple[str, ArrayRef], ...]
+
+    @property
+    def table_names(self) -> Tuple[str, ...]:
+        return tuple(k[len("table/"):] for k, _ in self.arrays
+                     if k.startswith("table/"))
+
+
+def _layout(arrays: Dict[str, np.ndarray]) -> Tuple[Dict[str, ArrayRef], int]:
+    refs, off = {}, 0
+    for key, arr in arrays.items():
+        if arr.dtype.hasobject:
+            # object arrays are pointers — meaningless in another process
+            raise ValueError(f"array {key!r} has object dtype; only plain "
+                             "numeric/bool arrays can be shared")
+        refs[key] = ArrayRef(offset=off, shape=tuple(arr.shape),
+                             dtype=arr.dtype.str)
+        off += -(-arr.nbytes // _ALIGN) * _ALIGN
+    return refs, max(off, 1)
+
+
+def _view(buf, ref: ArrayRef, writeable: bool = False) -> np.ndarray:
+    arr = np.ndarray(ref.shape, dtype=np.dtype(ref.dtype), buffer=buf,
+                     offset=ref.offset)
+    if not writeable:
+        arr.flags.writeable = False
+    return arr
+
+
+def _open_attached(name: str, owner_pid: int) -> shared_memory.SharedMemory:
+    """Attach to an existing segment, tracker-neutrally.
+
+    Sampler workers are always *spawned children* of the owner, and spawn
+    hands them the owner's resource-tracker fd — so their attach-time
+    registration is a set-level no-op on the tracker the owner already
+    registered with, and the owner's eventual ``unlink()`` unregisters the
+    single entry.  Explicit ``track=False`` / ``unregister`` games are not
+    only unnecessary here, they *remove the owner's entry* (same tracker!)
+    and break crash cleanup.  ``owner_pid`` is carried in the handle for
+    diagnostics and for any future non-child attacher that would need its
+    own untracking."""
+    return shared_memory.SharedMemory(name=name)
+
+
+class SharedHetGraph:
+    """Owner handle of a shared graph segment (see module docstring)."""
+
+    def __init__(self, shm: shared_memory.SharedMemory, handle: GraphHandle):
+        self._shm = shm
+        self.handle = handle
+        self._closed = False
+        self._unlinked = False
+
+    # owner-side (writable) view, used by share_graph to populate and by
+    # tests to verify the attach path is genuinely zero-copy
+    def _array(self, key: str) -> np.ndarray:
+        refs = dict(self.handle.arrays)
+        return _view(self._shm.buf, refs[key], writeable=True)
+
+    @property
+    def nbytes(self) -> int:
+        return self._shm.size
+
+    def close(self) -> None:
+        """Unmap the owner's view (the segment itself stays until unlink)."""
+        if not self._closed:
+            self._closed = True
+            self._shm.close()
+
+    def unlink(self) -> None:
+        """Remove the segment from the OS.  Idempotent; implies close()."""
+        self.close()
+        if not self._unlinked:
+            self._unlinked = True
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:
+                pass
+
+    def __enter__(self) -> "SharedHetGraph":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.unlink()
+
+    def __del__(self):  # best-effort: never leak a segment on error paths
+        try:
+            self.unlink()
+        except BaseException:
+            pass
+
+
+class AttachedHetGraph:
+    """A worker's zero-copy view of a shared graph segment.
+
+    ``graph`` is a fully functional read-only :class:`HetGraph`; ``tables``
+    maps exported staging-table names to read-only arrays.  Keep this object
+    alive as long as any view is in use; ``close()`` unmaps."""
+
+    def __init__(self, handle: GraphHandle):
+        self.handle = handle
+        self._shm = _open_attached(handle.segment, handle.owner_pid)
+        self._closed = False
+        refs = dict(handle.arrays)
+        relations: Dict[Relation, CSR] = {}
+        for i, (src, etype, dst) in enumerate(handle.relations):
+            relations[Relation(src, etype, dst)] = CSR(
+                indptr=_view(self._shm.buf, refs[f"rel/{i}/indptr"]),
+                indices=_view(self._shm.buf, refs[f"rel/{i}/indices"]),
+            )
+        features = {
+            k[len("feat/"):]: _view(self._shm.buf, r)
+            for k, r in refs.items() if k.startswith("feat/")
+        }
+        self.graph = HetGraph(
+            num_nodes=dict(handle.num_nodes),
+            relations=relations,
+            target_type=handle.target_type,
+            num_classes=handle.num_classes,
+            features=features,
+            labels=_view(self._shm.buf, refs["labels"]),
+            train_nodes=_view(self._shm.buf, refs["train_nodes"]),
+            name=handle.graph_name,
+        )
+        self.tables: Dict[str, np.ndarray] = {
+            k[len("table/"):]: _view(self._shm.buf, r)
+            for k, r in refs.items() if k.startswith("table/")
+        }
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self.graph = None
+            self.tables = {}
+            self._shm.close()
+
+    def __enter__(self) -> "AttachedHetGraph":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except BaseException:
+            pass
+
+
+def share_graph(
+    graph: HetGraph,
+    include_features: bool = True,
+    tables: Optional[Dict[str, np.ndarray]] = None,
+    name: Optional[str] = None,
+) -> SharedHetGraph:
+    """Export ``graph`` (and optional staging ``tables``) into one segment.
+
+    ``include_features=False`` skips the graph's dense feature arrays —
+    sampler-only pools never read them, and staging pools read the
+    authoritative ``tables`` snapshot instead (which includes frozen
+    learnable rows the graph doesn't carry).  Transactional: a failure while
+    populating closes and unlinks the segment before re-raising.
+    """
+    rel_list: List[Tuple[Relation, CSR]] = sorted(
+        graph.relations.items(), key=lambda rc: rc[0]
+    )
+    arrays: Dict[str, np.ndarray] = {}
+    for i, (_, csr) in enumerate(rel_list):
+        arrays[f"rel/{i}/indptr"] = csr.indptr
+        arrays[f"rel/{i}/indices"] = csr.indices
+    arrays["labels"] = np.asarray(graph.labels)
+    arrays["train_nodes"] = np.asarray(graph.train_nodes)
+    if include_features:
+        for t, f in graph.features.items():
+            arrays[f"feat/{t}"] = np.ascontiguousarray(f)
+    for tname, tab in (tables or {}).items():
+        arrays[f"table/{tname}"] = np.ascontiguousarray(tab)
+
+    refs, total = _layout(arrays)
+    segment = name or f"{SEGMENT_PREFIX}{os.getpid():x}-{secrets.token_hex(4)}"
+    shm = shared_memory.SharedMemory(name=segment, create=True, size=total)
+    handle = GraphHandle(
+        segment=segment,
+        owner_pid=os.getpid(),
+        num_nodes=tuple(sorted(graph.num_nodes.items())),
+        relations=tuple((r.src, r.etype, r.dst) for r, _ in rel_list),
+        target_type=graph.target_type,
+        num_classes=int(graph.num_classes),
+        graph_name=graph.name,
+        arrays=tuple(refs.items()),
+    )
+    store = SharedHetGraph(shm, handle)
+    try:
+        for key, arr in arrays.items():
+            np.copyto(store._array(key), arr, casting="no")
+    except BaseException:
+        store.unlink()
+        raise
+    return store
+
+
+def attach(handle: GraphHandle) -> AttachedHetGraph:
+    """Map the segment described by ``handle`` (see :class:`AttachedHetGraph`)."""
+    return AttachedHetGraph(handle)
+
+
+def live_segments(prefix: str = SEGMENT_PREFIX) -> List[str]:
+    """Names of shared-memory segments currently present (the leak check).
+
+    Reads ``/dev/shm``; returns ``[]`` on platforms without it (the tests
+    that use this skip there)."""
+    try:
+        return sorted(n for n in os.listdir("/dev/shm") if n.startswith(prefix))
+    except FileNotFoundError:
+        return []

@@ -322,21 +322,25 @@ def test_kernel_config_round_trips():
 
 def test_pipeline_config_round_trips():
     cfg = HetaConfig().updated(pipeline=dict(enabled=True, depth=3,
-                                             snapshot="fresh"))
+                                             snapshot="fresh", num_workers=4))
     assert HetaConfig.from_dict(cfg.to_dict()) == cfg
     assert HetaConfig.from_flat_kwargs(**cfg.to_flat_kwargs()) == cfg
     with pytest.raises(ValueError, match="snapshot"):
         HetaConfig().updated(pipeline=dict(snapshot="psychic"))
     with pytest.raises(ValueError, match="depth"):
         HetaConfig().updated(pipeline=dict(depth=0))
+    with pytest.raises(ValueError, match="num_workers"):
+        HetaConfig().updated(pipeline=dict(num_workers=-1))
     # derived CLI flags
     ap = argparse.ArgumentParser()
     add_config_args(ap)
     args = ap.parse_args(["--pipeline", "--prefetch-depth", "4",
-                          "--snapshot-policy", "fresh"])
+                          "--snapshot-policy", "fresh", "--num-workers", "2"])
     got = config_from_args(args)
     assert got.pipeline.enabled and got.pipeline.depth == 4
     assert got.pipeline.snapshot == "fresh"
+    assert got.pipeline.num_workers == 2
+    assert config_from_args(ap.parse_args([])).pipeline.num_workers == 0
 
 
 def test_legacy_step_only_executor_still_works():

@@ -118,6 +118,39 @@ def test_prefetcher_close_unblocks_full_queue_producer():
     assert not pf._thread.is_alive()
 
 
+def test_prefetcher_close_idempotent_after_producer_failure():
+    """A failure already shut the stream down from __next__; every later
+    close() — explicit, context exit, or GC — must be a silent no-op."""
+    def make(i):
+        raise ValueError("dead on arrival")
+
+    pf = Prefetcher(make, depth=1)
+    with pytest.raises(ValueError, match="dead on arrival"):
+        next(pf)
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        pf.close()
+        pf.close(warn=False)
+        pf.__del__()  # the GC path must never raise or warn
+    assert not pf._thread.is_alive()
+
+
+def test_prefetcher_del_mid_run_is_quiet():
+    """GC'ing a live stream (no explicit close) joins the thread without
+    warning noise — the interpreter-shutdown contract, exercised live."""
+    import gc
+    import warnings
+
+    pf = Prefetcher(lambda i: i, depth=1)
+    assert next(pf) == 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        del pf
+        gc.collect()
+
+
 def test_prefetcher_runs_in_background_thread():
     tids = []
 
@@ -270,6 +303,145 @@ def test_pipeline_parity_models(model, executor):
     assert off["losses"] == on["losses"]  # bit-identical
     assert on["pipeline"] and not off["pipeline"]
     assert np.all(np.isfinite(on["losses"]))
+
+
+def test_sample_stream_facade_validates_modes():
+    s = _mag_sampler(seed=2)
+    with pytest.raises(ValueError, match="worker_task"):
+        SampleStream(lambda i: s.batch_at(i, epoch_seed=1), lambda b: b,
+                     num_workers=2)
+    with pytest.raises(ValueError, match="make_batch"):
+        SampleStream(stage=lambda b: b, num_workers=0)
+    with pytest.raises(ValueError, match="num_workers"):
+        SampleStream(lambda i: i, lambda b: b, num_workers=-1)
+
+
+# --------------------------------------------------------------------------
+# multi-worker host pipeline (process pool over the shm graph store):
+# workers ∈ {0, 1, 4} must be bit-identical to the serial loop on every
+# executor — frozen tables make staging time-invariant, and batch_at purity
+# makes the stripe decomposition invisible (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", ["vanilla", "raf", "raf_spmd"])
+def test_worker_pool_parity_all_executors(executor):
+    from repro.api import (DataConfig, Heta, HetaConfig, ModelConfig,
+                           PartitionConfig, RunConfig)
+    from repro.graph.shm import live_segments
+
+    def run(workers):
+        c = HetaConfig(
+            data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                            batch_size=16),
+            partition=PartitionConfig(num_partitions=2),
+            model=ModelConfig(hidden=32, train_learnable=False),
+            run=RunConfig(executor=executor, steps=3, lr=1e-2, seed=0),
+        )
+        if workers is not None:
+            c = c.updated(pipeline=dict(enabled=True, num_workers=workers))
+        sess = Heta(c)
+        try:
+            return sess.run()
+        finally:
+            sess.close_pipeline()
+
+    serial = run(None)
+    for w in (0, 1, 4):
+        r = run(w)
+        assert serial["losses"] == r["losses"], (executor, w)
+        assert r["sampler_workers"] == w
+        assert r["samples_per_s"] > 0
+    assert serial["sampler_workers"] == 0
+    assert not live_segments()  # every run released its store
+
+
+def test_worker_pool_learnable_stages_fresh_on_consumer():
+    """While learnable tables train, pool workers only sample — staging runs
+    consumer-side against fresh tables, so pooled losses are bit-exact (the
+    thread pipeline's "stale" policy is only approximate here)."""
+    from repro.api import (DataConfig, Heta, HetaConfig, ModelConfig,
+                           PartitionConfig, RunConfig)
+
+    def run(workers):
+        c = HetaConfig(
+            data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                            batch_size=16),
+            partition=PartitionConfig(num_partitions=2),
+            model=ModelConfig(hidden=32, train_learnable=True),
+            run=RunConfig(executor="raf_spmd", steps=3, lr=1e-2, seed=0),
+        )
+        if workers:
+            c = c.updated(pipeline=dict(enabled=True, num_workers=workers))
+        sess = Heta(c)
+        try:
+            return sess.run()
+        finally:
+            sess.close_pipeline()
+
+    assert run(0)["losses"] == run(2)["losses"]
+
+
+def test_pool_persists_across_fits_and_stays_bit_identical():
+    """Consecutive fit() calls reuse one pool + shm store (spawn amortized)
+    and the two-fit pooled trajectory equals one serial fit of the same
+    length; a serial step() in between forces a clean respawn."""
+    from repro.api import (DataConfig, Heta, HetaConfig, ModelConfig,
+                           PartitionConfig, RunConfig)
+    from repro.graph.shm import live_segments
+
+    def cfg(workers=None):
+        c = HetaConfig(
+            data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                            batch_size=16),
+            partition=PartitionConfig(num_partitions=2),
+            model=ModelConfig(hidden=32, train_learnable=False),
+            run=RunConfig(executor="raf_spmd", steps=6, lr=1e-2, seed=0),
+        )
+        if workers is not None:
+            c = c.updated(pipeline=dict(enabled=True, num_workers=workers))
+        return c
+
+    serial = Heta(cfg()).run()
+
+    sess = Heta(cfg(workers=2))
+    sess.build_graph(); sess.partition(); sess.profile_and_cache(); sess.compile()
+    sess.fit(2)
+    pool_a = sess._pool_cache[1]
+    sess.fit(2)
+    assert sess._pool_cache[1] is pool_a  # reused, not respawned
+    sess.step()  # serial step desyncs the stripe position...
+    sess.fit(1)
+    assert sess._pool_cache[1] is not pool_a  # ...so the pool respawned
+    assert sess.losses == serial["losses"]
+    sess.close_pipeline()
+    assert sess._pool_cache is None
+    sess.close_pipeline()  # idempotent
+    assert not live_segments()
+
+
+def test_evaluate_with_workers_matches_serial():
+    from repro.api import (DataConfig, Heta, HetaConfig, ModelConfig,
+                           PartitionConfig, RunConfig)
+
+    def build(workers):
+        c = HetaConfig(
+            data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                            batch_size=16),
+            partition=PartitionConfig(num_partitions=2),
+            model=ModelConfig(hidden=32, train_learnable=False),
+            run=RunConfig(executor="raf_spmd", steps=0, lr=1e-2, seed=0),
+        )
+        if workers is not None:
+            c = c.updated(pipeline=dict(enabled=True, num_workers=workers))
+        sess = Heta(c)
+        sess.run()
+        return sess
+
+    ref = build(None).evaluate(num_batches=2)
+    pooled = build(2).evaluate(num_batches=2)
+    assert ref["loss"] == pooled["loss"]
+    assert ref["num_batches"] == pooled["num_batches"] == 2
 
 
 def test_seedless_epochs_vary_but_replay_deterministically():

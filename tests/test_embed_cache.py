@@ -126,6 +126,43 @@ def test_cache_write_hits_device_copy_not_host(mag_setup):
     assert not np.array_equal(np.asarray(eng.table(t)[nid]), host_before)
 
 
+def test_stat_counters_thread_safe(mag_setup):
+    """fetch() runs in the async pipeline's producer thread while
+    hit_rates()/miss_time() read from the consumer: hammer both sides and
+    check the counters come out exact (lost updates would undercount)."""
+    import threading
+
+    g, spec, hot, pen = mag_setup
+    eng = EmbedEngine(g, 8, hot, pen, cache_bytes=1 << 18)
+    t = "author"
+    nids = np.arange(64) % g.num_nodes[t]
+    rounds, threads = 50, 4
+    errs = []
+
+    def fetcher():
+        try:
+            for _ in range(rounds):
+                eng.cache.fetch(t, nids)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    def reader():
+        for _ in range(rounds):
+            eng.cache.hit_rates()
+            eng.cache.miss_time(pen)
+
+    eng.cache.reset_stats()
+    ts = [threading.Thread(target=fetcher) for _ in range(threads)]
+    ts.append(threading.Thread(target=reader))
+    for th in ts:
+        th.start()
+    for th in ts:
+        th.join()
+    assert not errs
+    c = eng.cache.caches[t]
+    assert c.hits + c.misses == rounds * threads * len(nids)
+
+
 def test_varying_dims_profile():
     g = donor_like(scale=0.001)
     pen = profile_miss_penalties(g, measured=False)
