@@ -1,0 +1,122 @@
+"""Serving-tier benchmark: micro-batch latency/QPS + full-graph inference.
+
+Drives the ``repro.serve`` tier end-to-end on a degree-capped
+quickstart-sized graph: train briefly, materialize embeddings with
+``Heta.infer_all`` (reported as nodes/s), then sweep micro-batch flush
+settings — concurrent client threads firing lookups at the
+``EmbeddingServer`` — recording p50/p99 latency, QPS and per-type cache
+hit rates per setting.  Requests follow a Zipf-ish skew over node ids so
+the serve-side ``FeatureCache`` sees a realistic hot set.
+
+``--smoke`` shrinks the workload for CI and (as everywhere) the records
+land in ``BENCH_serve.json`` via ``write_records``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from benchmarks._util import emit, write_records
+
+# (max_batch, max_wait_ms): a latency-biased and a throughput-biased policy
+SETTINGS = ((8, 1.0), (64, 4.0))
+
+
+def _fire(server, *, num_requests: int, concurrency: int, ids_per_request: int,
+          num_target: int, seed: int = 0) -> float:
+    """Closed-loop clients: each thread submits its share of lookups with a
+    Zipf-skewed id mix.  Returns the wall seconds for the whole volley."""
+
+    def client(k: int) -> None:
+        rng = np.random.default_rng(seed + k)
+        for _ in range(num_requests // concurrency):
+            # zipf over ranks, folded into the id range: a hot head + long tail
+            nids = (rng.zipf(1.3, ids_per_request) - 1) % num_target
+            server.query(nids)
+
+    threads = [threading.Thread(target=client, args=(k,))
+               for k in range(concurrency)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = False):
+    from repro.api import DataConfig, Heta, HetaConfig, ModelConfig, RunConfig
+    from repro.serve import bounded_graph
+
+    steps = 2 if smoke else 5
+    num_requests = 64 if smoke else 512
+    concurrency = 4 if smoke else 8
+    cfg = HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(4, 4),
+                        batch_size=16),
+        model=ModelConfig(model="rgcn", hidden=32, num_heads=2,
+                          learnable_dim=16),
+        run=RunConfig(executor="raf_spmd", steps=steps, seed=0),
+    )
+    sess = Heta(cfg)
+    g = bounded_graph(sess.build_graph(), 8)
+    sess.build_graph(g)
+    sess.partition()
+    sess.profile_and_cache()
+    sess.compile()
+    sess.fit()
+
+    t0 = time.perf_counter()
+    store = sess.infer_all()
+    dt = time.perf_counter() - t0
+    total_nodes = sum(a.shape[0] for a in store.embeddings.values())
+    emit("serve/infer_all", dt * 1e6,
+         f"{total_nodes / dt:,.0f} nodes/s",
+         kind="infer_all", nodes=total_nodes, nodes_per_s=round(total_nodes / dt, 1),
+         mib=round(store.nbytes / 2**20, 3), smoke=smoke)
+
+    n_target = g.num_nodes[g.target_type]
+    results = []
+    for max_batch, max_wait_ms in SETTINGS:
+        server = sess.serve(max_batch=max_batch, max_wait_ms=max_wait_ms)
+        # warm the jitted scoring step out of the timed volley
+        server.query(np.arange(min(4, n_target)))
+        server.reset_stats()
+        wall = _fire(server, num_requests=num_requests, concurrency=concurrency,
+                     ids_per_request=4, num_target=n_target)
+        stats = server.stats()
+        emit(f"serve/query/b{max_batch}_w{max_wait_ms}",
+             stats.p50_ms * 1e3,
+             f"p99 {stats.p99_ms:.2f} ms, {stats.qps:,.0f} qps",
+             kind="serve", max_batch=max_batch, max_wait_ms=max_wait_ms,
+             concurrency=concurrency, requests=stats.count,
+             flushes=stats.flushes,
+             p50_ms=round(stats.p50_ms, 4), p99_ms=round(stats.p99_ms, 4),
+             qps=round(stats.qps, 1),
+             hit_rates={t: round(r, 4) for t, r in stats.hit_rates.items()},
+             wall_s=round(wall, 4), smoke=smoke)
+        results.append(stats)
+        # sess.serve() memoizes one server per session; drop it so the next
+        # setting builds a fresh batcher (the store stays materialized)
+        srv, sess._server = sess._server, None
+        srv.close()
+    sess.close_serving()
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload (same record schema)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    write_records(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,9 +27,9 @@ Or collapse all stages: ``result = Heta(cfg).run()``.
 Configuration
 =============
 
-:class:`HetaConfig` is a typed tree of seven sections — ``data``,
-``partition``, ``model``, ``cache``, ``run``, ``pipeline``, ``kernels`` —
-that round-trips through
+:class:`HetaConfig` is a typed tree of eight sections — ``data``,
+``partition``, ``model``, ``cache``, ``run``, ``pipeline``, ``kernels``,
+``serve`` — that round-trips through
 nested dicts (``to_dict``/``from_dict``), the historical flat-kwargs surface
 (``from_flat_kwargs``/``to_flat_kwargs``) and auto-generated CLI flags
 (``add_config_args``/``config_from_args`` — what ``python -m
@@ -53,6 +53,9 @@ device step::
 * ``vanilla``  — single-bundle dense baseline (the correctness oracle)
 * ``raf``      — simulated multi-partition RAF, all HGNN models (§4 Alg. 1)
 * ``raf_spmd`` — production SPMD executor over the (data, model) mesh
+* ``serve``    — online inference tier: scores against the embeddings
+  ``Heta.infer_all()`` materialized, through the micro-batching
+  ``Heta.serve()`` server (``repro.serve``, DESIGN.md §10; eval-only)
 
 Register new executors with ``@executors.register("name")``.
 
@@ -73,6 +76,7 @@ from repro.api.config import (
     PartitionConfig,
     PipelineConfig,
     RunConfig,
+    ServeConfig,
     add_config_args,
     config_from_args,
 )
@@ -88,6 +92,7 @@ __all__ = [
     "RunConfig",
     "PipelineConfig",
     "KernelConfig",
+    "ServeConfig",
     "Heta",
     "HetaStageError",
     "PartitionReport",

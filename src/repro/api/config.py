@@ -1,6 +1,6 @@
 """HetaConfig — the typed, validated configuration tree of the public API.
 
-One config object describes a complete Heta run.  It composes five section
+One config object describes a complete Heta run.  It composes eight section
 dataclasses mirroring the pipeline stages:
 
   * :class:`DataConfig`      — dataset, scale, fanouts, batch size
@@ -12,6 +12,9 @@ dataclasses mirroring the pipeline stages:
     staleness policy; see the ``repro.data`` package docstring)
   * :class:`KernelConfig`    — fused Pallas kernel layer (per-op toggles,
     interpret override; see ``repro.kernels`` and DESIGN.md §8)
+  * :class:`ServeConfig`     — online inference tier (layer-wise inference
+    node block, micro-batch flush policy, serve cache budget; see
+    ``repro.serve`` and DESIGN.md §10)
 
 Three interchange formats round-trip losslessly:
 
@@ -39,6 +42,7 @@ __all__ = [
     "RunConfig",
     "PipelineConfig",
     "KernelConfig",
+    "ServeConfig",
     "HetaConfig",
     "add_config_args",
     "config_from_args",
@@ -248,6 +252,42 @@ class KernelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Online inference tier (``repro.serve``, DESIGN.md §10).
+
+    ``node_block`` chunks the layer-wise full-graph inference sweep;
+    ``max_batch`` / ``max_wait_ms`` / ``max_queue`` are the micro-batcher's
+    flush-and-backpressure policy; ``cache_mb`` budgets the serve-side
+    ``FeatureCache`` over the materialized embeddings; ``shm`` backs the
+    embedding store with a shared-memory segment for zero-copy attach;
+    ``production_mesh`` places the scoring step on ``make_production_mesh``
+    (256 devices) instead of the run's mesh."""
+
+    node_block: int = 1024
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    max_queue: int = 1024
+    cache_mb: int = 4
+    shm: bool = False
+    production_mesh: bool = False
+
+    def __post_init__(self):
+        if self.node_block < 1:
+            raise ValueError(f"node_block must be >= 1, got {self.node_block}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if self.max_queue < self.max_batch:
+            raise ValueError(
+                f"max_queue ({self.max_queue}) must be >= max_batch "
+                f"({self.max_batch})"
+            )
+        if self.cache_mb < 0:
+            raise ValueError(f"cache_mb must be >= 0, got {self.cache_mb}")
+
+
+@dataclasses.dataclass(frozen=True)
 class HetaConfig:
     """The full run description; the single argument of :class:`repro.api.Heta`."""
 
@@ -258,8 +298,10 @@ class HetaConfig:
     run: RunConfig = dataclasses.field(default_factory=RunConfig)
     pipeline: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
     kernels: KernelConfig = dataclasses.field(default_factory=KernelConfig)
+    serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
 
-    SECTIONS = ("data", "partition", "model", "cache", "run", "pipeline", "kernels")
+    SECTIONS = ("data", "partition", "model", "cache", "run", "pipeline",
+                "kernels", "serve")
 
     # -- derived ------------------------------------------------------------
 
@@ -301,7 +343,7 @@ class HetaConfig:
             sec_cls = {"data": DataConfig, "partition": PartitionConfig,
                        "model": ModelConfig, "cache": CacheConfig,
                        "run": RunConfig, "pipeline": PipelineConfig,
-                       "kernels": KernelConfig}[name]
+                       "kernels": KernelConfig, "serve": ServeConfig}[name]
             known = {f.name for f in dataclasses.fields(sec_cls)}
             bad = set(sec) - known
             if bad:
@@ -383,6 +425,13 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "kernel_relation_agg": ("kernels", "relation_agg", bool, bool),
     "kernel_gather": ("kernels", "gather", bool, bool),
     "kernel_interpret": ("kernels", "interpret", lambda v: v, lambda v: v),
+    "serve_node_block": ("serve", "node_block", int, int),
+    "serve_max_batch": ("serve", "max_batch", int, int),
+    "serve_max_wait_ms": ("serve", "max_wait_ms", float, float),
+    "serve_max_queue": ("serve", "max_queue", int, int),
+    "serve_cache_mb": ("serve", "cache_mb", int, int),
+    "serve_shm": ("serve", "shm", bool, bool),
+    "serve_production_mesh": ("serve", "production_mesh", bool, bool),
 }
 
 
@@ -413,6 +462,21 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("kernels", "gather"): ("--kernel-gather", None, "cache-fetch row-gather kernel"),
     ("kernels", "interpret"): (
         "--kernel-interpret", None, "force Pallas interpret mode (parity debugging)"),
+    ("serve", "node_block"): (
+        "--serve-node-block", int, "layer-wise inference node-block size"),
+    ("serve", "max_batch"): (
+        "--serve-max-batch", int, "micro-batch flush size"),
+    ("serve", "max_wait_ms"): (
+        "--serve-max-wait-ms", float, "micro-batch latency budget (ms)"),
+    ("serve", "max_queue"): (
+        "--serve-max-queue", int, "bounded request queue (backpressure)"),
+    ("serve", "cache_mb"): (
+        "--serve-cache-mb", int, "serve-side embedding cache budget (MiB)"),
+    ("serve", "shm"): (
+        "--serve-shm", None, "shm-backed embedding store (zero-copy attach)"),
+    ("serve", "production_mesh"): (
+        "--serve-production-mesh", None,
+        "score on make_production_mesh instead of the run mesh"),
 }
 
 _SCALAR_PARSERS = {int: int, float: float, str: str, Optional[float]: float, bool: None}
@@ -425,7 +489,7 @@ def _cli_specs():
     for section, sec_cls in (("data", DataConfig), ("partition", PartitionConfig),
                              ("model", ModelConfig), ("cache", CacheConfig),
                              ("run", RunConfig), ("pipeline", PipelineConfig),
-                             ("kernels", KernelConfig)):
+                             ("kernels", KernelConfig), ("serve", ServeConfig)):
         hints = typing.get_type_hints(sec_cls)
         for f in dataclasses.fields(sec_cls):
             default = getattr(sec_cls(), f.name)

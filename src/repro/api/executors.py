@@ -409,6 +409,60 @@ class RafSpmdExecutor(Executor):
         return loss, {"loss": loss, "hit_rates": sess.engine.cache.hit_rates()}
 
 
+# --------------------------------------------------------------------------
+# serve — the online inference tier (materialized embeddings, no training)
+# --------------------------------------------------------------------------
+
+
+@register("serve")
+class ServeExecutor(Executor):
+    """Score batches against the materialized embedding store (DESIGN.md §10).
+
+    Not a training executor: ``step``/``step_staged`` raise.  ``build_plan``
+    requires :meth:`Heta.infer_all` to have materialized the store;
+    ``loss_and_metrics`` answers through the micro-batching
+    :class:`~repro.serve.server.EmbeddingServer` (same NLL as the training
+    executors), reporting per-type serve-cache hit rates."""
+
+    def build_plan(self, sess):
+        from repro.api.session import HetaStageError
+
+        store = getattr(sess, "embedding_store", None)
+        if store is None:
+            raise HetaStageError(
+                "the 'serve' executor requires materialized embeddings; run "
+                "session.infer_all() (after compile+fit with a training "
+                "executor) before compile(executor='serve')"
+            )
+        return SimpleNamespace(server=sess.serve(), store=store)
+
+    def init_state(self, sess, plan):
+        return {}
+
+    def stage(self, sess, plan, batch):
+        return None
+
+    def step_staged(self, sess, plan, state, batch, arrays):
+        from repro.api.session import HetaStageError
+
+        raise HetaStageError(
+            "the 'serve' executor is inference-only; train with a training "
+            "executor (e.g. raf_spmd), then infer_all() + serve()"
+        )
+
+    def loss_and_metrics(self, sess, plan, state, batch):
+        res = plan.server.query(batch.seeds)
+        logits = res.scores.astype(np.float64)
+        logits -= logits.max(axis=-1, keepdims=True)
+        logp = logits - np.log(np.exp(logits).sum(axis=-1, keepdims=True))
+        loss = float(-logp[np.arange(len(batch.seeds)), batch.labels].mean())
+        return loss, {
+            "loss": loss,
+            "hit_rates": plan.server.cache.hit_rates(),
+            "latency_ms": res.latency_ms,
+        }
+
+
 def apply_feature_grads(engine, plan, batch, gf: Dict) -> None:
     """Route gradients of the gathered feature arrays back to the learnable
     tables (paper Fig. 3 step 5, via the §6 cache)."""

@@ -12,6 +12,12 @@ each individually runnable and inspectable:
 
 Calling a stage out of order raises :class:`HetaStageError` with the missing
 prerequisite; ``run()`` executes whatever stages remain and then ``fit()``.
+
+After training, the online inference tier (``repro.serve``, DESIGN.md §10)
+hangs off two more stages: ``infer_all()`` materializes top-layer
+embeddings for every node via layer-wise full-graph inference, and
+``serve()`` starts the micro-batching :class:`EmbeddingServer` over the
+materialized store (``close_serving()`` releases both).
 """
 
 from __future__ import annotations
@@ -103,6 +109,9 @@ class Heta:
         # (spawn + shm export amortize across fit() calls; see _acquire_pool)
         self._pool_cache = None
         self._pool_atexit_cb = None
+        # online inference tier (repro.serve)
+        self.embedding_store = None
+        self._server = None
 
     # -- stage guards --------------------------------------------------------
 
@@ -386,13 +395,18 @@ class Heta:
         self._fit_serial_s += sum(self.host_times[n0:]) + sum(self.step_times[n0:])
         return self.results()
 
-    def evaluate(self, num_batches: int = 1) -> Dict:
+    def evaluate(self, num_batches: int = 1, use_full_graph: bool = False) -> Dict:
         """Mean held-out-batch loss via the executor's eval path (no update).
 
         With ``pipeline.enabled``, batches are prefetched in the background
         — by a thread, or by ``pipeline.num_workers`` sampler processes
         over a shared-memory graph store (eval staging never trains tables,
-        so any producer is always bit-exact)."""
+        so any producer is always bit-exact).
+
+        ``use_full_graph=True`` scores the *same* held-out batches against
+        the embeddings :meth:`infer_all` materialized instead of running the
+        executor's sampled forward — identical numbers when sampling is
+        exhaustive (fanouts >= max in-degree; see ``repro.serve``)."""
         from repro.graph.sampler import NeighborSampler
 
         self._require("state", "compile", "evaluate")
@@ -403,6 +417,22 @@ class Heta:
         eval_seed = self.config.run.seed + 9999
         n = min(num_batches, sampler.steps_per_epoch())
         losses, metrics = [], {}
+
+        if use_full_graph:
+            self._require("embedding_store", "infer_all",
+                          "evaluate(use_full_graph=True)")
+            it = sampler.epoch(shuffle=True, seed=eval_seed)
+            for _ in range(n):
+                b = next(it)
+                logits = self.embedding_store.scores(b.seeds)
+                logits = logits.astype(np.float64)
+                logits -= logits.max(axis=-1, keepdims=True)
+                logp = logits - np.log(
+                    np.exp(logits).sum(axis=-1, keepdims=True))
+                losses.append(float(
+                    -logp[np.arange(len(b.seeds)), b.labels].mean()))
+            return {"loss": float(np.mean(losses)),
+                    "num_batches": len(losses), "full_graph": True}
 
         def consume(b):
             loss, m = self.executor.loss_and_metrics(self, self.plan,
@@ -442,6 +472,78 @@ class Heta:
                 metrics = consume(next(it))
         return {"loss": float(np.mean(losses)), "num_batches": len(losses),
                 **{k: v for k, v in metrics.items() if k != "loss"}}
+
+    # -- stage 6: the online inference tier (repro.serve) ----------------------
+
+    def infer_all(self, node_block: Optional[int] = None,
+                  shm: Optional[bool] = None):
+        """Materialize top-layer embeddings for every node of every type via
+        layer-wise full-graph inference (DESIGN.md §10), from the trained
+        SPMD stacks.  ``node_block``/``shm`` default to ``ServeConfig``.
+        Returns (and parks on the session) the
+        :class:`~repro.serve.full_graph.EmbeddingStore`."""
+        from repro.serve.full_graph import infer_all as _infer_all
+
+        self._require("state", "compile", "infer_all")
+        plan = getattr(self.plan, "plan", None)
+        stacks = self.state.get("stacks") if isinstance(self.state, dict) else None
+        if plan is None or stacks is None:
+            raise HetaStageError(
+                f"infer_all() needs the stacked SPMD plan, but executor "
+                f"{self.executor.name!r} does not expose one; "
+                "compile(executor='raf_spmd') first"
+            )
+        t0 = time.perf_counter()
+        scfg = self.config.serve
+        store = _infer_all(
+            self.graph, plan, stacks, self.engine.tables_snapshot(),
+            node_block=scfg.node_block if node_block is None else node_block,
+            kernels=self.config.kernels,
+            shm=scfg.shm if shm is None else shm,
+        )
+        if self.embedding_store is not None:
+            self.close_serving()
+        self.embedding_store = store
+        self.stage_times["infer_all"] = time.perf_counter() - t0
+        return store
+
+    def serve(self, **overrides):
+        """Start (or return) the micro-batching
+        :class:`~repro.serve.server.EmbeddingServer` over the materialized
+        store.  Flush policy / cache budget come from ``ServeConfig``
+        (keyword overrides win); the scoring step runs on
+        ``make_production_mesh`` when ``serve.production_mesh`` is set, else
+        on the run's mesh.  ``close_serving()`` stops it."""
+        if self._server is not None:
+            return self._server
+        self._require("embedding_store", "infer_all", "serve")
+        from repro.serve.server import EmbeddingServer
+
+        scfg = self.config.serve
+        if scfg.production_mesh:
+            from repro.launch.mesh import make_production_mesh
+
+            mesh = make_production_mesh()
+        else:
+            mesh = getattr(self.plan, "mesh", None)
+        kw = dict(
+            max_batch=scfg.max_batch, max_wait_ms=scfg.max_wait_ms,
+            max_queue=scfg.max_queue, cache_mb=scfg.cache_mb,
+            kernels=self.config.kernels, mesh=mesh,
+        )
+        kw.update(overrides)
+        self._server = EmbeddingServer(self.embedding_store, **kw)
+        return self._server
+
+    def close_serving(self) -> None:
+        """Stop the embedding server and release the store (unlinking its
+        shm segment when shm-backed).  Idempotent."""
+        srv, self._server = self._server, None
+        if srv is not None:
+            srv.close()
+        store, self.embedding_store = self.embedding_store, None
+        if store is not None:
+            store.close()
 
     # -- convenience -----------------------------------------------------------
 

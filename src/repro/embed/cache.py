@@ -213,6 +213,20 @@ class FeatureCache:
         out = out.at[jnp.asarray(np.nonzero(~hit)[0])].set(rows_miss)
         return out
 
+    def fetch_many(self, requests: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Batched multi-type lookup: one device gather per node type.
+
+        ``requests`` maps ntype -> nid array (any integer dtype / shape [n]).
+        The serving hot path coalesces every request in a micro-batch flush
+        into a single ``fetch_many`` call, so a flush costs one gather per
+        *type* rather than one per request; hit/miss counters accrue exactly
+        as the equivalent sequence of :meth:`fetch` calls would."""
+        return {
+            t: self.fetch(t, np.asarray(nids, dtype=np.int64))
+            for t, nids in requests.items()
+            if len(nids)
+        }
+
     def fetch_states(self, ntype: str, nids: np.ndarray):
         """(rows, m, v) for a learnable type (row-aligned Adam states)."""
         rows = self.fetch(ntype, nids)

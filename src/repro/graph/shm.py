@@ -52,6 +52,11 @@ __all__ = [
     "AttachedHetGraph",
     "share_graph",
     "attach",
+    "ArraysHandle",
+    "SharedArrays",
+    "AttachedArrays",
+    "share_arrays",
+    "attach_arrays",
     "live_segments",
 ]
 
@@ -290,6 +295,154 @@ def share_graph(
 def attach(handle: GraphHandle) -> AttachedHetGraph:
     """Map the segment described by ``handle`` (see :class:`AttachedHetGraph`)."""
     return AttachedHetGraph(handle)
+
+
+# --------------------------------------------------------------------------
+# generic shared array bundles (the serving tier's embedding store backing)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraysHandle:
+    """Picklable description of a generic shared array bundle.
+
+    The graph-shaped :class:`GraphHandle` above hard-codes the HetGraph
+    layout; the serving tier (``repro.serve``, DESIGN.md §10) exports a
+    *flat* dict of named arrays — per-type embedding tables plus the
+    classifier head — so serving processes attach the materialized store
+    zero-copy.  ``meta`` carries small string key/value pairs (target type,
+    class count, per-type layer indices) alongside the array refs.
+    """
+
+    segment: str
+    owner_pid: int
+    arrays: Tuple[Tuple[str, ArrayRef], ...]
+    meta: Tuple[Tuple[str, str], ...] = ()
+
+    @property
+    def meta_dict(self) -> Dict[str, str]:
+        return dict(self.meta)
+
+
+class SharedArrays:
+    """Owner handle of a shared array bundle (same lifecycle discipline as
+    :class:`SharedHetGraph`: ``close()`` unmaps, ``unlink()`` removes,
+    ``__exit__``/``__del__`` never leak a segment)."""
+
+    def __init__(self, shm: shared_memory.SharedMemory, handle: ArraysHandle):
+        self._shm = shm
+        self.handle = handle
+        self._closed = False
+        self._unlinked = False
+
+    def array(self, key: str) -> np.ndarray:
+        """Owner-side writable view of one array in the segment."""
+        refs = dict(self.handle.arrays)
+        return _view(self._shm.buf, refs[key], writeable=True)
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Owner-side writable views of every array, keyed as exported."""
+        return {k: _view(self._shm.buf, r, writeable=True)
+                for k, r in self.handle.arrays}
+
+    @property
+    def nbytes(self) -> int:
+        return self._shm.size
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._shm.close()
+
+    def unlink(self) -> None:
+        self.close()
+        if not self._unlinked:
+            self._unlinked = True
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:
+                pass
+
+    def __enter__(self) -> "SharedArrays":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.unlink()
+
+    def __del__(self):
+        try:
+            self.unlink()
+        except BaseException:
+            pass
+
+
+class AttachedArrays:
+    """A reader's zero-copy view of a shared array bundle.
+
+    ``arrays`` maps exported names to read-only views into the segment; keep
+    this object alive while any view is in use.  ``close()`` unmaps and is
+    idempotent; attaching never unlinks the owner's segment."""
+
+    def __init__(self, handle: ArraysHandle):
+        self.handle = handle
+        self._shm = _open_attached(handle.segment, handle.owner_pid)
+        self._closed = False
+        self.arrays: Dict[str, np.ndarray] = {
+            k: _view(self._shm.buf, r) for k, r in handle.arrays
+        }
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self.arrays = {}
+            self._shm.close()
+
+    def __enter__(self) -> "AttachedArrays":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except BaseException:
+            pass
+
+
+def share_arrays(
+    arrays: Dict[str, np.ndarray],
+    meta: Optional[Dict[str, str]] = None,
+    name: Optional[str] = None,
+) -> SharedArrays:
+    """Export a dict of named arrays into one shared segment.
+
+    Transactional like :func:`share_graph`: a failure while populating
+    closes and unlinks the segment before re-raising, so error paths never
+    leak ``/dev/shm`` space."""
+    src = {k: np.ascontiguousarray(v) for k, v in arrays.items()}
+    refs, total = _layout(src)
+    segment = name or f"{SEGMENT_PREFIX}{os.getpid():x}-{secrets.token_hex(4)}"
+    shm = shared_memory.SharedMemory(name=segment, create=True, size=total)
+    handle = ArraysHandle(
+        segment=segment,
+        owner_pid=os.getpid(),
+        arrays=tuple(refs.items()),
+        meta=tuple(sorted((meta or {}).items())),
+    )
+    store = SharedArrays(shm, handle)
+    try:
+        for key, arr in src.items():
+            np.copyto(store.array(key), arr, casting="no")
+    except BaseException:
+        store.unlink()
+        raise
+    return store
+
+
+def attach_arrays(handle: ArraysHandle) -> AttachedArrays:
+    """Map the bundle described by ``handle`` (see :class:`AttachedArrays`)."""
+    return AttachedArrays(handle)
 
 
 def live_segments(prefix: str = SEGMENT_PREFIX) -> List[str]:

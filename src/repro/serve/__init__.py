@@ -1,0 +1,52 @@
+"""Online inference tier: materialize once, serve forever (DESIGN.md §10).
+
+Two halves, contracted in DESIGN.md §10:
+
+  * :mod:`repro.serve.full_graph` — layer-wise full-graph inference: level-l
+    representations for *every* node of every type are computed (in node
+    blocks, through the same stacked-relation kernels the trainer runs)
+    before level l+1, then materialized into a per-type
+    :class:`~repro.serve.full_graph.EmbeddingStore` — optionally backed by a
+    ``repro.graph.shm`` segment so serving processes attach zero-copy.
+    Prop-1 carries over: the layer-wise embedding of any node equals the
+    minibatch ``raf_spmd`` forward for that node.
+
+  * :mod:`repro.serve.server` — the serving executor: a
+    :class:`~repro.serve.server.MicroBatcher` coalesces concurrent lookups
+    under a latency budget (flush on ``max_batch`` or ``max_wait_ms``,
+    bounded queue with backpressure) and the
+    :class:`~repro.serve.server.EmbeddingServer` answers each flush with one
+    ``FeatureCache`` gather per node type plus a jitted head application.
+
+Session surface: ``Heta.infer_all()`` builds the store, ``Heta.serve()``
+starts a server over it, and the ``"serve"`` executor entry scores
+evaluation batches against the store instead of re-sampling.
+"""
+
+from repro.serve.full_graph import (
+    EmbeddingStore,
+    bounded_graph,
+    exhaustive_batch,
+    exhaustive_fanouts,
+    infer_all,
+    spmd_logits_for_batch,
+)
+from repro.serve.server import (
+    EmbeddingServer,
+    MicroBatcher,
+    ServeResult,
+    ServeStats,
+)
+
+__all__ = [
+    "EmbeddingStore",
+    "EmbeddingServer",
+    "MicroBatcher",
+    "ServeResult",
+    "ServeStats",
+    "bounded_graph",
+    "exhaustive_batch",
+    "exhaustive_fanouts",
+    "infer_all",
+    "spmd_logits_for_batch",
+]

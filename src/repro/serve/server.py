@@ -1,0 +1,393 @@
+"""Micro-batching serving executor over a materialized store (DESIGN.md §10).
+
+Online queries arrive one at a time; the device wants big batches.  The
+:class:`MicroBatcher` bridges the two with the classic latency-budget
+policy: requests queue until either ``max_batch`` of them are pending or
+the *oldest* has waited ``max_wait_ms``, then the whole group flushes as
+one batch.  The queue is bounded (``max_queue``) — submitters block when
+it is full (backpressure) rather than growing memory without bound — and a
+flush failure is propagated to exactly the callers whose requests were in
+that flush, mirroring the ``Prefetcher``/``WorkerPool`` failure discipline.
+
+:class:`EmbeddingServer` is the HGNN tier's hot path: a micro-batcher whose
+flush groups the queued lookups per node type, issues **one**
+``FeatureCache.fetch_many`` gather per type from the layer-wise
+:class:`~repro.serve.full_graph.EmbeddingStore`, and scores target-type
+rows with a jitted ``relu(e) @ W + b`` step placed on the serving mesh
+(``make_production_mesh`` in production; any mesh — or none — in tests).
+The cache fronts the store's host arrays (which may be a zero-copy shm
+attach), so repeated hot-node lookups never touch host memory twice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.embed.cache import CacheAllocation, FeatureCache
+from repro.embed.profiler import HotnessProfile
+from repro.serve.full_graph import EmbeddingStore
+
+__all__ = ["MicroBatcher", "EmbeddingServer", "ServeResult", "ServeStats"]
+
+
+# --------------------------------------------------------------------------
+# the micro-batcher
+# --------------------------------------------------------------------------
+
+
+class _Future:
+    """Single-use result slot (set exactly once: value or exception)."""
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._value = None
+        self._exc: Optional[BaseException] = None
+
+    def set_result(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("serve request timed out")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+class MicroBatcher:
+    """Coalesce concurrent ``submit`` calls into bounded batches.
+
+    ``process(items) -> results`` is called on a dedicated flusher thread
+    with 1..``max_batch`` queued items whenever the batch fills or the
+    oldest pending item ages past ``max_wait_ms``.  ``submit`` returns a
+    future; it blocks while ``max_queue`` items are pending (backpressure)
+    and raises once the batcher is closed.  ``close`` drains every pending
+    item before the flusher exits, so in-flight callers always get an
+    answer; an exception from ``process`` is delivered to exactly the
+    callers in that flush and the batcher keeps serving."""
+
+    def __init__(
+        self,
+        process: Callable[[List], List],
+        *,
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+        max_queue: int = 1024,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._process = process
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.max_queue = int(max_queue)
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._pending: deque = deque()  # (item, future, t_submit)
+        self._closed = False
+        self.flushes = 0
+        self._thread = threading.Thread(
+            target=self._run, name="serve-microbatcher", daemon=True
+        )
+        self._thread.start()
+
+    # -- producer side ------------------------------------------------------
+
+    def submit(self, item) -> _Future:
+        fut = _Future()
+        with self._cond:
+            while not self._closed and len(self._pending) >= self.max_queue:
+                self._cond.wait(0.05)
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._pending.append((item, fut, time.monotonic()))
+            self._cond.notify_all()
+        return fut
+
+    def __call__(self, item, timeout: Optional[float] = None):
+        """Blocking submit: enqueue and wait for the flush result."""
+        return self.submit(item).result(timeout)
+
+    # -- flusher side -------------------------------------------------------
+
+    def _take_batch(self) -> List[Tuple]:
+        """Wait until a flush is due, then pop up to ``max_batch`` items.
+        Returns [] only when closed with nothing left to drain."""
+        budget = self.max_wait_ms / 1e3
+        with self._cond:
+            while True:
+                if self._pending:
+                    age = time.monotonic() - self._pending[0][2]
+                    if (
+                        len(self._pending) >= self.max_batch
+                        or age >= budget
+                        or self._closed
+                    ):
+                        n = min(len(self._pending), self.max_batch)
+                        batch = [self._pending.popleft() for _ in range(n)]
+                        self._cond.notify_all()  # wake backpressured submitters
+                        return batch
+                    self._cond.wait(budget - age)
+                elif self._closed:
+                    return []
+                else:
+                    self._cond.wait()
+
+    def _run(self) -> None:
+        while True:
+            batch = self._take_batch()
+            if not batch:
+                return
+            items = [item for item, _, _ in batch]
+            try:
+                results = self._process(items)
+                if len(results) != len(items):
+                    raise RuntimeError(
+                        f"process returned {len(results)} results for "
+                        f"{len(items)} items"
+                    )
+            except BaseException as exc:  # propagate to exactly this flush
+                for _, fut, _ in batch:
+                    fut.set_exception(exc)
+                continue
+            self.flushes += 1
+            for (_, fut, _), res in zip(batch, results):
+                fut.set_result(res)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop accepting work, drain in-flight requests, join the flusher."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# --------------------------------------------------------------------------
+# the embedding server
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One answered lookup: stored rows (pre-ReLU), class scores for
+    target-type requests (None otherwise), and the request's end-to-end
+    latency (submit -> flush complete)."""
+
+    ntype: str
+    embeddings: np.ndarray
+    scores: Optional[np.ndarray]
+    latency_ms: float
+
+
+@dataclasses.dataclass
+class ServeStats:
+    count: int
+    flushes: int
+    p50_ms: float
+    p99_ms: float
+    qps: float
+    hit_rates: Dict[str, float]
+
+    def render(self) -> str:
+        lines = [
+            f"  requests={self.count}  flushes={self.flushes}  "
+            f"p50={self.p50_ms:.3f} ms  p99={self.p99_ms:.3f} ms  "
+            f"qps={self.qps:,.0f}"
+        ]
+        for t, r in sorted(self.hit_rates.items()):
+            lines.append(f"    cache[{t}] hit-rate={r:.2%}")
+        return "\n".join(lines)
+
+
+def _build_serve_cache(
+    store: EmbeddingStore, cache_mb: int, kernels=None,
+    hotness: Optional[HotnessProfile] = None,
+) -> FeatureCache:
+    """A read-only :class:`FeatureCache` over the store's embedding tables.
+
+    Serving has no training-time hotness trace, so absent a profile the
+    budget splits uniformly across types and each type caches its
+    lowest-id rows (every row is equally hot under the uniform profile;
+    ``HotnessProfile.hottest`` then keeps ids stable) — benchmarks pass a
+    Zipf-skewed profile to model a production request mix."""
+    tables = store.embeddings
+    uniform = hotness is None
+    if uniform:
+        hotness = HotnessProfile(
+            counts={t: np.ones(a.shape[0], np.float64) for t, a in tables.items()}
+        )
+    total = int(cache_mb) << 20
+    budget = total // max(1, len(tables))
+    rows = {
+        t: min(a.shape[0], budget // max(1, a.shape[1] * 4))
+        for t, a in tables.items()
+    }
+    alloc = CacheAllocation(
+        rows=rows,
+        bytes_={t: rows[t] * tables[t].shape[1] * 4 for t in tables},
+        total_bytes=total,
+        policy="serve-uniform" if uniform else "serve",
+    )
+    return FeatureCache(tables, {}, alloc, hotness, kernels=kernels)
+
+
+class EmbeddingServer:
+    """Serve embeddings / class scores from a materialized store.
+
+    One :class:`MicroBatcher` fronts the device: a flush groups queued
+    ``(ntype, nids)`` lookups per type, gathers each type's union of rows
+    in a single ``FeatureCache.fetch_many`` call, scores the target-type
+    rows with one jitted head application, and splits the device batch back
+    per request.  ``query`` blocks; ``submit`` returns a future for
+    closed-loop concurrency tests and benchmarks."""
+
+    def __init__(
+        self,
+        store: EmbeddingStore,
+        *,
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+        max_queue: int = 1024,
+        cache_mb: int = 4,
+        kernels=None,
+        mesh=None,
+        hotness: Optional[HotnessProfile] = None,
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        self.store = store
+        self.cache = _build_serve_cache(store, cache_mb, kernels, hotness)
+        w = jnp.asarray(store.head["w"])
+        b = jnp.asarray(store.head["b"])
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            rep = NamedSharding(mesh, P())
+            w = jax.device_put(w, rep)
+            b = jax.device_put(b, rep)
+        self._score = jax.jit(lambda e: jax.nn.relu(e) @ w + b)
+        self._latencies: deque = deque(maxlen=100_000)
+        self._count = 0
+        self._stats_lock = threading.Lock()
+        self._t_start = time.monotonic()
+        self.batcher = MicroBatcher(
+            self._flush,
+            max_batch=max_batch,
+            max_wait_ms=max_wait_ms,
+            max_queue=max_queue,
+        )
+
+    # -- the flush (device hot path) ----------------------------------------
+
+    def _flush(self, items: List[Tuple[str, np.ndarray, float]]) -> List[ServeResult]:
+        import jax.numpy as jnp
+
+        # group per type, remembering each request's slice of the batch
+        grouped: Dict[str, List[np.ndarray]] = {}
+        offsets: List[Tuple[str, int, int]] = []
+        for ntype, nids, _ in items:
+            lo = sum(len(x) for x in grouped.get(ntype, []))
+            grouped.setdefault(ntype, []).append(nids)
+            offsets.append((ntype, lo, lo + len(nids)))
+        requests = {t: np.concatenate(parts) for t, parts in grouped.items()}
+        rows = self.cache.fetch_many(requests)  # one gather per type
+        target = self.store.target_type
+        scores = (
+            np.asarray(self._score(rows[target])) if target in rows else None
+        )
+        host_rows = {t: np.asarray(r) for t, r in rows.items()}
+        now = time.monotonic()
+        out = []
+        for (ntype, nids, t_submit), (_, lo, hi) in zip(items, offsets):
+            lat_ms = (now - t_submit) * 1e3
+            out.append(
+                ServeResult(
+                    ntype=ntype,
+                    embeddings=host_rows[ntype][lo:hi] if len(nids) else
+                    np.zeros((0, self.store.hidden), np.float32),
+                    scores=(
+                        scores[lo:hi]
+                        if ntype == target and scores is not None
+                        else None
+                    ),
+                    latency_ms=lat_ms,
+                )
+            )
+        with self._stats_lock:
+            self._count += len(items)
+            for r in out:
+                self._latencies.append(r.latency_ms)
+        return out
+
+    # -- client surface ------------------------------------------------------
+
+    def submit(self, nids: Sequence[int], ntype: Optional[str] = None) -> _Future:
+        """Async lookup: returns a future resolving to a :class:`ServeResult`."""
+        t = ntype or self.store.target_type
+        if t not in self.store.embeddings:
+            raise KeyError(
+                f"no materialized embeddings for type {t!r} "
+                f"(have {sorted(self.store.embeddings)})"
+            )
+        arr = np.asarray(nids, dtype=np.int64).reshape(-1)
+        return self.batcher.submit((t, arr, time.monotonic()))
+
+    def query(
+        self, nids: Sequence[int], ntype: Optional[str] = None,
+        timeout: Optional[float] = None,
+    ) -> ServeResult:
+        """Blocking lookup (submit + wait for the micro-batch flush)."""
+        return self.submit(nids, ntype).result(timeout)
+
+    # -- stats / lifecycle ---------------------------------------------------
+
+    def stats(self) -> ServeStats:
+        with self._stats_lock:
+            lats = np.asarray(self._latencies, np.float64)
+            count = self._count
+        wall = max(time.monotonic() - self._t_start, 1e-9)
+        return ServeStats(
+            count=count,
+            flushes=self.batcher.flushes,
+            p50_ms=float(np.percentile(lats, 50)) if len(lats) else 0.0,
+            p99_ms=float(np.percentile(lats, 99)) if len(lats) else 0.0,
+            qps=count / wall,
+            hit_rates=self.cache.hit_rates(),
+        )
+
+    def reset_stats(self) -> None:
+        with self._stats_lock:
+            self._latencies.clear()
+            self._count = 0
+            self._t_start = time.monotonic()
+        self.cache.reset_stats()
+
+    def close(self) -> None:
+        self.batcher.close()
+
+    def __enter__(self) -> "EmbeddingServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

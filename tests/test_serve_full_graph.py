@@ -1,0 +1,242 @@
+"""Layer-wise full-graph inference (repro.serve.full_graph): per-node
+parity against the minibatch raf_spmd forward (the serving tier's Prop-1),
+full-graph evaluation, the shm-backed store lifecycle, and the batched
+multi-type cache fetch."""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    DataConfig,
+    Heta,
+    HetaConfig,
+    HetaStageError,
+    KernelConfig,
+    ModelConfig,
+    RunConfig,
+)
+from repro.serve import full_graph as fg
+
+
+def _session(model="rgcn", *, cap=4, steps=0, kernels=None, scale=0.002,
+             batch_size=8, seed=0):
+    """A trained-or-init session on a degree-capped graph with exhaustive
+    fanouts (fanout = max in-degree, so sampling covers every neighbor)."""
+    base = HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=scale, fanouts=(2, 2),
+                        batch_size=batch_size),
+        model=ModelConfig(model=model, hidden=16, num_heads=2,
+                          learnable_dim=12),
+        run=RunConfig(executor="raf_spmd", steps=steps, seed=seed,
+                      mesh_shape=(1, 1)),
+        kernels=kernels or KernelConfig(enabled=False),
+    )
+    s0 = Heta(base)
+    g = fg.bounded_graph(s0.build_graph(), cap)
+    s0.partition()
+    ex = fg.exhaustive_fanouts(g, s0.spec)
+    sess = Heta(base.updated(data=dict(fanouts=ex)))
+    sess.build_graph(g)
+    sess.partition()
+    sess.profile_and_cache()
+    sess.compile()
+    if steps:
+        sess.fit(steps)
+    return sess, g
+
+
+def _parity(sess, g, n_seeds=16):
+    tables = sess.engine.tables_snapshot()
+    store = fg.infer_all(g, sess.plan.plan, sess.state["stacks"], tables,
+                         node_block=64, kernels=sess.config.kernels)
+    seeds = g.train_nodes[:n_seeds]
+    batch = fg.exhaustive_batch(g, sess.spec, seeds)
+    ref = fg.spmd_logits_for_batch(sess.plan.plan, sess.state["stacks"],
+                                   batch, tables,
+                                   kernels=sess.config.kernels)
+    return store, np.asarray(store.scores(seeds)), ref
+
+
+# --------------------------------------------------------------------------
+# Prop-1: layer-wise == minibatch, per node, all three models
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["rgcn", "rgat", "hgt"])
+def test_layerwise_matches_minibatch(model):
+    sess, g = _session(model)
+    _, got, ref = _parity(sess, g)
+    if model in ("rgcn", "rgat"):
+        # frozen-feature path with identical reduce structure: bit-equal
+        np.testing.assert_array_equal(got, ref)
+    else:
+        # hgt's per-branch softmax reassociates; well under the 1e-5 bar
+        np.testing.assert_allclose(got, ref, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("model", ["rgcn", "rgat", "hgt"])
+def test_layerwise_matches_minibatch_interpret_kernels(model):
+    """Same parity through the fused Pallas kernels (interpret mode)."""
+    sess, g = _session(
+        model, kernels=KernelConfig(enabled=True, interpret=True))
+    _, got, ref = _parity(sess, g, n_seeds=8)
+    if model in ("rgcn", "rgat"):
+        np.testing.assert_array_equal(got, ref)
+    else:
+        np.testing.assert_allclose(got, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_layerwise_matches_minibatch_after_training():
+    """Parity holds for trained stacks, not just the init point."""
+    sess, g = _session("rgcn", steps=3)
+    _, got, ref = _parity(sess, g)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_store_contents():
+    sess, g = _session("rgcn")
+    store, _, _ = _parity(sess, g)
+    assert store.target_type == g.target_type
+    assert store.num_classes == g.num_classes
+    for t, emb in store.embeddings.items():
+        assert emb.shape == (g.num_nodes[t], sess.config.model.hidden)
+        assert emb.dtype == np.float32
+    # the target type reaches the top layer
+    assert store.layer_of[g.target_type] == sess.spec.num_layers
+    # embedding() slices rows; scores() applies relu + head
+    nids = g.train_nodes[:4]
+    emb = store.embedding(g.target_type, nids)
+    want = np.maximum(emb, 0.0) @ store.head["w"] + store.head["b"]
+    np.testing.assert_allclose(store.scores(nids), want, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# exhaustive-neighborhood helpers
+# --------------------------------------------------------------------------
+
+
+def test_bounded_graph_caps_degree():
+    s0 = Heta(HetaConfig(data=DataConfig(scale=0.002)))
+    g = s0.build_graph()
+    capped = fg.bounded_graph(g, 4)
+    for rel, csr in capped.relations.items():
+        deg = csr.indptr[1:] - csr.indptr[:-1]
+        assert deg.max(initial=0) <= 4
+        # kept neighbors are a prefix of the original CSR lists
+        orig = g.relations[rel]
+        v = int(np.argmax(orig.indptr[1:] - orig.indptr[:-1]))
+        np.testing.assert_array_equal(
+            csr.indices[csr.indptr[v]:csr.indptr[v + 1]],
+            orig.indices[orig.indptr[v]:orig.indptr[v] + deg[v]],
+        )
+
+
+def test_exhaustive_fanouts_guard():
+    """_full_neighbors refuses a fanout below the max in-degree."""
+    sess, g = _session("rgcn")
+    small = tuple(max(1, f - 1) for f in sess.spec.fanouts)
+    if small == sess.spec.fanouts:
+        pytest.skip("degenerate graph: fanouts already 1")
+    spec = sess.spec
+    rel = spec.levels[0][0].rel
+    csr = g.relations[rel]
+    deg = csr.indptr[1:] - csr.indptr[:-1]
+    parents = np.array([int(np.argmax(deg))])
+    with pytest.raises(ValueError, match="max in-degree"):
+        fg._full_neighbors(csr, parents, np.ones(1, bool),
+                           int(deg.max()) - 1)
+
+
+# --------------------------------------------------------------------------
+# full-graph evaluation
+# --------------------------------------------------------------------------
+
+
+def test_evaluate_full_graph_matches_minibatch():
+    """On a degree-<=1 graph with fanout 1 the with-replacement sampler is
+    forced onto each node's unique neighbor, so the sampled eval forward
+    sees exactly the full neighborhoods and the two paths agree."""
+    sess, g = _session("rgcn", steps=2, cap=1)
+    sess.infer_all(node_block=64)
+    ref = sess.evaluate(num_batches=2)
+    got = sess.evaluate(num_batches=2, use_full_graph=True)
+    assert got["full_graph"] is True
+    assert got["num_batches"] == ref["num_batches"]
+    np.testing.assert_allclose(got["loss"], ref["loss"], atol=1e-5)
+
+
+def test_evaluate_full_graph_requires_infer_all():
+    sess, _ = _session("rgcn")
+    with pytest.raises(HetaStageError, match="infer_all"):
+        sess.evaluate(use_full_graph=True)
+
+
+def test_infer_all_requires_stacked_plan():
+    sess, _ = _session("rgcn")
+    sess.compile(executor="vanilla")
+    with pytest.raises(HetaStageError, match="raf_spmd"):
+        sess.infer_all()
+
+
+# --------------------------------------------------------------------------
+# shm-backed store lifecycle
+# --------------------------------------------------------------------------
+
+
+def test_shm_store_attach_and_close():
+    import os
+
+    if not os.path.isdir("/dev/shm"):
+        pytest.skip("shm store needs /dev/shm")
+    from repro.graph.shm import live_segments
+
+    before = set(live_segments())
+    sess, g = _session("rgcn")
+    store = fg.infer_all(g, sess.plan.plan, sess.state["stacks"],
+                         sess.engine.tables_snapshot(), node_block=64,
+                         kernels=sess.config.kernels, shm=True)
+    assert store.handle is not None
+    nids = g.train_nodes[:4]
+    want = store.scores(nids)
+    # a second store attaches zero-copy and reads identical values
+    attached = fg.EmbeddingStore.attach(store.handle)
+    assert sorted(attached.embeddings) == sorted(store.embeddings)
+    assert attached.layer_of == store.layer_of
+    np.testing.assert_array_equal(attached.scores(nids), want)
+    attached.close()
+    attached.close()  # idempotent
+    store.close()
+    store.close()
+    assert set(live_segments()) == before
+
+
+# --------------------------------------------------------------------------
+# FeatureCache.fetch_many
+# --------------------------------------------------------------------------
+
+
+def test_fetch_many_matches_fetch():
+    from repro.embed.cache import CacheAllocation, FeatureCache
+    from repro.embed.profiler import HotnessProfile
+
+    rng = np.random.default_rng(0)
+    tables = {"a": rng.normal(size=(40, 8)).astype(np.float32),
+              "b": rng.normal(size=(30, 8)).astype(np.float32)}
+    hot = HotnessProfile(counts={t: np.ones(v.shape[0]) for t, v in tables.items()})
+    alloc = CacheAllocation(rows={"a": 10, "b": 0},
+                            bytes_={"a": 10 * 32, "b": 0},
+                            total_bytes=10 * 32, policy="test")
+    cache = FeatureCache(tables, {}, alloc, hot)
+    reqs = {"a": np.array([3, 1, 11]), "b": np.array([0, 29])}
+    out = cache.fetch_many(reqs)
+    assert sorted(out) == ["a", "b"]
+    for t, nids in reqs.items():
+        np.testing.assert_array_equal(np.asarray(out[t]), tables[t][nids])
+    # empty requests produce no entry (no zero-length device gathers)
+    out2 = cache.fetch_many({"a": np.array([], np.int64), "b": np.array([2])})
+    assert sorted(out2) == ["b"]
+    # counters accrue exactly as per-type fetch calls would
+    cache.reset_stats()
+    cache.fetch_many({"a": np.array([3, 1, 11])})
+    c = cache.caches["a"]
+    assert c.hits + c.misses == 3

@@ -1,0 +1,272 @@
+"""Micro-batcher flush/backpressure/shutdown/failure discipline and the
+EmbeddingServer hot path (repro.serve.server), plus the ServeConfig section
+and the "serve" executor registration."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve.server import EmbeddingServer, MicroBatcher, _build_serve_cache
+from repro.serve.full_graph import EmbeddingStore
+
+
+def _echo(items):
+    return list(items)
+
+
+# --------------------------------------------------------------------------
+# MicroBatcher
+# --------------------------------------------------------------------------
+
+
+def test_flush_on_size():
+    """A full batch flushes immediately, without waiting out the deadline."""
+    seen = []
+
+    def process(items):
+        seen.append(list(items))
+        return items
+
+    with MicroBatcher(process, max_batch=4, max_wait_ms=10_000) as mb:
+        futs = [mb.submit(i) for i in range(4)]
+        t0 = time.monotonic()
+        assert [f.result(timeout=5) for f in futs] == [0, 1, 2, 3]
+        assert time.monotonic() - t0 < 5  # nowhere near the 10 s budget
+    assert seen[0] == [0, 1, 2, 3]
+
+
+def test_flush_on_deadline():
+    """A lone request flushes once the oldest item ages past max_wait_ms."""
+    with MicroBatcher(_echo, max_batch=1000, max_wait_ms=30) as mb:
+        t0 = time.monotonic()
+        assert mb.submit(42).result(timeout=5) == 42
+        dt = time.monotonic() - t0
+        assert dt >= 0.02  # waited for the deadline, not a size flush
+
+
+def test_batches_respect_max_batch():
+    sizes = []
+
+    def process(items):
+        sizes.append(len(items))
+        return items
+
+    with MicroBatcher(process, max_batch=3, max_wait_ms=50) as mb:
+        futs = [mb.submit(i) for i in range(8)]
+        for f in futs:
+            f.result(timeout=5)
+    assert max(sizes) <= 3
+    assert sum(sizes) == 8
+
+
+def test_backpressure_blocks_submitters():
+    """submit blocks while max_queue items are pending, resumes post-flush."""
+    release = threading.Event()
+
+    def process(items):
+        release.wait(5)
+        return items
+
+    mb = MicroBatcher(process, max_batch=2, max_wait_ms=1, max_queue=2)
+    try:
+        f1, f2 = mb.submit(1), mb.submit(2)  # flushes; process blocks
+        time.sleep(0.05)
+        # queue free again (flush popped them) -> fill it while blocked
+        f3, f4 = mb.submit(3), mb.submit(4)
+        done = threading.Event()
+        slot = {}
+
+        def blocked_submit():
+            slot["fut"] = mb.submit(5)  # queue full: must block
+            done.set()
+
+        t = threading.Thread(target=blocked_submit)
+        t.start()
+        assert not done.wait(0.2)  # still blocked on backpressure
+        release.set()  # unblock process -> batches drain -> queue frees
+        assert done.wait(5)
+        assert slot["fut"].result(timeout=5) == 5
+        for f in (f1, f2, f3, f4):
+            assert f.result(timeout=5) in (1, 2, 3, 4)
+        t.join()
+    finally:
+        release.set()
+        mb.close()
+
+
+def test_shutdown_drains_in_flight():
+    """close() answers every pending request before the flusher exits."""
+    slow = MicroBatcher(lambda items: (time.sleep(0.01), items)[1],
+                        max_batch=2, max_wait_ms=10_000)
+    futs = [slow.submit(i) for i in range(2)]  # flushing now
+    late = slow.submit(99)  # pending behind the in-flight flush
+    slow.close()
+    assert [f.result(timeout=1) for f in futs] == [0, 1]
+    assert late.result(timeout=1) == 99
+    with pytest.raises(RuntimeError, match="closed"):
+        slow.submit(1)
+    slow.close()  # idempotent
+
+
+def test_exception_propagates_to_flush_callers_only():
+    """A failing flush rejects exactly its own callers; the batcher lives."""
+    def process(items):
+        if any(i < 0 for i in items):
+            raise ZeroDivisionError("bad item")
+        return items
+
+    with MicroBatcher(process, max_batch=1, max_wait_ms=1) as mb:
+        bad = mb.submit(-1)
+        with pytest.raises(ZeroDivisionError, match="bad item"):
+            bad.result(timeout=5)
+        # still serving after the failure
+        assert mb.submit(7).result(timeout=5) == 7
+
+
+def test_result_count_mismatch_is_an_error():
+    with MicroBatcher(lambda items: items[:-1] if len(items) > 1 else items,
+                      max_batch=2, max_wait_ms=1) as mb:
+        f1, f2 = mb.submit(1), mb.submit(2)
+        with pytest.raises(RuntimeError, match="results"):
+            f1.result(timeout=5)
+        with pytest.raises(RuntimeError):
+            f2.result(timeout=5)
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        MicroBatcher(_echo, max_batch=0)
+
+
+# --------------------------------------------------------------------------
+# EmbeddingServer over a hand-built store
+# --------------------------------------------------------------------------
+
+
+def _toy_store(n=50, hidden=8, classes=5, types=("paper", "author"), seed=0):
+    rng = np.random.default_rng(seed)
+    emb = {t: rng.normal(size=(n, hidden)).astype(np.float32) for t in types}
+    return EmbeddingStore(
+        target_type=types[0], num_classes=classes, hidden=hidden,
+        embeddings=emb, layer_of={t: 2 for t in types},
+        head={"w": rng.normal(size=(hidden, classes)).astype(np.float32),
+              "b": np.zeros(classes, np.float32)},
+    )
+
+
+def test_server_scores_and_embeddings():
+    store = _toy_store()
+    with EmbeddingServer(store, max_batch=8, max_wait_ms=1) as srv:
+        nids = np.array([3, 1, 4])
+        res = srv.query(nids)
+        np.testing.assert_array_equal(
+            res.embeddings, store.embedding("paper", nids))
+        np.testing.assert_allclose(
+            res.scores, store.scores(nids), atol=1e-6)
+        assert res.latency_ms >= 0
+        # non-target types return embeddings only
+        res_a = srv.query([0, 2], ntype="author")
+        assert res_a.scores is None
+        np.testing.assert_array_equal(
+            res_a.embeddings, store.embedding("author", [0, 2]))
+        with pytest.raises(KeyError, match="no materialized"):
+            srv.query([0], ntype="venue")
+
+
+def test_server_coalesces_concurrent_lookups():
+    """Concurrent queries of one type land in one flush: one fetch per type,
+    answers split back per request."""
+    store = _toy_store()
+    with EmbeddingServer(store, max_batch=16, max_wait_ms=20) as srv:
+        results = {}
+
+        def client(k):
+            results[k] = srv.query([k, k + 1])
+
+        threads = [threading.Thread(target=client, args=(k,)) for k in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for k, res in results.items():
+            np.testing.assert_array_equal(
+                res.embeddings, store.embedding("paper", [k, k + 1]))
+        stats = srv.stats()
+        assert stats.count == 6
+        assert stats.flushes < 6  # coalesced
+        assert stats.p99_ms >= stats.p50_ms >= 0.0
+        assert stats.qps > 0
+
+
+def test_server_hit_rates_reported():
+    store = _toy_store(n=64)
+    # budget covers every row of both 64x8 f32 tables -> all hits
+    with EmbeddingServer(store, max_batch=4, max_wait_ms=1, cache_mb=1) as srv:
+        srv.query([1, 2, 3])
+        rates = srv.stats().hit_rates
+        assert rates["paper"] == 1.0
+    # zero budget -> no type cache -> fetch falls through to host (no entry)
+    with EmbeddingServer(store, max_batch=4, max_wait_ms=1, cache_mb=0) as srv:
+        res = srv.query([1, 2, 3])
+        np.testing.assert_array_equal(
+            res.embeddings, store.embedding("paper", [1, 2, 3]))
+        assert srv.stats().hit_rates == {}
+
+
+def test_build_serve_cache_budgets():
+    store = _toy_store(n=100)
+    cache = _build_serve_cache(store, cache_mb=0)
+    assert cache.caches == {}
+    cache = _build_serve_cache(store, cache_mb=1)
+    for t in store.embeddings:
+        assert cache.caches[t].data.shape[0] == 100  # fully resident
+    assert cache.consistency_check()
+
+
+# --------------------------------------------------------------------------
+# ServeConfig + the "serve" executor registration
+# --------------------------------------------------------------------------
+
+
+def test_serve_config_roundtrip():
+    from repro.api import HetaConfig, ServeConfig
+    from repro.api.config import config_from_args, add_config_args
+    import argparse
+
+    cfg = HetaConfig(serve=ServeConfig(max_batch=8, max_wait_ms=1.5, shm=True))
+    assert HetaConfig.from_dict(cfg.to_dict()) == cfg
+    flat = cfg.to_flat_kwargs()
+    assert flat["serve_max_batch"] == 8
+    assert flat["serve_shm"] is True
+    assert HetaConfig.from_flat_kwargs(**flat) == cfg
+
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    args = ap.parse_args(["--serve-max-batch", "3", "--serve-max-wait-ms",
+                          "0.5", "--serve-shm"])
+    got = config_from_args(args)
+    assert got.serve.max_batch == 3
+    assert got.serve.max_wait_ms == 0.5
+    assert got.serve.shm is True
+
+    with pytest.raises(ValueError, match="max_queue"):
+        ServeConfig(max_batch=100, max_queue=10)
+    with pytest.raises(ValueError, match="node_block"):
+        ServeConfig(node_block=0)
+
+
+def test_serve_executor_registered_and_guarded():
+    from repro.api import HetaStageError, executors
+    from repro.api.session import Heta
+
+    assert "serve" in executors.available()
+    sess = Heta()
+    sess.build_graph()
+    sess.partition()
+    sess.profile_and_cache()
+    with pytest.raises(HetaStageError, match="infer_all"):
+        sess.compile(executor="serve")
+    with pytest.raises(HetaStageError, match="infer_all"):
+        sess.serve()
