@@ -124,7 +124,8 @@ def run_pipelined(scale: float = 0.002, batch: int = 32, fanouts=(5, 4),
 
 def run_worker_sweep(scale: float = 0.01, batch: int = 64, fanouts=(10, 10),
                      steps: int = 32, workers=(0, 1, 2, 4),
-                     repeats: int = 3):
+                     repeats: int = 3, arena: bool = True,
+                     legacy_diagnosis: bool = True):
     """Sampling-throughput scaling of the host pipeline's producer.
 
     Every configuration materializes the *same* batches for the same
@@ -137,12 +138,26 @@ def run_worker_sweep(scale: float = 0.01, batch: int = 64, fanouts=(10, 10),
     the steady-state rate the device loop would see.  ``cpus`` is recorded
     with every row: scaling saturates at the core count, so a 2-core
     container cannot show more than 2x of *aggregate* CPU — though it can
-    exceed 2x vs a 1-worker baseline that leaves the consumer core idle."""
+    exceed 2x vs a 1-worker baseline that leaves the consumer core idle.
+
+    ``arena=True`` (default) routes pool batches through the shm batch
+    arena (DESIGN.md §11): the queue carries ~10^2-byte SlotRef
+    descriptors instead of ~10^6-byte pickled batches.  The pickle
+    transport was exactly the ``workers1`` regression of the PR-5 rows
+    (50k vs 99.5k samples/s): one worker pays serialize + pipe-write and
+    the consumer pays read + deserialize of the full batch it could have
+    sampled itself — pure overhead the arena removes.
+    ``legacy_diagnosis=True`` re-times ``workers=1`` over the pickle path
+    and emits the ``queue_bytes_per_item`` of both transports so the
+    regression (and its fix) stays visible in ``BENCH_pipeline.json``."""
+    import pickle
+
     from repro.data.prefetch import Prefetcher
+    from repro.data.staging import arena_fields, unpack_slot
     from repro.data.worker_pool import (EpochSchedule, SampleStageTask,
                                         WorkerPool)
     from repro.graph.sampler import NeighborSampler
-    from repro.graph.shm import share_graph
+    from repro.graph.shm import create_arena, share_graph
 
     sess = Heta(HetaConfig(
         data=DataConfig(dataset="ogbn-mag", scale=scale, fanouts=fanouts,
@@ -156,10 +171,12 @@ def run_worker_sweep(scale: float = 0.01, batch: int = 64, fanouts=(10, 10),
     E = NeighborSampler(g, spec, batch).steps_per_epoch()
     sched = EpochSchedule(7, E)
     warm = 2
-    results = {}
-    for w in workers:
+
+    def time_config(w, use_arena):
+        """(samples/s, mean queue item bytes) for one producer config."""
         n = steps * repeats + warm
-        store = None
+        store = ring = None
+        qbytes = []
         if w == 0:
             sampler = NeighborSampler(g, spec, batch, seed=1)
 
@@ -170,30 +187,68 @@ def run_worker_sweep(scale: float = 0.01, batch: int = 64, fanouts=(10, 10),
             src = Prefetcher(make, depth=2, num_items=n, name="sweep-thread")
         else:
             store = share_graph(g, include_features=False)
-            task = SampleStageTask(handle=store.handle, spec=spec,
-                                   batch_size=batch, sampler_seed=1,
-                                   schedule=sched)
+            if use_arena:
+                probe = NeighborSampler(g, spec, batch,
+                                        seed=1).batch_at(0, epoch_seed=7)
+                ring = create_arena(arena_fields(probe), num_workers=w,
+                                    depth=2)
+            task = SampleStageTask(
+                handle=store.handle, spec=spec, batch_size=batch,
+                sampler_seed=1, schedule=sched,
+                arena=ring.handle if ring is not None else None)
             src = WorkerPool(task, num_workers=w, depth=2, num_items=n)
         try:
             it = iter(src)
+
+            def draw():
+                item = next(it)
+                if ring is not None:
+                    if not qbytes:
+                        qbytes.append(len(pickle.dumps(item)))
+                    unpack_slot(ring.resolve(item.slot, item.use), spec)
+                    ring.release(item.slot, item.use)
+                elif w > 0 and not qbytes:
+                    qbytes.append(len(pickle.dumps(item)))
+
             for _ in range(warm):
-                next(it)
+                draw()
             wall = float("inf")
             for _ in range(repeats):
                 t0 = time.perf_counter()
                 for _ in range(steps):
-                    next(it)
+                    draw()
                 wall = min(wall, time.perf_counter() - t0)
         finally:
             src.close()
             if store is not None:
                 store.unlink()
-        sps = steps * batch / wall
+            if ring is not None:
+                ring.unlink()
+        return steps * batch / wall, (qbytes[0] if qbytes else 0)
+
+    results = {}
+    for w in workers:
+        sps, qb = time_config(w, use_arena=arena)
         results[w] = sps
-        emit(f"pipeline/sampling/workers{w}", wall / steps * 1e6,
-             f"{sps:,.0f} samples/s",
+        emit(f"pipeline/sampling/workers{w}", batch / sps * 1e6,
+             f"{sps:,.0f} samples/s"
+             + (f", {qb} B/queue item" if w else ""),
              workers=w, samples_per_s=round(sps, 1), batch_size=batch,
-             fanouts=list(fanouts), kind="sampling", cpus=os.cpu_count())
+             fanouts=list(fanouts), kind="sampling",
+             queue_bytes_per_item=qb, arena=bool(arena and w),
+             cpus=os.cpu_count())
+    if legacy_diagnosis and arena and 1 in results:
+        sps, qb = time_config(1, use_arena=False)
+        emit("pipeline/sampling/workers1_legacy", batch / sps * 1e6,
+             f"{sps:,.0f} samples/s over the pickle queue "
+             f"({qb} B/item — the PR-5 workers1 regression)",
+             workers=1, samples_per_s=round(sps, 1), batch_size=batch,
+             fanouts=list(fanouts), kind="sampling",
+             queue_bytes_per_item=qb, arena=False, cpus=os.cpu_count())
+        emit("pipeline/sampling/workers1_arena_vs_legacy", 0.0,
+             f"{results[1] / sps:.2f}x from descriptor-only queues",
+             workers=1, speedup_vs_legacy=round(results[1] / sps, 3),
+             kind="sampling_scaling", cpus=os.cpu_count())
     base = results.get(1)
     if base:
         for w in sorted(results):
@@ -230,10 +285,14 @@ if __name__ == "__main__":
                          "(e.g. BENCH_pipeline.json)")
     ap.add_argument("--skip-stages", action="store_true",
                     help="only the worker sweep, skip the per-stage breakdown")
+    ap.add_argument("--no-arena", action="store_true",
+                    help="sweep over the legacy pickle queues instead of the "
+                         "shm batch arena")
     args = ap.parse_args()
     if not args.skip_stages:
         run()
     if args.num_workers is not None:
-        run_worker_sweep(steps=args.sweep_steps, workers=args.num_workers)
+        run_worker_sweep(steps=args.sweep_steps, workers=args.num_workers,
+                         arena=not args.no_arena)
     if args.records_out:
         write_records(args.records_out)

@@ -99,7 +99,8 @@ def _measured_fit(pipelined: bool, steps: int = 16,
     try:
         # warmup inside timed_fit spawns the pool; the timed fit reuses it,
         # so the figure is steady-state, not worker spawn cost
-        return timed_fit(sess, steps)
+        wall, overlap = timed_fit(sess, steps)
+        return wall, overlap, sess.results()["queue_bytes_per_step"]
     finally:
         sess.close_pipeline()
 
@@ -110,19 +111,21 @@ def run_worker_fit_sweep(workers=(0, 1, 2, 4), steps: int = 16):
     machine-readable rows for ``BENCH_pipeline.json``."""
     import os
 
-    t_serial, _ = _measured_fit(pipelined=False, steps=steps)
+    t_serial, _, _ = _measured_fit(pipelined=False, steps=steps)
     emit("pipeline/fit/serial_step", t_serial * 1e6, "no pipeline",
-         workers=-1, kind="fit", batch_size=32, cpus=os.cpu_count())
+         workers=-1, kind="fit", batch_size=32,
+         queue_bytes_per_step=0, cpus=os.cpu_count())
     for w in workers:
-        t_w, overlap = _measured_fit(pipelined=True, steps=steps,
-                                     num_workers=w)
+        t_w, overlap, qbytes = _measured_fit(pipelined=True, steps=steps,
+                                             num_workers=w)
         emit(f"pipeline/fit/workers{w}", t_w * 1e6,
              f"overlap {overlap:.2f}, {t_serial / max(t_w, 1e-12):.2f}x vs "
-             "serial",
+             f"serial, {qbytes:.0f} B/queue item",
              workers=w, kind="fit", batch_size=32,
              samples_per_s=round(32 / max(t_w, 1e-12), 1),
              overlap_fraction=round(overlap, 3),
              speedup_vs_serial=round(t_serial / max(t_w, 1e-12), 3),
+             queue_bytes_per_step=round(qbytes, 1),
              cpus=os.cpu_count())
 
 
@@ -136,8 +139,8 @@ def run():
              "naive placement (adds inner-level exchange; ~equal on 1 device)")
 
     # ablation: async host pipeline on vs off (same batches, same model)
-    t_serial, _ = _measured_fit(pipelined=False)
-    t_pipe, overlap = _measured_fit(pipelined=True)
+    t_serial, _, _ = _measured_fit(pipelined=False)
+    t_pipe, overlap, _ = _measured_fit(pipelined=True)
     emit("epoch/pipeline/serial_step", t_serial * 1e6, "host stages in line")
     emit("epoch/pipeline/overlapped_step", t_pipe * 1e6,
          f"sample+stage prefetched; overlap fraction {overlap:.2f}")

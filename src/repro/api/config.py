@@ -195,14 +195,23 @@ class PipelineConfig:
     background thread; N > 0 runs a pool of N sampler *processes* over a
     shared-memory graph store (``repro.data.worker_pool``, DESIGN.md §9) —
     bit-identical batches for any worker count, ``depth`` prefetched items
-    per worker.  When staging reads training learnable tables the pool
-    stages on the consumer against fresh tables regardless of ``snapshot``
-    (worker processes cannot observe the trainer's table writes)."""
+    per worker.
+
+    ``arena`` (pool mode only) moves batch payloads off the queues into a
+    fixed-slot shared-memory ring buffer (the batch arena, DESIGN.md §11):
+    workers write sampled + pre-staged arrays straight into seqlock-stamped
+    slots and the queues carry only slot descriptors — zero pickled
+    ndarrays on the hot path.  With the arena and ``snapshot="stale"``,
+    learnable-table staging runs *inside* workers against bounded-stale
+    table snapshots republished each step (staleness ≤ ring depth); with
+    ``snapshot="fresh"`` (or ``arena=False``) learnable staging stays on
+    the consumer and is bit-exact."""
 
     enabled: bool = False
     depth: int = 2  # prefetched batches kept ready ahead of the device step
     snapshot: str = "stale"  # stale (max overlap) | fresh (bit-exact staging)
     num_workers: int = 0  # 0 = thread producer; N > 0 = sampler process pool
+    arena: bool = True  # pool mode: shm ring-buffer slots, descriptor queues
 
     def __post_init__(self):
         if self.depth < 1:
@@ -420,6 +429,7 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "prefetch_depth": ("pipeline", "depth", int, int),
     "snapshot_policy": ("pipeline", "snapshot", str, str),
     "num_workers": ("pipeline", "num_workers", int, int),
+    "batch_arena": ("pipeline", "arena", bool, bool),
     "kernels": ("kernels", "enabled", bool, bool),
     "kernel_stacked_agg": ("kernels", "stacked_agg", bool, bool),
     "kernel_relation_agg": ("kernels", "relation_agg", bool, bool),
@@ -454,6 +464,8 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
         "--snapshot-policy", str, f"learnable-table snapshot policy {SNAPSHOT_POLICIES}"),
     ("pipeline", "num_workers"): (
         "--num-workers", int, "sampler worker processes (0 = single thread)"),
+    ("pipeline", "arena"): (
+        "--batch-arena", None, "shm ring-buffer batch arena (pool mode)"),
     ("kernels", "enabled"): ("--kernels", None, "fused Pallas kernel layer on/off"),
     ("kernels", "stacked_agg"): (
         "--kernel-stacked-agg", None, "stacked relation-aggregation kernel"),

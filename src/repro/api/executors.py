@@ -43,16 +43,19 @@ exposes graph / spec / assignment / engine / hgnn_cfg):
       pipeline's snapshot staleness policy; see ``repro.data``).
   ``worker_stage_recipe(sess, plan) -> picklable | None``
       a picklable recipe with which a *sampler worker process* can perform
-      the host part of ``stage`` against frozen tables exported into the
-      shared-memory graph store (``repro.data.staging.stack_batch_host``),
-      or None when staging must stay consumer-side (default; also whenever
-      staging reads learnable tables that train — workers cannot observe
-      the trainer's writes).  Drives the worker pool's staging placement
-      (DESIGN.md §9).
+      the host part of ``stage`` against tables exported into the
+      shared-memory graph store or batch arena
+      (``repro.data.staging.stack_batch_host``), or None when staging must
+      stay consumer-side (default; also when staging reads learnable tables
+      that train, *unless* the batch arena's seqlock'd table region carries
+      republished bounded-stale snapshots under the ``"stale"`` policy —
+      DESIGN.md §9/§11).  Drives the worker pool's staging placement.
   ``stage_from_host(sess, plan, batch, host_arrays) -> arrays``
       consumer-side completion of worker staging: device placement of the
       host arrays a worker produced under the recipe; with
       ``host_arrays=None`` falls back to the full ``stage`` (the default).
+      ``host_arrays`` may be read-only views into an arena slot — safe
+      because the stream defers the slot release past the consuming step.
   ``loss_and_metrics(sess, plan, state, batch) -> (loss, metrics)``  eval only
 
 Register your own with ``@executors.register("name")``.
@@ -370,11 +373,20 @@ class RafSpmdExecutor(Executor):
     def worker_stage_recipe(self, sess, plan):
         """With frozen tables the whole host side of :meth:`stage` — the
         padded feature gathers of ``stack_batch`` — can run inside sampler
-        workers against tables exported into the shm store; the consumer
-        only device-puts.  While learnable tables train, workers cannot see
-        the trainer's row updates, so staging stays consumer-side (None)."""
+        workers against tables exported into the shm store or batch arena;
+        the consumer only device-puts.
+
+        While learnable tables train, workers normally cannot see the
+        trainer's row updates, so staging stays consumer-side (None) —
+        *except* under the batch arena with the ``"stale"`` snapshot
+        policy: the session republishes learnable tables into the arena's
+        seqlock'd table region after every step, so workers stage against
+        bounded-stale snapshots (staleness ≤ ring depth, DESIGN.md §11 —
+        the same contract the thread pipeline's ``"stale"`` policy makes)."""
         if plan.learn_feats:
-            return None
+            p = sess.config.pipeline
+            if not (p.arena and p.num_workers > 0 and p.snapshot == "stale"):
+                return None
         from repro.core import raf_spmd
 
         return raf_spmd.stack_recipe(plan.plan)

@@ -105,7 +105,9 @@ class Heta:
         self._fit_serial_s = 0.0
         self._fit_steps = 0
         self._steps_done = 0
-        # persistent sampler pool: [store, pool, next_global_step, workers]
+        self._queue_bytes: List[int] = []  # pooled fits: per-item queue size
+        # persistent sampler pool:
+        # [store, arena, pool, next_global_step, workers]
         # (spawn + shm export amortize across fit() calls; see _acquire_pool)
         self._pool_cache = None
         self._pool_atexit_cb = None
@@ -231,17 +233,32 @@ class Heta:
     # -- stage 3: §6 profiling + cache ---------------------------------------
 
     def profile_and_cache(self) -> CacheReport:
-        """Pre-sample hotness, profile miss penalties, allocate the cache."""
-        from repro.embed import EmbedEngine, presample_hotness, profile_miss_penalties
+        """Pre-sample hotness, profile miss penalties, allocate the cache.
+
+        With ``pipeline.num_workers > 0`` the §6 pre-sampling epoch — the
+        same ``batch_at`` sweep the training pool runs — fans out over a
+        worker pool (bit-identical counts; visit counting is an
+        order-independent sum)."""
+        from repro.embed import EmbedEngine, profile_miss_penalties
+        from repro.embed.profiler import presample_hotness, presample_hotness_pooled
 
         self._require("spec", "partition", "profile_and_cache")
         t0 = time.perf_counter()
         cfg = self.config
-        hotness = presample_hotness(
-            self.graph, self.spec, cfg.data.batch_size,
-            epochs=cfg.cache.presample_epochs,
-            max_batches=cfg.cache.presample_max_batches, seed=cfg.run.seed,
-        )
+        if cfg.pipeline.enabled and cfg.pipeline.num_workers > 0:
+            hotness = presample_hotness_pooled(
+                self.graph, self.spec, cfg.data.batch_size,
+                num_workers=cfg.pipeline.num_workers,
+                epochs=cfg.cache.presample_epochs,
+                max_batches=cfg.cache.presample_max_batches,
+                seed=cfg.run.seed, depth=cfg.pipeline.depth,
+            )
+        else:
+            hotness = presample_hotness(
+                self.graph, self.spec, cfg.data.batch_size,
+                epochs=cfg.cache.presample_epochs,
+                max_batches=cfg.cache.presample_max_batches, seed=cfg.run.seed,
+            )
         penalties = profile_miss_penalties(
             self.graph, learnable_dim=cfg.model.learnable_dim,
             measured=cfg.cache.measured_penalties,
@@ -332,11 +349,15 @@ class Heta:
         *i+1* runs in the background while batch *i* trains, under the
         configured snapshot staleness policy — in one producer thread by
         default, or in ``pipeline.num_workers`` sampler processes over a
-        shared-memory graph store (DESIGN.md §9).  The pool + store persist
+        shared-memory graph store (DESIGN.md §9), batches flowing through
+        the zero-pickle batch arena (DESIGN.md §11) unless
+        ``pipeline.arena`` is off.  The pool + store + arena persist
         across consecutive ``fit()`` calls (spawn cost amortizes; see
         :meth:`close_pipeline`) and are torn down on error.  Batches are
         bit-identical to the serial path for any worker count (per-batch
-        RNG)."""
+        RNG); losses are bit-identical too except pooled learnable
+        training under ``snapshot="stale"``, where workers stage against
+        bounded-stale tables (staleness ≤ ring depth)."""
         self._require("state", "compile", "fit")
         steps = self.config.run.steps if steps is None else steps
         log_every = self.config.run.log_every
@@ -363,13 +384,22 @@ class Heta:
             defer = (pcfg.snapshot == "fresh"
                      and self.executor.stage_reads_tables(self, self.plan))
             stream_kw = {}
+            arena = None
             if pcfg.num_workers > 0:
+                pool, arena = self._acquire_pool(start)
                 stream_kw = dict(
                     num_workers=pcfg.num_workers,
-                    pool=self._acquire_pool(start),
+                    pool=pool,
+                    arena=arena,
+                    spec=self.spec,
                     finish_stage=lambda b, host: self.executor.stage_from_host(
                         self, self.plan, b, host),
                 )
+            # learnable-"stale" worker staging: after every consumed step,
+            # republish the updated learnable tables into the arena's
+            # seqlock'd region so workers stage batch i+k against tables at
+            # most the ring depth behind the trainer (DESIGN.md §11)
+            republish = (arena is not None and arena.handle.tables_mutable)
             try:
                 with SampleStream(
                     lambda i: self._batch_for_step(start + i),
@@ -380,7 +410,13 @@ class Heta:
                     for batch, arrays, host_s in stream:
                         logged(self._consume(batch, arrays, host_s))
                         if self._pool_cache is not None and stream_kw:
-                            self._pool_cache[2] += 1  # pool stays in sync
+                            self._pool_cache[3] += 1  # pool stays in sync
+                        if republish:
+                            arena.publish_tables({
+                                t: self.engine.table(t)
+                                for t in self.engine.learnable_types
+                            })
+                    self._queue_bytes.extend(stream.queue_bytes)
             except BaseException:
                 # a failed pooled fit leaves pool position and _steps_done
                 # out of sync (and possibly dead workers): tear down so the
@@ -442,9 +478,10 @@ class Heta:
 
         pcfg = self.config.pipeline
         if pcfg.enabled and pcfg.num_workers > 0:
+            from repro.data.sample_stream import SampleStream
             from repro.data.worker_pool import EpochSchedule, WorkerPool
 
-            store, task = self._pool_task(
+            store, arena, task = self._pool_task(
                 EpochSchedule(eval_seed, sampler.steps_per_epoch()),
                 eval_seed,
             )
@@ -452,10 +489,22 @@ class Heta:
                 with WorkerPool(task, num_workers=pcfg.num_workers,
                                 depth=pcfg.depth, num_items=n,
                                 name="eval-pool") as pool:
-                    for b, _, _ in pool:
-                        metrics = consume(b)
+                    # the stream resolves arena SlotRefs (and passes legacy
+                    # tuples through); eval consumes raw batches, so the
+                    # consumer-side completion is a no-op
+                    with SampleStream(
+                        num_steps=n, num_workers=pcfg.num_workers,
+                        pool=pool, arena=arena, spec=self.spec,
+                        finish_stage=lambda b, host: None,
+                    ) as stream:
+                        for b, _, _ in stream:
+                            metrics = consume(b)
             finally:
-                store.unlink()
+                try:
+                    store.unlink()
+                finally:
+                    if arena is not None:
+                        arena.unlink()
         elif pcfg.enabled:
             from repro.data.prefetch import Prefetcher
 
@@ -586,6 +635,11 @@ class Heta:
                                 if self.config.pipeline.enabled else 0),
             "samples_per_s": float(samples_per_s),
             "overlap_fraction": float(overlap),
+            # mean pickled bytes per worker→consumer queue item — ~1e2 with
+            # the batch arena (SlotRef descriptors), ~1e6 legacy (ndarrays)
+            "queue_bytes_per_step": (
+                float(np.mean(self._queue_bytes)) if self._queue_bytes
+                else 0.0),
             "hit_rates": self.engine.cache.hit_rates(),
             "partitioning": self.mp.summary(),
             "meta_local": self.meta_local,
@@ -635,18 +689,18 @@ class Heta:
 
         pcfg = self.config.pipeline
         if self._pool_cache is not None:
-            store, pool, next_step, workers = self._pool_cache
+            store, arena, pool, next_step, workers = self._pool_cache
             if (workers == pcfg.num_workers and next_step == start_step
                     and not pool._closed):
-                return pool
+                return pool, arena
             self.close_pipeline()
-        store, task = self._pool_task(
+        store, arena, task = self._pool_task(
             self._schedule(start_step), self.config.run.seed + 1,
             recipe=self.executor.worker_stage_recipe(self, self.plan),
         )
         pool = WorkerPool(task, num_workers=pcfg.num_workers,
                           depth=pcfg.depth, num_items=None)
-        self._pool_cache = [store, pool, start_step, pcfg.num_workers]
+        self._pool_cache = [store, arena, pool, start_step, pcfg.num_workers]
         if self._pool_atexit_cb is None:
             # scripts that train and simply exit must not leave the store
             # to the resource tracker's leaked-segment shutdown path (it
@@ -664,7 +718,7 @@ class Heta:
 
             atexit.register(_cleanup)
             self._pool_atexit_cb = _cleanup
-        return pool
+        return pool, arena
 
     def close_pipeline(self) -> None:
         """Tear down the persistent sampler pool and unlink its shm store.
@@ -681,29 +735,55 @@ class Heta:
                 pass
         if self._pool_cache is None:
             return
-        store, pool, _, _ = self._pool_cache
+        store, arena, pool, _, _ = self._pool_cache
         self._pool_cache = None
         try:
             pool.close()
         finally:
-            store.unlink()
+            try:
+                store.unlink()
+            finally:
+                if arena is not None:
+                    arena.unlink()
 
     def _pool_task(self, schedule, sampler_seed: int, recipe=None):
-        """Shared-memory graph store + picklable sampling task for a worker
-        pool following ``schedule`` (the caller owns the store:
-        ``_acquire_pool`` parks it in ``_pool_cache``, ``evaluate`` unlinks
-        per call).  Frozen-table staging moves into the workers when the
+        """Shared-memory graph store, batch arena and picklable sampling
+        task for a worker pool following ``schedule`` (the caller owns
+        both: ``_acquire_pool`` parks them in ``_pool_cache``, ``evaluate``
+        unlinks per call).  Staging moves into the workers when the
         executor provides a ``recipe`` — exactly the tables its branches
-        read are exported into the store; with ``recipe=None`` workers
-        sample only and staging stays consumer-side."""
-        from repro.data.worker_pool import SampleStageTask
-        from repro.graph.shm import share_graph
+        read travel with the batch pipeline; with ``recipe=None`` workers
+        sample only and staging stays consumer-side.
 
+        With ``pipeline.arena`` (default) batches flow through a
+        fixed-slot shm ring buffer (DESIGN.md §11): the tables live in the
+        arena segment — seqlock-republishable when learnable tables train
+        under the ``"stale"`` policy — and the queues carry only
+        :class:`SlotRef` descriptors.  ``arena=False`` keeps the legacy
+        pickle path (tables exported read-only into the graph store)."""
+        from repro.data.staging import arena_fields
+        from repro.data.worker_pool import SampleStageTask
+        from repro.graph.shm import create_arena, share_graph
+
+        pcfg = self.config.pipeline
         tables = None
         if recipe is not None:
             snapshot = self.engine.tables_snapshot()
             tables = {t: snapshot[t] for t in recipe.table_types()}
-        store = share_graph(self.graph, include_features=False, tables=tables)
+        arena = None
+        if pcfg.arena:
+            store = share_graph(self.graph, include_features=False)
+            probe = self._batch_for_step(0)  # padded shapes: any step works
+            mutable = (recipe is not None
+                       and bool(getattr(self.plan, "learn_feats", False)))
+            arena = create_arena(
+                arena_fields(probe, recipe=recipe, tables=tables),
+                num_workers=pcfg.num_workers, depth=pcfg.depth,
+                tables=tables, tables_mutable=mutable,
+            )
+        else:
+            store = share_graph(self.graph, include_features=False,
+                                tables=tables)
         task = SampleStageTask(
             handle=store.handle,
             spec=self.spec,
@@ -711,8 +791,9 @@ class Heta:
             sampler_seed=sampler_seed,
             schedule=schedule,
             recipe=recipe,
+            arena=arena.handle if arena is not None else None,
         )
-        return store, task
+        return store, arena, task
 
     def _next_batch(self):
         return self._batch_for_step(self._steps_done)

@@ -27,10 +27,20 @@ DistDGLv2/HopGNN recipe, behind three pieces:
     ``w, w+N, ...``; per-worker bounded queues round-robined by the
     consumer reconstruct strict step order; ``batch_at`` purity makes any
     worker count bit-identical.  Staging placement follows the snapshot
-    policy: frozen-table batches are staged *inside* workers via the shared
-    numpy core (``repro.data.staging.stack_batch_host``) against tables
-    exported into the store, while learnable-"fresh" staging stays on the
-    consumer.  Architecture: DESIGN.md §9.
+    policy: frozen-table and learnable-"stale" batches are staged *inside*
+    workers via the shared numpy core
+    (``repro.data.staging.stack_batch_host``), while learnable-"fresh"
+    staging stays on the consumer.  Architecture: DESIGN.md §9.
+
+The **batch arena** (DESIGN.md §11) closes the pool's last copy: instead of
+pickling batches through the worker→consumer queues, workers write sampled
+(and pre-staged) arrays directly into fixed seqlock-stamped slots of one
+shared-memory ring buffer (``repro.graph.shm.create_arena``), and the queue
+carries only a few-hundred-byte ``SlotRef`` descriptor — zero pickled
+ndarrays on the hot path.  Slot layout, version-stamp discipline, the
+bounded-staleness contract for learnable tables, and failure/unlink rules
+are specified in DESIGN.md §11; ``repro.data.staging`` holds the slot
+pack/unpack helpers and the write-into-slot staging variant.
 
 **The staged-step protocol.**  Executors (``repro.api.executors``) split
 one training step into two public methods::
@@ -67,10 +77,18 @@ in the background observes tables before steps *i..i+k-1* wrote back:
 from repro.data.pipeline import SyntheticCorpus, TokenPipeline
 from repro.data.prefetch import Prefetcher
 from repro.data.sample_stream import SampleStream
-from repro.data.staging import StackRecipe, stack_batch_host
+from repro.data.staging import (
+    StackRecipe,
+    arena_fields,
+    pack_batch_into,
+    stack_batch_host,
+    unpack_slot,
+)
 from repro.data.worker_pool import (
     EpochSchedule,
+    HotnessCountTask,
     SampleStageTask,
+    SlotRef,
     WorkerDiedError,
     WorkerPool,
 )
@@ -82,8 +100,13 @@ __all__ = [
     "SampleStream",
     "StackRecipe",
     "stack_batch_host",
+    "arena_fields",
+    "pack_batch_into",
+    "unpack_slot",
     "EpochSchedule",
+    "HotnessCountTask",
     "SampleStageTask",
+    "SlotRef",
     "WorkerDiedError",
     "WorkerPool",
 ]

@@ -31,6 +31,15 @@ of two engines (see the ``repro.data`` package docstring and DESIGN.md §9):
     this): the stream then draws exactly ``num_steps`` items and its
     ``close()`` leaves the pool alive for the next stream.
 
+    With a batch **arena** (DESIGN.md §11) the queue items are
+    :class:`~repro.data.worker_pool.SlotRef` descriptors; the stream
+    resolves each against ``arena``/``spec`` into zero-copy slot views and
+    **defers the slot release by one step**: slot ``i`` is handed back to
+    its writer only when step ``i+1`` is drawn (or on ``close()``), so the
+    consuming device step may alias slot memory safely.  ``queue_bytes``
+    records the pickled size of each queue item — the zero-pickle
+    guarantee CI asserts on.
+
 In both modes ``host_seconds`` is the sample+stage time actually spent on
 the item, measured where it ran, so the consumer can compute the overlap
 fraction (host work that ran concurrently with the device step costs no
@@ -41,8 +50,9 @@ idempotent.
 
 from __future__ import annotations
 
+import pickle
 import time
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.data.prefetch import Prefetcher
 
@@ -61,6 +71,8 @@ class SampleStream:
         worker_task: Optional[object] = None,
         finish_stage: Optional[Callable[[object, object], object]] = None,
         pool: Optional[object] = None,
+        arena: Optional[object] = None,
+        spec: Optional[object] = None,
     ):
         if num_workers < 0:
             raise ValueError(f"num_workers must be >= 0, got {num_workers}")
@@ -71,6 +83,13 @@ class SampleStream:
         self._owns_pool = True
         self._remaining = None
         self._prefetcher = None
+        self._arena = arena
+        self._spec = spec
+        self._pending_release = None  # (slot, use) alive through the step
+        self._legacy_item_bytes = None  # measured once; tuple items are big
+        self.queue_bytes: List[int] = []  # pickled size of each queue item
+        if arena is not None and spec is None:
+            raise ValueError("arena mode requires the sampler spec")
 
         if num_workers == 0:
             if make_batch is None or stage is None:
@@ -119,13 +138,43 @@ class SampleStream:
     def __iter__(self) -> "SampleStream":
         return self
 
+    def _release_pending(self) -> None:
+        if self._pending_release is not None:
+            slot, use = self._pending_release
+            self._pending_release = None
+            self._arena.release(slot, use)
+
     def __next__(self) -> Tuple[object, object, float]:
         if self._pool is not None:
             if self._remaining is not None:
                 if self._remaining <= 0:
                     raise StopIteration
                 self._remaining -= 1
-            batch, host, host_s = next(self._pool)
+            try:
+                item = next(self._pool)
+            except BaseException:
+                self._release_pending()
+                raise
+            if self._arena is not None and hasattr(item, "slot"):
+                from repro.data.staging import unpack_slot
+
+                # the previous step's views (and any zero-copy device
+                # aliases) are dead once the caller asks for the next item
+                # — only now may the writer reuse that slot
+                self._release_pending()
+                self.queue_bytes.append(len(pickle.dumps(item)))
+                views = self._arena.resolve(item.slot, item.use)
+                batch, host = unpack_slot(views, self._spec)
+                t0 = time.perf_counter()
+                arrays = self._finish(batch, host)
+                self._pending_release = (item.slot, item.use)
+                return batch, arrays, item.host_s + time.perf_counter() - t0
+            batch, host, host_s = item
+            if self._legacy_item_bytes is None:
+                # tuple payloads are ~MBs of pickled ndarrays; measure once
+                # and reuse (the per-step cost is what the arena removes)
+                self._legacy_item_bytes = len(pickle.dumps(item))
+            self.queue_bytes.append(self._legacy_item_bytes)
             # consumer-side completion: device placement of worker-staged
             # arrays, or full (fresh) staging when workers only sampled —
             # either way this slice of host time is NOT overlapped
@@ -142,6 +191,7 @@ class SampleStream:
         return batch, arrays, host_s
 
     def close(self) -> None:
+        self._release_pending()
         if self._pool is not None and self._owns_pool:
             self._pool.close()
         if self._prefetcher is not None:

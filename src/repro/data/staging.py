@@ -29,7 +29,21 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-__all__ = ["StackRecipe", "stack_batch_host"]
+__all__ = [
+    "StackRecipe",
+    "stack_batch_host",
+    "BATCH_PREFIX",
+    "HOST_PREFIX",
+    "pack_batch_arrays",
+    "pack_batch_into",
+    "arena_fields",
+    "unpack_slot",
+]
+
+# key prefixes inside a batch-arena slot (DESIGN.md §11): raw sampled batch
+# arrays vs pre-staged host arrays (the stack_batch_host outputs)
+BATCH_PREFIX = "b/"
+HOST_PREFIX = "h/"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,10 +97,18 @@ def _padded_gather(tab: np.ndarray, nids: np.ndarray, d_pad: int) -> np.ndarray:
     return out
 
 
+def _gather_into(dst: np.ndarray, tab: np.ndarray, nids: np.ndarray) -> None:
+    # in-place _padded_gather: dst is pre-zeroed, so only the real width
+    # needs filling
+    dst[:, : tab.shape[1]] = tab[nids]
+
+
 def stack_batch_host(
     recipe: StackRecipe,
     batch,
     tables: Dict[str, np.ndarray],
+    out: "Dict[str, np.ndarray] | None" = None,
+    prefix: str = "",
 ) -> Dict[str, np.ndarray]:
     """The numpy core of ``raf_spmd.stack_batch``: assemble the stacked host
     arrays for one :class:`~repro.graph.sampler.SampledBatch`.
@@ -96,22 +118,44 @@ def stack_batch_host(
     ``seeds``/``labels``/``mask{d}``/``qfeat{d}``/``hfeat{k}`` dict the SPMD
     executor device-puts; values are plain numpy so a worker process can
     compute them and ship them over a queue.
+
+    With ``out`` (the write-into-slot variant, DESIGN.md §11), every array is
+    assembled **in place** inside ``out[prefix + name]`` — the batch-arena
+    slot views — instead of freshly allocated; the returned dict then holds
+    those views.  Both paths run the same fill loop over pre-zeroed
+    destinations, so a worker-staged slot is bit-identical to a
+    consumer-staged allocation.
     """
     k, dp, P = recipe.num_layers, recipe.d_pad, recipe.num_shards
     B = batch.batch_size
-    out: Dict[str, np.ndarray] = {
-        "seeds": np.asarray(batch.seeds),
-        "labels": np.asarray(batch.labels),
-    }
+
+    res: Dict[str, np.ndarray] = {}
+
+    def _dest(name: str, shape: Tuple[int, ...], dtype) -> np.ndarray:
+        if out is None:
+            arr = np.zeros(shape, dtype)
+        else:
+            arr = out[prefix + name].reshape(shape)
+            arr[...] = 0
+        return arr
+
+    for name, src in (("seeds", np.asarray(batch.seeds)),
+                      ("labels", np.asarray(batch.labels))):
+        if out is None:
+            res[name] = src
+        else:
+            np.copyto(out[prefix + name], src, casting="no")
+            res[name] = out[prefix + name]
+
     n_prev = B
     for d in range(1, k + 1):
         sb = recipe.slot_branch[d - 1]
         rb = sb.shape[1]
         lv = batch.levels[d - 1]
         n_d = lv.nids.shape[1]
-        mask = np.zeros((P, rb, n_d), bool)
-        qfeat = np.zeros((P, rb, n_prev, dp), np.float32)
-        hfeat = np.zeros((P, rb, n_d, dp), np.float32) if d == k else None
+        mask = _dest(f"mask{d}", (P, rb, n_d), bool)
+        qfeat = _dest(f"qfeat{d}", (P, rb, n_prev, dp), np.float32)
+        hfeat = _dest(f"hfeat{d}", (P, rb, n_d, dp), np.float32) if d == k else None
         for p in range(P):
             for s in range(rb):
                 b = int(sb[p, s])
@@ -122,14 +166,77 @@ def stack_batch_host(
                     batch.seeds if d == 1
                     else batch.levels[d - 2].nids[recipe.parents[d - 1][b]]
                 )
-                qfeat[p, s] = _padded_gather(
-                    tables[recipe.dst_types[d - 1][b]], parent_nids, dp)
+                _gather_into(qfeat[p, s],
+                             tables[recipe.dst_types[d - 1][b]], parent_nids)
                 if d == k:
-                    hfeat[p, s] = _padded_gather(
-                        tables[recipe.src_types[d - 1][b]], lv.nids[b], dp)
-        out[f"mask{d}"] = mask.reshape(P * rb, n_d)
-        out[f"qfeat{d}"] = qfeat.reshape(P * rb, n_prev, dp)
+                    _gather_into(hfeat[p, s],
+                                 tables[recipe.src_types[d - 1][b]], lv.nids[b])
+        res[f"mask{d}"] = mask.reshape(P * rb, n_d)
+        res[f"qfeat{d}"] = qfeat.reshape(P * rb, n_prev, dp)
         if d == k:
-            out[f"hfeat{d}"] = hfeat.reshape(P * rb, n_d, dp)
+            res[f"hfeat{d}"] = hfeat.reshape(P * rb, n_d, dp)
         n_prev = n_d
-    return out
+    return res
+
+
+# --------------------------------------------------------------------------
+# batch-arena slot packing (DESIGN.md §11)
+# --------------------------------------------------------------------------
+#
+# A slot holds the raw sampled batch under ``b/`` keys and, when the pool
+# stages, the stack_batch_host outputs under ``h/`` keys.  Slot layouts are
+# static — the sampler pads every level to fixed [R_d, N_d] and the recipe
+# pads features to d_pad — so one probe batch sizes the whole arena.
+
+
+def pack_batch_arrays(batch) -> Dict[str, np.ndarray]:
+    """A sampled batch as a flat ``b/``-prefixed array dict (no copies)."""
+    arrays = {
+        BATCH_PREFIX + "seeds": np.asarray(batch.seeds),
+        BATCH_PREFIX + "labels": np.asarray(batch.labels),
+    }
+    for d, lv in enumerate(batch.levels, start=1):
+        arrays[f"{BATCH_PREFIX}nids{d}"] = np.asarray(lv.nids)
+        arrays[f"{BATCH_PREFIX}mask{d}"] = np.asarray(lv.mask)
+    return arrays
+
+
+def pack_batch_into(views: Dict[str, np.ndarray], batch) -> None:
+    """Write a sampled batch into a slot's ``b/`` views (worker side)."""
+    for key, src in pack_batch_arrays(batch).items():
+        np.copyto(views[key], src, casting="no")
+
+
+def arena_fields(batch, recipe=None, tables=None) -> Dict[str, np.ndarray]:
+    """Probe arrays sizing one arena slot: the batch layout plus, when the
+    pool stages, the stacked host arrays (``shm.create_arena`` reads only
+    shapes/dtypes)."""
+    fields = pack_batch_arrays(batch)
+    if recipe is not None:
+        host = stack_batch_host(recipe, batch, tables)
+        fields.update({HOST_PREFIX + k: v for k, v in host.items()})
+    return fields
+
+
+def unpack_slot(views: Dict[str, np.ndarray], spec):
+    """Consumer side: rebuild ``(batch, host)`` from a slot's views.
+
+    The returned batch's arrays alias the slot — the caller must not release
+    the slot until every view (and anything zero-copy derived from it) is
+    dead; ``SampleStream`` defers the release past the consuming step."""
+    from repro.graph.sampler import Level, SampledBatch
+
+    levels = [
+        Level(nids=views[f"{BATCH_PREFIX}nids{d}"],
+              mask=views[f"{BATCH_PREFIX}mask{d}"])
+        for d in range(1, spec.num_layers + 1)
+    ]
+    batch = SampledBatch(
+        spec=spec,
+        seeds=views[BATCH_PREFIX + "seeds"],
+        labels=views[BATCH_PREFIX + "labels"],
+        levels=levels,
+    )
+    host = {k[len(HOST_PREFIX):]: v for k, v in views.items()
+            if k.startswith(HOST_PREFIX)}
+    return batch, (host or None)

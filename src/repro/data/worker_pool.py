@@ -43,7 +43,9 @@ __all__ = [
     "WorkerPool",
     "WorkerDiedError",
     "EpochSchedule",
+    "SlotRef",
     "SampleStageTask",
+    "HotnessCountTask",
 ]
 
 _POLL_S = 0.05
@@ -119,6 +121,11 @@ def _worker_main(task, wid: int, num_workers: int,
                  num_items: Optional[int], q, stop) -> None:
     """Entry point of one spawned worker: setup, stripe loop, teardown."""
     try:
+        # tasks that block outside the queues (the arena's backpressure
+        # gate) need the stop event to exit promptly on pool shutdown
+        bind = getattr(task, "bind_stop", None)
+        if bind is not None:
+            bind(stop)
         task.setup()
     except BaseException as exc:  # noqa: BLE001 — delivered to the consumer
         _put(q, stop, _picklable_failure(exc))
@@ -288,19 +295,42 @@ class EpochSchedule:
     """Maps a global step to ``(epoch_seed, step-in-epoch)``.
 
     Epoch ``e`` covers global steps ``[e*E, (e+1)*E)`` and shuffles with
-    ``epoch_seed_base + e*E`` — the session's historical seeding, shared
-    here so the serial loop, the thread stream and every pool worker derive
-    identical batches from identical positions."""
+    ``epoch_seed_base + e*seed_stride`` — by default ``seed_stride = E``,
+    the session's historical seeding, shared here so the serial loop, the
+    thread stream and every pool worker derive identical batches from
+    identical positions.  The §6 pre-sampling sweep seeds epochs with
+    ``seed + ep`` instead, which is ``seed_stride=1``."""
 
     epoch_seed_base: int
     steps_per_epoch: int
     start_step: int = 0
     shuffle: bool = True
+    seed_stride: Optional[int] = None  # None = steps_per_epoch
 
     def seed_and_index(self, i: int) -> Tuple[int, int]:
         s = self.start_step + i
         e, idx = divmod(s, self.steps_per_epoch)
-        return self.epoch_seed_base + e * self.steps_per_epoch, idx
+        stride = (self.steps_per_epoch if self.seed_stride is None
+                  else self.seed_stride)
+        return self.epoch_seed_base + e * stride, idx
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotRef:
+    """Queue descriptor of one arena-staged item (DESIGN.md §11).
+
+    This ~200-byte record is the *entire* queue payload when the batch arena
+    is active — the batch and staged arrays live in the slot it names.
+    ``table_version`` stamps which staging-table publish the worker staged
+    against (the staleness bound check); ``staged`` says whether ``h/``
+    arrays are present."""
+
+    step: int
+    slot: int
+    use: int  # slot generation; consumer releases with the same value
+    host_s: float
+    table_version: int = 0
+    staged: bool = False
 
 
 @dataclasses.dataclass
@@ -309,11 +339,14 @@ class SampleStageTask:
     stage) the batch at one global step.
 
     ``handle`` names the shared-memory graph store; ``recipe`` (a
-    :class:`~repro.data.staging.StackRecipe`, or None) moves the frozen-table
-    host staging into the worker — its feature tables must have been
-    exported into the store (``share_graph(..., tables=...)``).  Returns
-    ``(batch, host_arrays | None, host_seconds)`` per item, mirroring the
-    thread stream's payload.
+    :class:`~repro.data.staging.StackRecipe`, or None) moves the host
+    staging into the worker — its feature tables must have been exported
+    into the store (``share_graph(..., tables=...)``) or, with an arena,
+    into the arena's table region.  Without ``arena`` each item returns
+    ``(batch, host_arrays | None, host_seconds)``, mirroring the thread
+    stream's payload; with an :class:`~repro.graph.shm.ArenaHandle` the
+    arrays are written straight into the item's ring slot and only a
+    :class:`SlotRef` crosses the queue (zero pickled ndarrays).
     """
 
     handle: object  # repro.graph.shm.GraphHandle
@@ -322,8 +355,99 @@ class SampleStageTask:
     sampler_seed: int
     schedule: EpochSchedule
     recipe: object = None
+    arena: object = None  # repro.graph.shm.ArenaHandle
+
+    def bind_stop(self, stop) -> None:
+        """Called by the pool runner so the arena backpressure wait can
+        observe shutdown."""
+        self._stop = stop
 
     def setup(self) -> None:
+        from repro.graph.sampler import NeighborSampler
+        from repro.graph.shm import attach, attach_arena
+
+        self._attached = attach(self.handle)
+        self._sampler = NeighborSampler(
+            self._attached.graph, self.spec, self.batch_size,
+            seed=self.sampler_seed,
+        )
+        self._tables = self._attached.tables
+        self._arena = attach_arena(self.arena) if self.arena is not None else None
+        if self._arena is not None and self._arena.handle.tables:
+            if not self._arena.handle.tables_mutable:
+                # frozen tables: zero-copy views, read once
+                self._tables, _ = self._arena.read_tables()
+
+    def __call__(self, i: int):
+        from repro.data.staging import (HOST_PREFIX, pack_batch_into,
+                                        stack_batch_host)
+
+        t0 = time.perf_counter()
+        epoch_seed, idx = self.schedule.seed_and_index(i)
+        batch = self._sampler.batch_at(
+            idx, epoch_seed=epoch_seed, shuffle=self.schedule.shuffle)
+        if self._arena is None:
+            host = (
+                stack_batch_host(self.recipe, batch, self._tables)
+                if self.recipe is not None else None
+            )
+            return batch, host, time.perf_counter() - t0
+
+        a = self._arena
+        slot, use = a.handle.slot_for(i)
+        # backpressure: the sub-ring is full until the consumer releases
+        # this slot's previous generation
+        if not a.wait_writable(slot, use, stop=getattr(self, "_stop", None)):
+            return None  # pool is stopping; the queue put will abort too
+        table_version = 0
+        a.begin_write(slot, use)
+        try:
+            views = a.slot_views(slot, writable=True)
+            pack_batch_into(views, batch)
+            if self.recipe is not None:
+                tables, table_version = (
+                    a.read_tables() if a.handle.tables_mutable
+                    else (self._tables, a.table_version())
+                )
+                stack_batch_host(self.recipe, batch, tables,
+                                 out=views, prefix=HOST_PREFIX)
+        finally:
+            a.end_write(slot, use)
+        return SlotRef(step=i, slot=slot, use=use,
+                       host_s=time.perf_counter() - t0,
+                       table_version=table_version,
+                       staged=self.recipe is not None)
+
+    def teardown(self) -> None:
+        attached = getattr(self, "_attached", None)
+        if attached is not None:
+            attached.close()
+        arena = getattr(self, "_arena", None)
+        if arena is not None:
+            arena.close()
+
+
+@dataclasses.dataclass
+class HotnessCountTask:
+    """Pool task of the §6 pre-sampling sweep: sample the batch at one
+    global position and accumulate its node-visit counts locally.
+
+    Counting is a sum over batches, hence order-independent: each worker
+    returns ``None`` per item and ships its partial counts dict once, on
+    its stripe's last item; the consumer sums the partials — bit-identical
+    to the serial :func:`repro.embed.profiler.presample_hotness` loop."""
+
+    handle: object  # repro.graph.shm.GraphHandle
+    spec: object
+    batch_size: int
+    sampler_seed: int
+    schedule: EpochSchedule
+    num_items: int
+    num_workers: int
+
+    def setup(self) -> None:
+        import numpy as np
+
         from repro.graph.sampler import NeighborSampler
         from repro.graph.shm import attach
 
@@ -332,20 +456,19 @@ class SampleStageTask:
             self._attached.graph, self.spec, self.batch_size,
             seed=self.sampler_seed,
         )
-        self._tables = self._attached.tables
+        self._counts = {
+            t: np.zeros(n, dtype=np.int64)
+            for t, n in self._attached.graph.num_nodes.items()
+        }
 
     def __call__(self, i: int):
-        from repro.data.staging import stack_batch_host
-
-        t0 = time.perf_counter()
         epoch_seed, idx = self.schedule.seed_and_index(i)
         batch = self._sampler.batch_at(
             idx, epoch_seed=epoch_seed, shuffle=self.schedule.shuffle)
-        host = (
-            stack_batch_host(self.recipe, batch, self._tables)
-            if self.recipe is not None else None
-        )
-        return batch, host, time.perf_counter() - t0
+        batch.count_visits(self._counts)
+        if i + self.num_workers >= self.num_items:  # stripe's last item
+            return self._counts
+        return None
 
     def teardown(self) -> None:
         attached = getattr(self, "_attached", None)

@@ -1,6 +1,7 @@
 from repro.embed.profiler import (
     HotnessProfile,
     presample_hotness,
+    presample_hotness_pooled,
     measure_miss_penalty,
     analytic_miss_penalty,
     MissPenaltyProfile,
@@ -12,6 +13,7 @@ from repro.embed.engine import EmbedEngine
 __all__ = [
     "HotnessProfile",
     "presample_hotness",
+    "presample_hotness_pooled",
     "measure_miss_penalty",
     "analytic_miss_penalty",
     "MissPenaltyProfile",

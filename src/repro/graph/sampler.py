@@ -126,6 +126,16 @@ class SampledBatch:
     def total_sampled(self) -> int:
         return int(sum(lv.mask.sum() for lv in self.levels)) + self.batch_size
 
+    def count_visits(self, counts: Dict[str, np.ndarray]) -> None:
+        """Accumulate this batch's per-type node visit counts into ``counts``
+        (the §6 pre-sampling statistic; shared by the serial profiler and the
+        pooled hotness task so both count identically)."""
+        np.add.at(counts[self.spec.target_type], self.seeds, 1)
+        for lv, branches in zip(self.levels, self.spec.levels):
+            for b, bs in enumerate(branches):
+                ids = lv.nids[b][lv.mask[b]]
+                np.add.at(counts[bs.src_type], ids, 1)
+
     def unique_nodes_per_type(self) -> Dict[str, np.ndarray]:
         """Unique node ids touched per node type (drives feature fetching,
         cache lookups and the vanilla-model communication accounting)."""

@@ -39,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import secrets
+import time
 from multiprocessing import shared_memory
 from typing import Dict, List, Optional, Tuple
 
@@ -57,6 +58,11 @@ __all__ = [
     "AttachedArrays",
     "share_arrays",
     "attach_arrays",
+    "ArenaHandle",
+    "BatchArena",
+    "AttachedArena",
+    "create_arena",
+    "attach_arena",
     "live_segments",
 ]
 
@@ -443,6 +449,317 @@ def share_arrays(
 def attach_arrays(handle: ArraysHandle) -> AttachedArrays:
     """Map the bundle described by ``handle`` (see :class:`AttachedArrays`)."""
     return AttachedArrays(handle)
+
+
+# --------------------------------------------------------------------------
+# batch arena — fixed-slot shm ring buffer for the worker→consumer hot path
+# --------------------------------------------------------------------------
+#
+# DESIGN.md §11.  N sampler workers write sampled batches (and, when a
+# StackRecipe is active, the pre-staged host arrays) directly into fixed
+# per-worker slots of one shared segment; the mp.Queue between worker and
+# consumer carries only a tiny picklable slot descriptor — zero pickled
+# ndarrays on the hot path.
+#
+# Concurrency model (pragmatic seqlock — single writer per word, aligned
+# 8-byte loads/stores, which x86-64 and AArch64 perform atomically and
+# in order for this single-producer/single-consumer pattern):
+#
+#   per slot:  write_seq   (worker-owned)   odd while the worker is writing,
+#                                           ``2*use + 2`` once generation
+#                                           ``use`` of the slot is complete
+#              release_seq (consumer-owned) number of completed consumptions;
+#                                           the worker may overwrite the slot
+#                                           for generation ``use`` only once
+#                                           ``release_seq >= use``
+#   tables:    one global version word, odd while the trainer republishes
+#              learnable tables; readers copy-then-revalidate (torn reads
+#              retry).  Immutable table regions skip the copy and hand out
+#              zero-copy views.
+#
+# Slot assignment is a pure function of the pool item index (stripe order,
+# matching ``worker_pool``): worker ``w = i % stride`` owns the sub-ring
+# ``[w*depth, (w+1)*depth)``, so no two writers ever share a slot and no
+# cross-process allocator is needed.  Backpressure falls out of the
+# release gate: when every slot of a worker's sub-ring is in flight the
+# worker polls until the consumer releases one (or the pool stops).
+
+
+_CTRL_WORDS = 2  # per-slot control: [write_seq, release_seq]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaHandle:
+    """Picklable description of a batch-arena segment.
+
+    ``fields`` are slot-relative :class:`ArrayRef`\\ s (identical layout in
+    every slot); ``tables`` are segment-absolute refs of the staging-table
+    region.  ``stride`` is the worker count; ``slot_for`` maps a pool item
+    index to its (slot, generation) pair."""
+
+    segment: str
+    owner_pid: int
+    stride: int  # worker count; worker w owns slots [w*depth, (w+1)*depth)
+    depth: int  # slots per worker (= pool prefetch depth)
+    fields: Tuple[Tuple[str, ArrayRef], ...]  # slot-relative layout
+    slot_bytes: int  # aligned byte stride between consecutive slots
+    slots_offset: int  # absolute offset of slot 0
+    tables: Tuple[Tuple[str, ArrayRef], ...] = ()  # absolute offsets
+    tables_mutable: bool = False
+
+    @property
+    def n_slots(self) -> int:
+        return self.stride * self.depth
+
+    def slot_for(self, item: int) -> Tuple[int, int]:
+        """Map pool item index -> (slot, use generation)."""
+        w, k = item % self.stride, item // self.stride
+        return w * self.depth + k % self.depth, k // self.depth
+
+
+class _ArenaOps:
+    """Slot/table protocol shared by the owner and attached sides."""
+
+    _shm: shared_memory.SharedMemory
+    handle: ArenaHandle
+
+    def _bind_views(self) -> None:
+        h = self.handle
+        buf = self._shm.buf
+        self._tver = np.ndarray((1,), dtype=np.uint64, buffer=buf, offset=0)
+        self._ctrl = np.ndarray((h.n_slots, _CTRL_WORDS), dtype=np.uint64,
+                                buffer=buf, offset=_ALIGN)
+        self._table_refs = dict(h.tables)
+
+    # -- slot protocol ----------------------------------------------------
+
+    def slot_views(self, slot: int, writable: bool = False
+                   ) -> Dict[str, np.ndarray]:
+        """Views of one slot's arrays (writable only on the writing worker)."""
+        base = self.handle.slots_offset + slot * self.handle.slot_bytes
+        buf = self._shm.buf
+        return {
+            k: _view(buf, ArrayRef(base + r.offset, r.shape, r.dtype),
+                     writeable=writable)
+            for k, r in self.handle.fields
+        }
+
+    def slot_state(self, slot: int) -> Tuple[int, int]:
+        """(write_seq, release_seq) of one slot."""
+        return int(self._ctrl[slot, 0]), int(self._ctrl[slot, 1])
+
+    def wait_writable(self, slot: int, use: int, stop=None,
+                      timeout: Optional[float] = None,
+                      poll: float = 5e-4) -> bool:
+        """Block until generation ``use`` of ``slot`` may be written.
+
+        Returns False if ``stop`` is set or ``timeout`` elapses first (the
+        backpressure gate doubles as the pool-shutdown exit)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while int(self._ctrl[slot, 1]) < use:
+            if stop is not None and stop.is_set():
+                return False
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            time.sleep(poll)
+        return True
+
+    def begin_write(self, slot: int, use: int) -> None:
+        self._ctrl[slot, 0] = 2 * use + 1  # odd: payload being written
+
+    def end_write(self, slot: int, use: int) -> None:
+        self._ctrl[slot, 0] = 2 * use + 2  # even: generation `use` complete
+
+    def resolve(self, slot: int, use: int) -> Dict[str, np.ndarray]:
+        """Consumer side: read-only views of a completed slot generation.
+
+        The descriptor arrives on the queue strictly after ``end_write``, so
+        an odd/short ``write_seq`` here is a protocol violation, not a race."""
+        seq = int(self._ctrl[slot, 0])
+        if seq != 2 * use + 2:
+            raise RuntimeError(
+                f"arena slot {slot} generation {use}: write_seq={seq}, "
+                f"expected {2 * use + 2} (torn or out-of-order write)")
+        return self.slot_views(slot, writable=False)
+
+    def release(self, slot: int, use: int) -> None:
+        """Consumer side: hand generation ``use`` of ``slot`` back to its
+        writer.  Call only once every view of the slot is dead."""
+        self._ctrl[slot, 1] = use + 1
+
+    # -- staging-table region ---------------------------------------------
+
+    def table_view(self, name: str, writable: bool = False) -> np.ndarray:
+        return _view(self._shm.buf, self._table_refs[name], writeable=writable)
+
+    def table_version(self) -> int:
+        return int(self._tver[0])
+
+    def publish_tables(self, updates: Dict[str, np.ndarray]) -> None:
+        """Owner side: republish mutable staging tables under the seqlock."""
+        if not self.handle.tables_mutable:
+            raise RuntimeError("arena tables are immutable")
+        self._tver[0] += 1  # odd: republish in progress
+        try:
+            for name, arr in updates.items():
+                if name in self._table_refs:
+                    np.copyto(self.table_view(name, writable=True),
+                              np.asarray(arr), casting="same_kind")
+        finally:
+            self._tver[0] += 1
+
+    def read_tables(self, poll: float = 5e-4
+                    ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Consistent staging tables + the version they correspond to.
+
+        Immutable arenas return zero-copy views; mutable ones copy under the
+        seqlock and retry torn reads until a stable version brackets the
+        copy."""
+        if not self.handle.tables_mutable:
+            return ({k: self.table_view(k) for k in self._table_refs},
+                    self.table_version())
+        while True:
+            v1 = self.table_version()
+            if v1 % 2:  # republish in flight
+                time.sleep(poll)
+                continue
+            out = {k: np.array(self.table_view(k), copy=True)
+                   for k in self._table_refs}
+            if self.table_version() == v1:
+                return out, v1
+            # torn read: a republish landed mid-copy — retry
+
+
+class BatchArena(_ArenaOps):
+    """Owner handle of a batch-arena segment (same lifecycle discipline as
+    :class:`SharedHetGraph`: ``close()`` unmaps, ``unlink()`` removes,
+    ``__exit__``/``__del__`` never leak a segment)."""
+
+    def __init__(self, shm: shared_memory.SharedMemory, handle: ArenaHandle):
+        self._shm = shm
+        self.handle = handle
+        self._closed = False
+        self._unlinked = False
+        self._bind_views()
+
+    @property
+    def nbytes(self) -> int:
+        return self._shm.size
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._tver = self._ctrl = None
+            self._shm.close()
+
+    def unlink(self) -> None:
+        self.close()
+        if not self._unlinked:
+            self._unlinked = True
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:
+                pass
+
+    def __enter__(self) -> "BatchArena":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.unlink()
+
+    def __del__(self):
+        try:
+            self.unlink()
+        except BaseException:
+            pass
+
+
+class AttachedArena(_ArenaOps):
+    """A worker's view of a batch arena (write side of the slot protocol)."""
+
+    def __init__(self, handle: ArenaHandle):
+        self.handle = handle
+        self._shm = _open_attached(handle.segment, handle.owner_pid)
+        self._closed = False
+        self._bind_views()
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._tver = self._ctrl = None
+            self._shm.close()
+
+    def __enter__(self) -> "AttachedArena":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except BaseException:
+            pass
+
+
+def create_arena(
+    fields: Dict[str, np.ndarray],
+    num_workers: int,
+    depth: int,
+    tables: Optional[Dict[str, np.ndarray]] = None,
+    tables_mutable: bool = False,
+    name: Optional[str] = None,
+) -> BatchArena:
+    """Create a batch arena sized from probe arrays.
+
+    ``fields`` is a probe batch/staging dict — only shapes and dtypes are
+    read (slot layouts are static: the sampler pads every level to fixed
+    ``[R_d, N_d]`` and the recipe pads features to ``d_pad``).  ``tables``
+    are copied into the table region; ``tables_mutable=True`` arms the
+    seqlock so :meth:`~_ArenaOps.publish_tables` may republish them while
+    workers stage.  Transactional like :func:`share_graph`."""
+    if num_workers < 1 or depth < 1:
+        raise ValueError(f"need num_workers >= 1 and depth >= 1, got "
+                         f"{num_workers}, {depth}")
+    slot_refs, slot_bytes = _layout(fields)
+    slot_bytes = -(-slot_bytes // _ALIGN) * _ALIGN
+    table_refs, table_bytes = _layout(tables or {})
+    n_slots = num_workers * depth
+    ctrl_bytes = n_slots * _CTRL_WORDS * 8
+    tables_off = _ALIGN + (-(-ctrl_bytes // _ALIGN) * _ALIGN)
+    slots_off = tables_off + (-(-table_bytes // _ALIGN) * _ALIGN)
+    total = slots_off + n_slots * slot_bytes
+
+    segment = name or f"{SEGMENT_PREFIX}{os.getpid():x}-{secrets.token_hex(4)}"
+    shm = shared_memory.SharedMemory(name=segment, create=True, size=total)
+    handle = ArenaHandle(
+        segment=segment,
+        owner_pid=os.getpid(),
+        stride=num_workers,
+        depth=depth,
+        fields=tuple(slot_refs.items()),
+        slot_bytes=slot_bytes,
+        slots_offset=slots_off,
+        tables=tuple((k, ArrayRef(tables_off + r.offset, r.shape, r.dtype))
+                     for k, r in table_refs.items()),
+        tables_mutable=tables_mutable,
+    )
+    arena = BatchArena(shm, handle)
+    try:
+        arena._tver[0] = 0
+        arena._ctrl[:] = 0
+        for tname, tab in (tables or {}).items():
+            np.copyto(arena.table_view(tname, writable=True),
+                      np.ascontiguousarray(tab), casting="no")
+    except BaseException:
+        arena.unlink()
+        raise
+    return arena
+
+
+def attach_arena(handle: ArenaHandle) -> AttachedArena:
+    """Map the arena described by ``handle`` (see :class:`AttachedArena`)."""
+    return AttachedArena(handle)
 
 
 def live_segments(prefix: str = SEGMENT_PREFIX) -> List[str]:

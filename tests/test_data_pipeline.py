@@ -352,34 +352,80 @@ def test_worker_pool_parity_all_executors(executor):
         assert serial["losses"] == r["losses"], (executor, w)
         assert r["sampler_workers"] == w
         assert r["samples_per_s"] > 0
+        if w:  # arena mode: queue carries SlotRef descriptors, not arrays
+            assert 0 < r["queue_bytes_per_step"] < 1024, (executor, w)
     assert serial["sampler_workers"] == 0
     assert not live_segments()  # every run released its store
 
 
-def test_worker_pool_learnable_stages_fresh_on_consumer():
-    """While learnable tables train, pool workers only sample — staging runs
-    consumer-side against fresh tables, so pooled losses are bit-exact (the
-    thread pipeline's "stale" policy is only approximate here)."""
+def test_worker_pool_legacy_pickle_path_still_bit_identical():
+    """``pipeline.arena=False`` keeps the PR-5 pickle transport: same
+    batches, same losses, megabyte queue items (the cost the arena
+    removes)."""
     from repro.api import (DataConfig, Heta, HetaConfig, ModelConfig,
                            PartitionConfig, RunConfig)
+    from repro.graph.shm import live_segments
 
-    def run(workers):
+    def run(arena):
         c = HetaConfig(
             data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
                             batch_size=16),
             partition=PartitionConfig(num_partitions=2),
-            model=ModelConfig(hidden=32, train_learnable=True),
+            model=ModelConfig(hidden=32, train_learnable=False),
             run=RunConfig(executor="raf_spmd", steps=3, lr=1e-2, seed=0),
-        )
-        if workers:
-            c = c.updated(pipeline=dict(enabled=True, num_workers=workers))
+        ).updated(pipeline=dict(enabled=True, num_workers=2, arena=arena))
         sess = Heta(c)
         try:
             return sess.run()
         finally:
             sess.close_pipeline()
 
-    assert run(0)["losses"] == run(2)["losses"]
+    on, off = run(True), run(False)
+    assert on["losses"] == off["losses"]
+    assert on["queue_bytes_per_step"] < 1024 < off["queue_bytes_per_step"]
+    assert not live_segments()
+
+
+def _learnable_run(workers, snapshot="stale", arena=True):
+    from repro.api import (DataConfig, Heta, HetaConfig, ModelConfig,
+                           PartitionConfig, RunConfig)
+
+    c = HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                        batch_size=16),
+        partition=PartitionConfig(num_partitions=2),
+        model=ModelConfig(hidden=32, train_learnable=True),
+        run=RunConfig(executor="raf_spmd", steps=3, lr=1e-2, seed=0),
+    )
+    if workers is not None:
+        c = c.updated(pipeline=dict(enabled=True, num_workers=workers,
+                                    snapshot=snapshot, arena=arena))
+    sess = Heta(c)
+    try:
+        return sess.run()
+    finally:
+        sess.close_pipeline()
+
+
+def test_worker_pool_learnable_fresh_is_bit_exact():
+    """Under the "fresh" snapshot policy pool workers only sample — staging
+    runs consumer-side against the just-updated tables, so pooled losses
+    are bit-exact at every worker count."""
+    serial = _learnable_run(None)
+    for w in (0, 1, 4):
+        assert serial["losses"] == _learnable_run(w, snapshot="fresh")["losses"], w
+
+
+def test_worker_pool_learnable_stale_stages_in_workers_bounded():
+    """Under the default "stale" policy with the batch arena, workers stage
+    against seqlock-republished table snapshots at most the ring depth
+    behind the trainer (DESIGN.md §11): the loss trajectory tracks the
+    serial path within optimization noise, and the queue stays zero-pickle
+    (SlotRef descriptors only)."""
+    serial = _learnable_run(None)
+    stale = _learnable_run(2, snapshot="stale")
+    assert np.allclose(serial["losses"], stale["losses"], atol=5e-2)
+    assert 0 < stale["queue_bytes_per_step"] < 1024  # descriptors, not arrays
 
 
 def test_pool_persists_across_fits_and_stays_bit_identical():
@@ -407,12 +453,12 @@ def test_pool_persists_across_fits_and_stays_bit_identical():
     sess = Heta(cfg(workers=2))
     sess.build_graph(); sess.partition(); sess.profile_and_cache(); sess.compile()
     sess.fit(2)
-    pool_a = sess._pool_cache[1]
+    pool_a = sess._pool_cache[2]
     sess.fit(2)
-    assert sess._pool_cache[1] is pool_a  # reused, not respawned
+    assert sess._pool_cache[2] is pool_a  # reused, not respawned
     sess.step()  # serial step desyncs the stripe position...
     sess.fit(1)
-    assert sess._pool_cache[1] is not pool_a  # ...so the pool respawned
+    assert sess._pool_cache[2] is not pool_a  # ...so the pool respawned
     assert sess.losses == serial["losses"]
     sess.close_pipeline()
     assert sess._pool_cache is None

@@ -30,6 +30,21 @@ def mag_setup():
     return g, spec, hot, pen
 
 
+@pytest.mark.parametrize("num_workers", [1, 2, 4])
+def test_pooled_presample_bit_identical_to_serial(mag_setup, num_workers):
+    """The §6 pre-sampling epoch through the sampler worker pool: visit
+    counting is an order-independent sum over the same ``batch_at`` walk,
+    so the pooled profile equals the serial one exactly."""
+    from repro.embed import presample_hotness_pooled
+
+    g, spec, hot, _ = mag_setup
+    pooled = presample_hotness_pooled(g, spec, batch_size=64,
+                                      num_workers=num_workers, epochs=2,
+                                      max_batches=20)
+    for t in hot.counts:
+        np.testing.assert_array_equal(pooled.counts[t], hot.counts[t])
+
+
 def test_miss_penalty_shape_matches_paper(mag_setup):
     """Paper Fig. 7: smaller dims ⇒ larger o_a; learnable > read-only at the
     same dim."""
