@@ -12,18 +12,34 @@ ROWS: List[str] = []
 RECORDS: List[Dict] = []
 
 
+def _host_fields() -> Dict:
+    """Backend + core count stamped on every record: timing rows are only
+    comparable against rows measured on the same substrate."""
+    import os
+
+    try:
+        import jax
+
+        backend = jax.default_backend()
+    except Exception:  # pragma: no cover - jax always importable in-repo
+        backend = "unknown"
+    return {"backend": backend, "cpus": os.cpu_count()}
+
+
 def emit(name: str, us_per_call: float, derived: str = "", **record) -> None:
     """Print + collect one benchmark row.
 
     Keyword fields (``shape=``, ``gflops=``, ``vmem_bytes=``, ...) make the
     row machine-readable: it lands in :data:`RECORDS` and is written out by
     :func:`write_records` — the repo's perf trajectory
-    (``BENCH_kernels.json``) instead of print-only CSV lines."""
+    (``BENCH_kernels.json``) instead of print-only CSV lines.  Every record
+    is stamped with the measuring backend and host core count."""
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
     if record:
-        RECORDS.append({"op": name, "us": round(us_per_call, 3), **record})
+        RECORDS.append({"op": name, "us": round(us_per_call, 3),
+                        **_host_fields(), **record})
 
 
 def write_records(path: str) -> None:

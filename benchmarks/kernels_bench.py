@@ -16,6 +16,14 @@ with parameter sharing (the same relation under several parent branches at
 level 2; HGT's per-node-type K/Q/V everywhere) are where the gather's
 redundant weight movement costs — the reusability HiHGNN exploits and the
 Pallas kernel's scalar-prefetch indirection removes entirely.
+
+Two further comparisons ride on the same discipline: the **fused attention
+epilogue** factoring vs the attn_parts factoring (XLA:CPU, both jitted —
+the reassociated contractions are the CPU-visible part of the fusion win),
+and **autotuned vs default block sizes** (interpret-mode grid proxy +
+analytic model costs; real TPU sweep is the ROADMAP follow-on).  Every
+record carries ``backend``/``cpus`` so rows are only compared within one
+substrate.
 """
 
 from __future__ import annotations
@@ -25,12 +33,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._util import emit, time_call, write_records
-from repro.core.relmod import ShapeCtx, get_relation_module
+from repro.core.relmod import ShapeCtx, get_relation_module, masked_softmax
 from repro.kernels.flash_attention import attention_ref
 from repro.kernels.relation_agg import relation_agg_ref, relation_agg_vmem_bytes
 from repro.kernels.stacked_relation_agg import (
     stacked_agg_grouped,
     stacked_agg_ref,
+    stacked_attn_epilogue_vmem_bytes,
+    stacked_mean_linear,
     stacked_mean_linear_vmem_bytes,
     stacked_softmax_combine_vmem_bytes,
 )
@@ -138,6 +148,162 @@ def _bench_stacked():
     )
 
 
+def _attn_case_operands(model, rb, n, f, di, do, U_of, slot_np, nh, seed=1):
+    rng = np.random.default_rng(seed)
+    mod = get_relation_module(model)
+    sc = ShapeCtx(do, nh, do // nh, di, di)
+    stacks = {
+        s.name: jnp.asarray(
+            rng.standard_normal((U_of[s.scope],) + tuple(s.shape(sc))) * 0.1,
+            jnp.float32,
+        )
+        for s in mod.specs
+    }
+    slot_u = {k: jnp.asarray(v) for k, v in slot_np.items()}
+    h = jnp.asarray(rng.standard_normal((rb, n, f, di)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((rb, n, di)), jnp.float32)
+    mask = jnp.asarray(rng.random((rb, n, f)) > 0.2)
+    return mod, stacks, slot_u, h, q, mask
+
+
+def _attn_parts_path(mod, stacks, slot_u, h, q, mask):
+    """The pre-fusion factoring: per-slot weight gather, vmapped
+    projections, then the softmax+combine epilogue (the path
+    ``fuse_epilogue=False`` keeps as the oracle)."""
+    scope_of = {s.name: s.scope for s in mod.specs}
+    p = {name: stacks[name][slot_u[scope_of[name]]] for name in stacks}
+    e, v = jax.vmap(mod.attn_parts)(p, h, q)
+    alpha = masked_softmax(e, mask[:, :, :, None], axis=2)
+    rb, n, f, nh, dh = v.shape
+    out = jnp.einsum("rnfh,rnfhd->rnhd", alpha, v).reshape(rb, n, nh * dh)
+    bias = mod.attn_bias(p)
+    return out if bias is None else out + bias[:, None, :]
+
+
+def _fused_epilogue_path(mod, stacks, slot_u, h, q, mask):
+    """XLA:CPU evaluation of the canonical fused-epilogue factoring
+    (``AttnEpilogue`` operands + reassociated contractions).  The fusion
+    contract lets the small per-head transforms fold into the query side
+    (``pe``) and after the combine (``pv``), so no ``[rb, n, f, nh, dh]``
+    *transformed* intermediate is ever materialized — the same dataflow
+    the Pallas kernel runs per block on TPU."""
+
+    def jnp_linear(w, u, x):
+        return jnp.einsum("rnd,rdk->rnk", x, w[u])
+
+    epi = mod.attn_epilogue(stacks, slot_u, q, linear=jnp_linear)
+    rb, n, f, _ = h.shape
+    nh, dh = epi.num_heads, epi.head_dim
+    z0 = jnp.einsum("rnfd,rdk->rnfk", h, epi.we[epi.ue]).reshape(rb, n, f, nh, dh)
+    v0 = z0 if epi.wv is None else jnp.einsum(
+        "rnfd,rdk->rnfk", h, epi.wv[epi.uv]).reshape(rb, n, f, nh, dh)
+    qv = epi.qv.reshape(rb, n, nh, dh)
+    if epi.pe is not None:
+        qv = jnp.einsum("rhde,rnhe->rnhd", epi.pe[epi.ua], qv)
+    e = jnp.einsum("rnfhd,rnhd->rnfh", z0, qv) * epi.scale
+    if epi.eb is not None:
+        e = e + epi.eb[:, :, None, :]
+    if epi.slope is not None:
+        e = jax.nn.leaky_relu(e, negative_slope=epi.slope)
+    alpha = masked_softmax(e, mask[:, :, :, None], axis=2)
+    c = jnp.einsum("rnfh,rnfhd->rnhd", alpha, v0)
+    if epi.pv is not None:
+        c = jnp.einsum("rnhd,rhde->rnhe", c, epi.pv[epi.ua])
+    out = c.reshape(rb, n, nh * dh)
+    return out if epi.bias is None else out + epi.bias[:, None, :]
+
+
+def _bench_fused_epilogue():
+    """Fused attention epilogue vs the attn_parts factoring at mag shapes.
+
+    Honest XLA:CPU timing of the two *factorings* — the CPU-visible win is
+    the contraction reassociation the epilogue contract licenses; the
+    stack-streaming (no per-slot weight gather) part of the win is
+    TPU-only (scalar prefetch) and shows up in the VMEM rows + the TPU
+    sweep (ROADMAP follow-on)."""
+    rng = np.random.default_rng(4)
+    for model, U_of, slot_np, nh, tag in (
+        ("rgat", {"relation": 8}, {"relation": np.arange(8) % 8}, 4,
+         "mag_rgat"),
+        ("hgt", {"src_type": 4, "dst_type": 4, "etype": 8},
+         {"src_type": rng.integers(0, 4, 8), "dst_type": rng.integers(0, 4, 8),
+          "etype": np.arange(8) % 8}, 8, "mag_hgt"),
+    ):
+        rb, n, f, di, do = 8, 1024, 25, 128, 64
+        mod, stacks, slot_u, h, q, mask = _attn_case_operands(
+            model, rb, n, f, di, do, U_of, slot_np, nh)
+        pf = jax.jit(lambda s, u, h_, q_, m_: _attn_parts_path(mod, s, u, h_, q_, m_))
+        ff = jax.jit(lambda s, u, h_, q_, m_: _fused_epilogue_path(mod, s, u, h_, q_, m_))
+        np.testing.assert_allclose(  # factorings must agree before we race them
+            np.asarray(pf(stacks, slot_u, h, q, mask)),
+            np.asarray(ff(stacks, slot_u, h, q, mask)), atol=2e-5,
+        )
+        t_p = time_call(lambda: jax.block_until_ready(pf(stacks, slot_u, h, q, mask)),
+                        repeats=9)
+        t_f = time_call(lambda: jax.block_until_ready(ff(stacks, slot_u, h, q, mask)),
+                        repeats=9)
+        shape = dict(model=model, rb=rb, n=n, f=f, d_in=di, d_out=do, nh=nh)
+        emit(f"kernel/stacked_attn_parts/{tag}", t_p * 1e6,
+             "gathered projections + softmax_combine, cpu oracle",
+             shape=shape, vmem_bytes=0)
+        emit(f"kernel/stacked_attn_fused_epilogue/{tag}", t_f * 1e6,
+             f"{t_p/t_f:.2f}x vs attn_parts (canonical epilogue factoring)",
+             shape=shape, speedup_vs_attn_parts=round(t_p / t_f, 3),
+             vmem_bytes=0)
+        vmem = stacked_attn_epilogue_vmem_bytes(
+            n, f, di, nh, do // nh, shared_v=(model == "rgat"))
+        emit(f"kernel/stacked_attn_epilogue_vmem/{tag}", 0.0,
+             f"{vmem/2**20:.2f}MiB VMEM/step (16MiB budget)",
+             shape=shape, vmem_bytes=vmem)
+
+
+def _bench_autotune():
+    """Autotuned vs default block sizes for the stacked mean+linear kernel
+    at the mag level-1 shape.
+
+    Wall-clock here is Pallas *interpret* mode — a structural proxy whose
+    cost tracks grid-step count, the same quantity the analytic cost model
+    minimizes; the committed-table analytic costs are emitted alongside.
+    Real TPU wall-clock for the sweep is the ROADMAP follow-on."""
+    from repro.kernels import autotune
+    from repro.kernels.ops import DEFAULT_BLOCKS, lookup_blocks
+
+    rb, n, f, di, do, U = 8, 1024, 25, 128, 64, 8
+    tuned = lookup_blocks("stacked_mean_linear", n, f, di, do)
+    if tuned is None:  # no committed table: nothing to compare against
+        return
+    rng = np.random.default_rng(5)
+    h = jnp.asarray(rng.standard_normal((rb, n, f, di)), jnp.float32)
+    mask = jnp.asarray(rng.random((rb, n, f)) > 0.2)
+    w = jnp.asarray(rng.standard_normal((U, di, do)) * 0.1, jnp.float32)
+    b = jnp.zeros((U, do), jnp.float32)
+    u = jnp.arange(U, dtype=jnp.int32)
+
+    def timed(blocks):
+        bn, bo, bc = blocks
+        return time_call(lambda: jax.block_until_ready(
+            stacked_mean_linear(h, mask, w, b, u, block_n=bn, block_out=bo,
+                                block_in=bc, interpret=True)), repeats=3)
+
+    t_def, t_tuned = timed(DEFAULT_BLOCKS), timed(tuned)
+    c_def = autotune.analytic_cost_us("stacked_mean_linear", n, f, di, do,
+                                      *DEFAULT_BLOCKS)
+    c_tuned = autotune.analytic_cost_us("stacked_mean_linear", n, f, di, do,
+                                        *tuned)
+    shape = dict(op="stacked_mean_linear", rb=rb, n=n, f=f, d_in=di, d_out=do)
+    emit("kernel/autotune_default_blocks/mag_l1", t_def * 1e6,
+         f"blocks={DEFAULT_BLOCKS}, interpret-mode grid proxy",
+         shape=shape, blocks=list(DEFAULT_BLOCKS),
+         analytic_us=round(c_def, 1), vmem_bytes=0)
+    emit("kernel/autotune_tuned_blocks/mag_l1", t_tuned * 1e6,
+         f"blocks={tuned}, {t_def/t_tuned:.2f}x vs default "
+         f"(analytic {c_def/c_tuned:.2f}x)",
+         shape=shape, blocks=list(tuned),
+         speedup_vs_default=round(t_def / t_tuned, 3),
+         analytic_us=round(c_tuned, 1),
+         analytic_speedup_vs_default=round(c_def / c_tuned, 3), vmem_bytes=0)
+
+
 def _bench_flash_attention():
     rng = np.random.default_rng(3)
     # args passed, not closed over — closures constant-fold the whole
@@ -155,6 +321,8 @@ def _bench_flash_attention():
 def run():
     _bench_relation_agg()
     _bench_stacked()
+    _bench_fused_epilogue()
+    _bench_autotune()
     _bench_flash_attention()
     write_records(OUT_JSON)
     return True

@@ -148,12 +148,19 @@ class CacheConfig:
     presample_epochs: int = 2
     presample_max_batches: int = 20
     measured_penalties: bool = False  # measure real copies vs analytic model
+    # online re-admission: every N training steps, re-score residency from
+    # the cache's observed access counters (EmbedEngine.rebalance) under
+    # the same byte budget.  0 = one-shot allocation only.
+    readmit_every: int = 0
 
     def __post_init__(self):
         if self.cache_mb < 0:
             raise ValueError(f"cache_mb must be >= 0, got {self.cache_mb}")
         if self.policy not in CACHE_POLICIES:
             raise ValueError(f"policy must be one of {CACHE_POLICIES}, got {self.policy!r}")
+        if self.readmit_every < 0:
+            raise ValueError(
+                f"readmit_every must be >= 0, got {self.readmit_every}")
 
     @property
     def cache_bytes(self) -> int:
@@ -244,6 +251,14 @@ class KernelConfig:
     default, the jnp/vmap oracles elsewhere — unless ``interpret`` is
     forced ``True``, which runs the Pallas interpreter anywhere (parity
     tests/CI; a Python emulation, never a perf path).
+
+    ``fuse_epilogue`` keeps the attention family on the fully fused
+    epilogue kernel (per-slot projections streamed from the weight stacks);
+    off, the ``attn_parts`` factoring — the parity oracle — runs instead.
+    Block sizes resolve per (op, shape-class): the explicit ``block_n`` /
+    ``block_out`` / ``block_in`` overrides beat the committed tuning table
+    (consulted when ``autotune`` is on) beat the built-in defaults
+    (``repro.kernels.ops.resolve_blocks``).
     """
 
     enabled: bool = True
@@ -251,13 +266,27 @@ class KernelConfig:
     relation_agg: bool = True
     gather: bool = True
     interpret: Optional[bool] = None  # None = auto per backend
+    fuse_epilogue: bool = True
+    autotune: bool = False  # consult the committed block-size tuning table
+    block_n: Optional[int] = None  # explicit node-block override
+    block_out: Optional[int] = None  # explicit d_out-block override
+    block_in: Optional[int] = None  # explicit d_in-chunk override
 
     def __post_init__(self):
-        for f in ("enabled", "stacked_agg", "relation_agg", "gather"):
+        for f in ("enabled", "stacked_agg", "relation_agg", "gather",
+                  "fuse_epilogue", "autotune"):
             if not isinstance(getattr(self, f), bool):
                 raise ValueError(f"kernels.{f} must be a bool")
         if self.interpret is not None and not isinstance(self.interpret, bool):
             raise ValueError("kernels.interpret must be True, False or None")
+        for f in ("block_n", "block_out", "block_in"):
+            v = getattr(self, f)
+            if v is None:
+                continue
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                raise ValueError(
+                    f"kernels.{f} must be a positive int or None, got {v!r}"
+                )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,7 +299,8 @@ class ServeConfig:
     ``FeatureCache`` over the materialized embeddings; ``shm`` backs the
     embedding store with a shared-memory segment for zero-copy attach;
     ``production_mesh`` places the scoring step on ``make_production_mesh``
-    (256 devices) instead of the run's mesh."""
+    (256 devices) instead of the run's mesh; ``readmit_every`` re-admits
+    the serve cache from the served-id trace every N flushes (0 = off)."""
 
     node_block: int = 1024
     max_batch: int = 64
@@ -279,6 +309,7 @@ class ServeConfig:
     cache_mb: int = 4
     shm: bool = False
     production_mesh: bool = False
+    readmit_every: int = 0
 
     def __post_init__(self):
         if self.node_block < 1:
@@ -294,6 +325,9 @@ class ServeConfig:
             )
         if self.cache_mb < 0:
             raise ValueError(f"cache_mb must be >= 0, got {self.cache_mb}")
+        if self.readmit_every < 0:
+            raise ValueError(
+                f"readmit_every must be >= 0, got {self.readmit_every}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -419,6 +453,7 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "presample_epochs": ("cache", "presample_epochs", int, int),
     "presample_max_batches": ("cache", "presample_max_batches", int, int),
     "measured_penalties": ("cache", "measured_penalties", bool, bool),
+    "readmit_every": ("cache", "readmit_every", int, int),
     "executor": ("run", "executor", str, str),
     "mesh_shape": ("run", "mesh_shape", _parse_mesh, tuple),
     "steps": ("run", "steps", int, int),
@@ -435,6 +470,11 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "kernel_relation_agg": ("kernels", "relation_agg", bool, bool),
     "kernel_gather": ("kernels", "gather", bool, bool),
     "kernel_interpret": ("kernels", "interpret", lambda v: v, lambda v: v),
+    "kernel_fuse_epilogue": ("kernels", "fuse_epilogue", bool, bool),
+    "kernel_autotune": ("kernels", "autotune", bool, bool),
+    "kernel_block_n": ("kernels", "block_n", lambda v: v, lambda v: v),
+    "kernel_block_out": ("kernels", "block_out", lambda v: v, lambda v: v),
+    "kernel_block_in": ("kernels", "block_in", lambda v: v, lambda v: v),
     "serve_node_block": ("serve", "node_block", int, int),
     "serve_max_batch": ("serve", "max_batch", int, int),
     "serve_max_wait_ms": ("serve", "max_wait_ms", float, float),
@@ -442,6 +482,7 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "serve_cache_mb": ("serve", "cache_mb", int, int),
     "serve_shm": ("serve", "shm", bool, bool),
     "serve_production_mesh": ("serve", "production_mesh", bool, bool),
+    "serve_readmit_every": ("serve", "readmit_every", int, int),
 }
 
 
@@ -457,6 +498,9 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("partition", "num_partitions"): ("--partitions", int, "number of meta-partitions"),
     ("partition", "placement"): ("--placement", str, f"relation placement {PLACEMENTS}"),
     ("cache", "policy"): ("--cache-policy", str, f"cache allocation policy {CACHE_POLICIES}"),
+    ("cache", "readmit_every"): (
+        "--readmit-every", int,
+        "online cache re-admission period in steps (0 = one-shot)"),
     ("run", "mesh_shape"): ("--mesh", _parse_mesh, "DATAxMODEL mesh, e.g. 2x4"),
     ("pipeline", "enabled"): ("--pipeline", None, "async host pipeline on/off"),
     ("pipeline", "depth"): ("--prefetch-depth", int, "pipeline prefetch depth"),
@@ -474,6 +518,17 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("kernels", "gather"): ("--kernel-gather", None, "cache-fetch row-gather kernel"),
     ("kernels", "interpret"): (
         "--kernel-interpret", None, "force Pallas interpret mode (parity debugging)"),
+    ("kernels", "fuse_epilogue"): (
+        "--kernel-fuse-epilogue", None,
+        "fully fused attention epilogue (stack-streamed projections)"),
+    ("kernels", "autotune"): (
+        "--kernel-autotune", None, "consult the committed block-size tuning table"),
+    ("kernels", "block_n"): (
+        "--kernel-block-n", int, "explicit node-block size override"),
+    ("kernels", "block_out"): (
+        "--kernel-block-out", int, "explicit d_out-block size override"),
+    ("kernels", "block_in"): (
+        "--kernel-block-in", int, "explicit d_in-chunk size override"),
     ("serve", "node_block"): (
         "--serve-node-block", int, "layer-wise inference node-block size"),
     ("serve", "max_batch"): (
@@ -489,6 +544,9 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("serve", "production_mesh"): (
         "--serve-production-mesh", None,
         "score on make_production_mesh instead of the run mesh"),
+    ("serve", "readmit_every"): (
+        "--serve-readmit-every", int,
+        "serve-cache re-admission period in flushes (0 = one-shot)"),
 }
 
 _SCALAR_PARSERS = {int: int, float: float, str: str, Optional[float]: float, bool: None}

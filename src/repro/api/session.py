@@ -320,6 +320,7 @@ class Heta:
             self.step_times.append(dt)
             self.losses.append(loss)
             self._steps_done += 1
+            self._maybe_rebalance()
             return loss
         arrays = self.executor.stage(self, self.plan, batch)
         return self._consume(batch, arrays, time.perf_counter() - t0)
@@ -338,7 +339,17 @@ class Heta:
         self.step_times.append(dt)
         self.losses.append(loss)
         self._steps_done += 1
+        self._maybe_rebalance()
         return loss
+
+    def _maybe_rebalance(self) -> None:
+        """Online §6 re-admission: every ``cache.readmit_every`` consumed
+        steps, re-score cache residency from the observed access trace
+        (``EmbedEngine.rebalance``).  Holds the engine's table lock, so
+        it is safe against the async pipeline's producer-side fetches."""
+        every = self.config.cache.readmit_every
+        if every > 0 and self.engine is not None and self._steps_done % every == 0:
+            self.engine.rebalance()
 
     def fit(self, steps: Optional[int] = None) -> Dict:
         """Train for ``steps`` (default ``RunConfig.steps``); returns the
@@ -579,6 +590,7 @@ class Heta:
             max_batch=scfg.max_batch, max_wait_ms=scfg.max_wait_ms,
             max_queue=scfg.max_queue, cache_mb=scfg.cache_mb,
             kernels=self.config.kernels, mesh=mesh,
+            readmit_every=scfg.readmit_every,
         )
         kw.update(overrides)
         self._server = EmbeddingServer(self.embedding_store, **kw)

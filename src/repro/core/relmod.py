@@ -60,6 +60,7 @@ __all__ = [
     "ShapeCtx",
     "ParamSpec",
     "RelContext",
+    "AttnEpilogue",
     "RelationModule",
     "register_relation_module",
     "get_relation_module",
@@ -172,6 +173,47 @@ def storage_key(scope: str, ctx: RelContext) -> str:
     raise ValueError(f"unknown param scope {scope!r}")
 
 
+@dataclasses.dataclass
+class AttnEpilogue:
+    """Canonical operand form of a fully-fused attention epilogue.
+
+    Every ``softmax_combine`` module's AGG_r factors (DESIGN.md §8) as
+
+        z0 = h_src @ we[ue[s]]                       # logits projection
+        zt = z0                 if pe is None else   # per-etype transform
+             einsum("nfhd,hde->nfhe", z0, pe[ua[s]])
+        e0 = einsum("nfhe,nhe->nfh", zt, qv) * scale (+ eb)
+        e  = leaky_relu(e0, slope)  (slope=None -> identity)
+        v0 = h_src @ wv[uv[s]]   (shared with z0 when we is wv and ue is uv)
+        vt = v0                 if pv is None else
+             einsum("nfhd,hde->nfhe", v0, pv[ua[s]])
+        out = einsum("nfh,nfhd->nhd", masked_softmax(e), vt) (+ bias)
+
+    where ``we``/``wv`` are the *stacked* ``[U, d_in, nh*dh]`` projection
+    slabs and ``ue``/``uv``/``ua`` the per-slot stack rows — the form the
+    fused Pallas kernel streams via scalar prefetch, so the big projection
+    weights are never materialized per slot.  Small per-slot operands
+    (``qv``/``eb``/``bias`` and the ``[nh, dh, dh]`` transforms) may be
+    gathered; they are vectors/tiny tensors, not the ``[rb, d_in, H]``
+    weight copies the gather-then-vmap path pays for.
+    """
+
+    we: jnp.ndarray  # [Ue, d_in, nh*dh] logits-projection stack
+    ue: jnp.ndarray  # [rb] int — slot -> stack row of `we`
+    qv: jnp.ndarray  # [rb, n, nh*dh] per-destination query vectors
+    wv: Optional[jnp.ndarray] = None  # [Uv, d_in, nh*dh]; None -> shares `we`
+    uv: Optional[jnp.ndarray] = None  # [rb] int; None -> `ue`
+    pe: Optional[jnp.ndarray] = None  # [Ua, nh, dh, dh] logits transform
+    pv: Optional[jnp.ndarray] = None  # [Ua, nh, dh, dh] values transform
+    ua: Optional[jnp.ndarray] = None  # [rb] int (required with pe/pv)
+    eb: Optional[jnp.ndarray] = None  # [rb, n, nh] additive logit term
+    bias: Optional[jnp.ndarray] = None  # [rb, hidden] additive output bias
+    num_heads: int = 1
+    head_dim: int = 1
+    scale: float = 1.0
+    slope: Optional[float] = None  # leaky_relu negative slope on logits
+
+
 class RelationModule:
     """Base relation module: declared parameter specs + one pure AGG_r.
 
@@ -224,6 +266,21 @@ class RelationModule:
 
     def attn_bias(self, p: Dict[str, jnp.ndarray]) -> Optional[jnp.ndarray]:
         """Additive output bias ``[hidden]`` applied after the combine."""
+        return None
+
+    def attn_epilogue(self, stacks, slot_u, q_feats, linear) -> Optional[AttnEpilogue]:
+        """Stacked-operand form of this module's attention epilogue.
+
+        ``stacks`` / ``slot_u`` are the SPMD executor's per-scope parameter
+        slabs and per-slot stack rows; ``q_feats`` is ``[rb, n, d_dst]``;
+        ``linear(w_stack, u, x)`` computes the per-slot projection
+        ``x @ w_stack[u]`` *without* materializing a gathered weight copy
+        (injected by the kernel layer — it carries a stack-form VJP).
+
+        Returning ``None`` keeps the module on the vmapped ``attn_parts``
+        path; returning an :class:`AttnEpilogue` lets the fused Pallas
+        epilogue stream the projections from the stacks.
+        """
         return None
 
     def _softmax_aggregate(self, p, h_src, q_feats, mask):
@@ -381,6 +438,24 @@ class RGATModule(RelationModule):
     def attn_bias(self, p):
         return p["b"]
 
+    def attn_epilogue(self, stacks, slot_u, q_feats, linear):
+        u = slot_u["relation"]
+        nh, dh = stacks["a_src"].shape[1:]
+        rb, n, _ = q_feats.shape
+        # e_dst per destination: q-side projection through the stacked
+        # kernel (stack-form VJP), contracted with the tiny gathered a_dst
+        qz = linear(stacks["w_dst"], u, q_feats).reshape(rb, n, nh, dh)
+        eb = jnp.einsum("rnhd,rhd->rnh", qz, stacks["a_dst"][u])
+        # e_src = einsum(z, a_src) fits the canonical qv contraction with
+        # qv = a_src broadcast over destinations
+        qv = jnp.broadcast_to(
+            stacks["a_src"][u][:, None], (rb, n, nh, dh)
+        ).reshape(rb, n, nh * dh)
+        return AttnEpilogue(
+            we=stacks["w"], ue=u, qv=qv, eb=eb, bias=stacks["b"][u],
+            num_heads=nh, head_dim=dh, scale=1.0, slope=0.2,
+        )
+
     def aggregate(self, p, h_src, q_feats, mask):
         return self._softmax_aggregate(p, h_src, q_feats, mask)
 
@@ -414,6 +489,17 @@ class HGTModule(RelationModule):
         )
         msg = jnp.einsum("nfhd,hde->nfhe", v, p["w_msg"])
         return att, msg
+
+    def attn_epilogue(self, stacks, slot_u, q_feats, linear):
+        us, ud, ue = slot_u["src_type"], slot_u["dst_type"], slot_u["etype"]
+        nh, dh = stacks["w_att"].shape[1:3]
+        qv = linear(stacks["wq"], ud, q_feats)  # [rb, n, nh*dh]
+        return AttnEpilogue(
+            we=stacks["wk"], ue=us, wv=stacks["wv"], uv=us,
+            pe=stacks["w_att"], pv=stacks["w_msg"], ua=ue, qv=qv,
+            num_heads=nh, head_dim=dh,
+            scale=float(1.0 / np.sqrt(dh)), slope=None,
+        )
 
     def aggregate(self, p, h_src, q_feats, mask):
         return self._softmax_aggregate(p, h_src, q_feats, mask)

@@ -15,6 +15,20 @@ Two pieces:
     or host memory — so there is never a second version to invalidate,
     paper §6 'Cache Consistency').  Multi-device splits use the paper's
     mod-hash: row ``nid`` belongs to shard ``nid % num_shards``.
+
+Online admission (§6 extension): the one-shot allocation above scores
+residency from a *pre-sampled* hotness trace.  The cache additionally
+keeps per-node access counters (accumulated on every ``fetch`` under the
+same stats lock as the hit/miss counters) so a caller can periodically
+re-score residency from *observed* traffic: ``take_access_counts`` drains
+the counters, the caller folds them into a hotness profile and re-runs
+:func:`allocate_cache` under the unchanged byte budget, and
+:meth:`FeatureCache.update_residency` applies the new plan
+*incrementally* — rows resident under both plans stay on device (no
+re-transfer), evicted learnable rows write their authoritative copy (row
++ Adam states) back to host before leaving, and only admitted rows move
+host→device.  ``EmbedEngine.rebalance`` and the serving tier's
+``EmbeddingServer`` both drive this hook.
 """
 
 from __future__ import annotations
@@ -153,6 +167,12 @@ class FeatureCache:
         # producer thread while hit_rates()/miss_time() read from the
         # consumer — same lock discipline EmbedEngine uses for snapshots
         self._stats_lock = threading.Lock()
+        # per-node access counters for online re-admission: every fetch
+        # bumps the rows it touched (hits and misses alike — residency is
+        # scored from demand, not from the current plan's hit pattern)
+        self._access: Dict[str, np.ndarray] = {
+            t: np.zeros(a.shape[0], np.float64) for t, a in self.host.items()
+        }
         # kernels config knob: device-resident hit gathers go through the
         # scalar-prefetch gather_rows kernel when the backend supports it
         self.kernels = kernels
@@ -192,6 +212,8 @@ class FeatureCache:
     def fetch(self, ntype: str, nids: np.ndarray) -> jnp.ndarray:
         """Gather rows for ``nids``; cache hits read device memory, misses
         transfer from host.  Returns a device array [len(nids), d]."""
+        with self._stats_lock:
+            np.add.at(self._access[ntype], nids, 1.0)
         c = self.caches.get(ntype)
         if c is None:
             return jnp.asarray(self.host[ntype][nids])
@@ -268,6 +290,111 @@ class FeatureCache:
             self.host[ntype][miss] = np.asarray(rows)[~hit]
             self.host_m[ntype][miss] = np.asarray(m)[~hit]
             self.host_v[ntype][miss] = np.asarray(v)[~hit]
+
+    # -- online admission (observed-traffic residency) -------------------------
+
+    def take_access_counts(self, reset: bool = True) -> Dict[str, np.ndarray]:
+        """Drain the per-node access counters (ntype -> float64 [num_nodes]).
+
+        ``reset=True`` (the default) zeroes them, so successive calls see
+        disjoint observation windows — the natural input for an EMA."""
+        with self._stats_lock:
+            out = {t: a.copy() for t, a in self._access.items()}
+            if reset:
+                for a in self._access.values():
+                    a[:] = 0.0
+        return out
+
+    def update_residency(
+        self, allocation: CacheAllocation, hotness: HotnessProfile
+    ) -> Dict[str, Dict[str, int]]:
+        """Incrementally move the cache to a new allocation/hotness plan.
+
+        Per type: the new resident set is the plan's ``rows[t]`` hottest
+        ids.  Rows resident under both plans are *kept* — their device
+        copy is gathered in place, no host traffic.  Evicted learnable
+        rows write row + Adam states back to host before leaving (the
+        non-replicative invariant: the authoritative copy moves, it is
+        never duplicated).  Only admitted rows transfer host→device.
+
+        Each type's cache is rebuilt as a fresh ``_TypeCache`` and swapped
+        in with one attribute assignment: a concurrent ``fetch`` that
+        already grabbed the old object sees a coherent (merely stale)
+        view.  Callers that also write (``write_learnable`` /
+        ``fetch_states``) must serialize against this method — EmbedEngine
+        holds its table lock around both.
+
+        Returns ntype -> {"kept", "admitted", "evicted"} row counts.
+        """
+        moves: Dict[str, Dict[str, int]] = {}
+        for t in sorted(self.host):
+            n_rows = int(allocation.rows.get(t, 0))
+            old = self.caches.get(t)
+            if n_rows <= 0 and old is None:
+                continue
+            new_ids = (
+                np.asarray(hotness.hottest(t, n_rows), np.int64)
+                if n_rows > 0 else np.zeros(0, np.int64)
+            )
+            old_slots = (
+                old.slot_of[new_ids] if old is not None
+                else np.full(len(new_ids), -1, np.int64)
+            )
+            kept = old_slots >= 0
+            n_evicted = 0
+            if old is not None:
+                stay = np.zeros(len(old.ids), bool)
+                stay[old_slots[kept]] = True
+                ev = ~stay
+                n_evicted = int(ev.sum())
+                if n_evicted and t in self.learnable:
+                    ev_ids = old.ids[ev]
+                    ev_sl = jnp.asarray(np.nonzero(ev)[0])
+                    self.host[t][ev_ids] = np.asarray(old.data[ev_sl])
+                    self.host_m[t][ev_ids] = np.asarray(old.m[ev_sl])
+                    self.host_v[t][ev_ids] = np.asarray(old.v[ev_sl])
+            if n_rows <= 0:
+                del self.caches[t]
+                moves[t] = {"kept": 0, "admitted": 0, "evicted": n_evicted}
+                continue
+            dim = self.host[t].shape[1]
+            dtype = self.host[t].dtype
+            learn = t in self.learnable
+            data = jnp.zeros((len(new_ids), dim), dtype)
+            m = jnp.zeros((len(new_ids), dim), dtype) if learn else None
+            v = jnp.zeros((len(new_ids), dim), dtype) if learn else None
+            if kept.any():
+                dst = jnp.asarray(np.nonzero(kept)[0])
+                src = jnp.asarray(old_slots[kept])
+                data = data.at[dst].set(old.data[src])
+                if learn:
+                    m = m.at[dst].set(old.m[src])
+                    v = v.at[dst].set(old.v[src])
+            if (~kept).any():
+                dst = jnp.asarray(np.nonzero(~kept)[0])
+                admit = new_ids[~kept]
+                data = data.at[dst].set(jnp.asarray(self.host[t][admit]))
+                if learn:
+                    m = m.at[dst].set(jnp.asarray(self.host_m[t][admit]))
+                    v = v.at[dst].set(jnp.asarray(self.host_v[t][admit]))
+            slot_of = np.full(self.host[t].shape[0], -1, dtype=np.int64)
+            slot_of[new_ids] = np.arange(len(new_ids))
+            self.caches[t] = _TypeCache(
+                ids=new_ids,
+                slot_of=slot_of,
+                data=data,
+                m=m,
+                v=v,
+                shard_of=new_ids % self.num_shards,
+                hits=old.hits if old is not None else 0,
+                misses=old.misses if old is not None else 0,
+            )
+            moves[t] = {
+                "kept": int(kept.sum()),
+                "admitted": int((~kept).sum()),
+                "evicted": n_evicted,
+            }
+        return moves
 
     # -- stats ----------------------------------------------------------------
 

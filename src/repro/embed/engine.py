@@ -71,6 +71,19 @@ class EmbedEngine:
             kernels=kernels,
         )
         self.penalties = penalties
+        self.cache_bytes = cache_bytes
+        self.hotness_only = hotness_only
+        # online re-admission state: EMA over observed per-node access
+        # counts, seeded from the pre-sampled profile so the first
+        # rebalance blends prior and trace rather than trusting a short
+        # window outright
+        self._hotness_ema: Dict[str, np.ndarray] = {
+            t: hotness.counts[t].astype(np.float64)
+            if t in hotness.counts
+            else np.zeros(graph.num_nodes[t], np.float64)
+            for t in graph.num_nodes
+        }
+        self.rebalances = 0
 
     # -- table access ----------------------------------------------------------
 
@@ -118,6 +131,43 @@ class EmbedEngine:
             self.steps[ntype] += 1
             self.cache.write_learnable(ntype, uniq, new_rows, new_m, new_v)
 
+    # -- online penalty-aware re-admission (paper §6, observed traffic) ---------
+
+    def rebalance(self, decay: float = 0.5) -> Dict[str, object]:
+        """Re-score cache residency from observed traffic (paper §6 online).
+
+        The one-shot allocation trusts the pre-sampled hotness; once
+        training runs, the cache's access counters record what the
+        workload *actually* touches.  This folds the drained counters
+        into a decayed running profile (``ema = decay·ema + window`` —
+        the same decay for every type preserves the cross-type ratios
+        ``allocate_cache`` scores on), re-runs the hotness × miss-penalty
+        allocation under the unchanged byte budget, and applies the plan
+        incrementally via :meth:`FeatureCache.update_residency`: kept
+        rows never leave the device, evicted learnable rows write row +
+        Adam states home first, admitted rows transfer once.
+
+        Safe against the async pipeline: runs under the same table lock
+        as ``apply_row_grads``/snapshots, and the per-type cache swap is
+        atomic w.r.t. lock-free concurrent ``fetch``.
+
+        Returns ``{"allocation": rows, "moves": per-type counts}``.
+        """
+        with self.lock:
+            window = self.cache.take_access_counts()
+            for t, ema in self._hotness_ema.items():
+                ema *= decay
+                if t in window:
+                    ema += window[t]
+            profile = HotnessProfile(counts=self._hotness_ema)
+            self.allocation = allocate_cache(
+                profile, self.penalties, self.cache_bytes,
+                self.graph.num_nodes, self.hotness_only,
+            )
+            moves = self.cache.update_residency(self.allocation, profile)
+            self.rebalances += 1
+        return {"allocation": dict(self.allocation.rows), "moves": moves}
+
     # -- reporting ---------------------------------------------------------------
 
     def stats(self) -> Dict[str, object]:
@@ -125,4 +175,5 @@ class EmbedEngine:
             "hit_rates": self.cache.hit_rates(),
             "allocation": {t: r for t, r in self.allocation.rows.items()},
             "miss_time_s": self.cache.miss_time(self.penalties),
+            "rebalances": self.rebalances,
         }

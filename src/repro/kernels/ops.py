@@ -24,6 +24,9 @@ uses (see ``benchmarks/kernels_bench.py``).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import json
+from pathlib import Path
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -39,6 +42,13 @@ __all__ = [
     "pad_to",
     "pad_axes",
     "zero_cotangent",
+    "DEFAULT_BLOCKS",
+    "VMEM_BUDGET_BYTES",
+    "TUNING_TABLE_PATH",
+    "shape_class",
+    "load_tuning_table",
+    "lookup_blocks",
+    "resolve_blocks",
 ]
 
 
@@ -58,6 +68,15 @@ class KernelOptions:
     relation_agg: bool = True
     gather: bool = True
     interpret: Optional[bool] = None
+    # fully fused attention epilogue (stack-streamed projections); off keeps
+    # the attn_parts factoring as the oracle path
+    fuse_epilogue: bool = True
+    # block-size resolution (resolve_blocks): explicit overrides beat the
+    # committed tuning table (autotune=True) beat DEFAULT_BLOCKS
+    autotune: bool = False
+    block_n: Optional[int] = None
+    block_out: Optional[int] = None
+    block_in: Optional[int] = None
 
 
 _DEFAULTS = KernelOptions()
@@ -113,6 +132,78 @@ def agg_vmem_bytes(
     bn, bo, bc = agg_blocks(n, f, d_in, d_out, block_n, block_out, block_in)
     elems = bn * f * bc + bn * f + bc * bo + bo + bn * bo
     return elems * bytes_per_elem + bn * bo * 4
+
+
+# --------------------------------------------------------------------------
+# block-size resolution: explicit overrides > tuning table > defaults
+# --------------------------------------------------------------------------
+
+DEFAULT_BLOCKS = (128, 128, 512)  # (block_n, block_out, block_in)
+VMEM_BUDGET_BYTES = 16 * 2**20  # per-grid-step working-set ceiling
+TUNING_TABLE_PATH = Path(__file__).parent / "tuning_table.json"
+TUNING_TABLE_VERSION = 1
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def shape_class(op: str, n: int, f: int, d_in: int, d_out: int,
+                dtype: str = "float32") -> str:
+    """Canonical tuning-table key for one (op, shape-class, dtype).
+
+    ``n`` (the minibatch-dependent node count) is bucketed to the next
+    power of two so one sweep covers nearby batch sizes; the structural
+    dims (fanout, feature widths) are exact."""
+    return f"{op}/{dtype}/n{_next_pow2(max(8, n))}/f{f}/di{d_in}/do{d_out}"
+
+
+@functools.lru_cache(maxsize=None)
+def load_tuning_table(path: Optional[str] = None) -> Dict:
+    """Load (and cache) a tuning table; missing file -> empty table."""
+    p = Path(path) if path else TUNING_TABLE_PATH
+    if not p.exists():
+        return {"version": TUNING_TABLE_VERSION, "entries": {}}
+    with open(p) as fh:
+        table = json.load(fh)
+    if table.get("version") != TUNING_TABLE_VERSION:
+        raise ValueError(
+            f"tuning table {p} has version {table.get('version')!r}; "
+            f"this build reads version {TUNING_TABLE_VERSION}"
+        )
+    return table
+
+
+def lookup_blocks(op: str, n: int, f: int, d_in: int, d_out: int,
+                  dtype: str = "float32",
+                  path: Optional[str] = None) -> Optional[Tuple[int, int, int]]:
+    """Tuning-table winner for a shape class, or ``None`` on a miss."""
+    entry = load_tuning_table(path).get("entries", {}).get(
+        shape_class(op, n, f, d_in, d_out, dtype))
+    if entry is None:
+        return None
+    bn0, bo0, bc0 = DEFAULT_BLOCKS
+    return (int(entry.get("block_n", bn0)), int(entry.get("block_out", bo0)),
+            int(entry.get("block_in", bc0)))
+
+
+def resolve_blocks(opts, op: str, n: int, f: int, d_in: int, d_out: int,
+                   path: Optional[str] = None) -> Tuple[int, int, int]:
+    """The (block_n, block_out, block_in) a dispatch should use.
+
+    Priority: explicit ``block_*`` overrides on ``opts`` > the committed
+    tuning table (when ``opts.autotune``) > :data:`DEFAULT_BLOCKS`.  All
+    results still pass through :func:`clamp_block` inside the ops."""
+    bn, bo, bc = DEFAULT_BLOCKS
+    if opts is not None and getattr(opts, "autotune", False):
+        hit = lookup_blocks(op, n, f, d_in, d_out, path=path)
+        if hit is not None:
+            bn, bo, bc = hit
+    if opts is not None:
+        bn = getattr(opts, "block_n", None) or bn
+        bo = getattr(opts, "block_out", None) or bo
+        bc = getattr(opts, "block_in", None) or bc
+    return bn, bo, bc
 
 
 def pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:

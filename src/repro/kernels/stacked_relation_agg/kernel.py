@@ -24,7 +24,21 @@ Three kernels:
     (rgat/hgt): masked softmax over the fanout fused with the head-wise
     weighted combine, so attention probabilities never round-trip to HBM.
     Logit/value projections stay outside (they carry the module-specific
-    einsums and remain under XLA autodiff).
+    einsums and remain under XLA autodiff).  Kept as the ``attn_parts``
+    oracle path; superseded on the hot path by the kernel below.
+  * :func:`stacked_attn_epilogue_pallas` — the *fully fused* attention
+    AGG_r (DESIGN.md §8): the per-slot logit/value projections now stream
+    from the ``[U, d_in, nh*dh]`` stacks via the same scalar-prefetch
+    indirection, accumulate across d_in chunks in float32 VMEM scratch,
+    and feed the masked softmax + combine epilogue in the same grid step —
+    neither the projected logits/values *nor* a gathered weight copy ever
+    round-trips through HBM on the forward.  Optional per-slot
+    ``[nh, dh, dh]`` transforms (HGT's ``w_att``/``w_msg``) apply in the
+    epilogue.  With ``with_residuals`` the pre-transform projections are
+    written out once for the backward.
+  * :func:`stacked_attn_dh_pallas` — the backward w.r.t. the neighbor
+    activations: ``dh = dz @ we[slot]ᵀ (+ dv @ wv[slot]ᵀ)``, weight blocks
+    again read via scalar prefetch.
 
 All shapes arrive pre-padded to block multiples (``ops.py`` owns padding
 and slicing); fanout ``f`` stays whole — sampled fanouts are 3–25, so the
@@ -44,6 +58,8 @@ __all__ = [
     "stacked_mean_linear_pallas",
     "stacked_mean_linear_dh_pallas",
     "stacked_softmax_combine_pallas",
+    "stacked_attn_epilogue_pallas",
+    "stacked_attn_dh_pallas",
 ]
 
 
@@ -235,3 +251,241 @@ def stacked_softmax_combine_pallas(
         out_shape=jax.ShapeDtypeStruct((rb, n, H), e.dtype),
         interpret=interpret,
     )(e, mask, v)
+
+
+# --------------------------------------------------------------------------
+# fully fused attention AGG_r: stack-streamed projections + softmax+combine
+# --------------------------------------------------------------------------
+
+
+def _attn_epilogue_kernel(u_ref, *refs, n_chunks, num_heads, head_dim, scale,
+                          slope, has_eb, has_post, shared_v, with_res):
+    nh, dh = num_heads, head_dim
+    it = iter(refs)
+    h_ref, m_ref, qv_ref = next(it), next(it), next(it)
+    eb_ref = next(it) if has_eb else None
+    we_ref = next(it)
+    wv_ref = None if shared_v else next(it)
+    pe_ref = next(it) if has_post else None
+    pv_ref = next(it) if has_post else None
+    out_ref = next(it)
+    z_ref = next(it) if with_res else None
+    v_ref = next(it) if (with_res and not shared_v) else None
+    acc_z = next(it)
+    acc_v = None if shared_v else next(it)
+
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_z[...] = jnp.zeros_like(acc_z)
+        if acc_v is not None:
+            acc_v[...] = jnp.zeros_like(acc_v)
+
+    h = h_ref[0]  # [bn, f, bc]
+    bn, f, bc = h.shape
+    hf = h.reshape(bn * f, bc)
+    acc_z[...] += jax.lax.dot(
+        hf.astype(we_ref.dtype), we_ref[0], preferred_element_type=jnp.float32
+    ).reshape(bn, f, nh * dh)
+    if acc_v is not None:
+        acc_v[...] += jax.lax.dot(
+            hf.astype(wv_ref.dtype), wv_ref[0],
+            preferred_element_type=jnp.float32,
+        ).reshape(bn, f, nh * dh)
+
+    @pl.when(c == n_chunks - 1)
+    def _done():
+        z0 = acc_z[...]  # [bn, f, nh*dh] float32
+        v0 = z0 if acc_v is None else acc_v[...]
+        z4 = z0.reshape(bn, f, nh, dh)
+        v4 = v0.reshape(bn, f, nh, dh)
+        if has_post:
+            zt = jnp.einsum("bfhd,hde->bfhe", z4,
+                            pe_ref[0].astype(jnp.float32))
+            vt = jnp.einsum("bfhd,hde->bfhe", v4,
+                            pv_ref[0].astype(jnp.float32))
+        else:
+            zt, vt = z4, v4
+        qv = qv_ref[0].reshape(bn, nh, dh).astype(jnp.float32)
+        e = jnp.einsum("bfhe,bhe->bfh", zt, qv) * scale
+        if has_eb:
+            e = e + eb_ref[0].astype(jnp.float32)[:, None, :]
+        if slope is not None:
+            e = jax.nn.leaky_relu(e, negative_slope=slope)
+        # identical numerics to relmod.masked_softmax
+        m = m_ref[0]  # [bn, f] bool
+        neg = jnp.asarray(jnp.finfo(e.dtype).min, e.dtype)
+        em = jnp.where(m[:, :, None], e, neg)
+        em = em - jnp.max(em, axis=1, keepdims=True)
+        z = jnp.exp(em) * m[:, :, None].astype(e.dtype)
+        alpha = z / jnp.maximum(jnp.sum(z, axis=1, keepdims=True), 1e-9)
+        out = jnp.einsum("bfh,bfhd->bhd", alpha, vt).reshape(bn, nh * dh)
+        out_ref[0] = out.astype(out_ref.dtype)
+        if z_ref is not None:
+            z_ref[0] = z0.astype(z_ref.dtype)
+        if v_ref is not None:
+            v_ref[0] = v0.astype(v_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_heads", "head_dim", "scale", "slope", "with_residuals",
+                     "block_n", "block_in", "interpret"),
+)
+def stacked_attn_epilogue_pallas(
+    h: jnp.ndarray,  # [rb, n, f, d_in]  (n, d_in pre-padded to blocks)
+    mask: jnp.ndarray,  # [rb, n, f]
+    qv: jnp.ndarray,  # [rb, n, nh*dh]
+    eb,  # [rb, n, nh] or None
+    we: jnp.ndarray,  # [Ue, d_in, nh*dh]
+    wv,  # [Uv, d_in, nh*dh] or None (shares we)
+    pe,  # [Ua, nh, dh, dh] or None
+    pv,  # [Ua, nh, dh, dh] or None
+    us: jnp.ndarray,  # [3, rb] int32 — rows (ue, uv, ua) (scalar prefetch)
+    num_heads: int,
+    head_dim: int,
+    scale: float = 1.0,
+    slope=None,
+    with_residuals: bool = False,
+    block_n: int = 128,
+    block_in: int = 512,
+    interpret: bool = True,
+):
+    rb, n, f, d_in = h.shape
+    nh, dh = num_heads, head_dim
+    H = nh * dh
+    bn, bc = block_n, block_in
+    has_eb, has_post, shared_v = eb is not None, pe is not None, wv is None
+    grid = (rb, pl.cdiv(n, bn), pl.cdiv(d_in, bc))
+
+    in_specs = [
+        pl.BlockSpec((1, bn, f, bc), lambda s, i, c, u: (s, i, 0, c)),
+        pl.BlockSpec((1, bn, f), lambda s, i, c, u: (s, i, 0)),
+        pl.BlockSpec((1, bn, H), lambda s, i, c, u: (s, i, 0)),
+    ]
+    operands = [h, mask, qv]
+    if has_eb:
+        in_specs.append(pl.BlockSpec((1, bn, nh), lambda s, i, c, u: (s, i, 0)))
+        operands.append(eb)
+    in_specs.append(
+        pl.BlockSpec((1, bc, H), lambda s, i, c, u: (u[0, s], c, 0)))
+    operands.append(we)
+    if not shared_v:
+        in_specs.append(
+            pl.BlockSpec((1, bc, H), lambda s, i, c, u: (u[1, s], c, 0)))
+        operands.append(wv)
+    if has_post:
+        in_specs.append(
+            pl.BlockSpec((1, nh, dh, dh), lambda s, i, c, u: (u[2, s], 0, 0, 0)))
+        in_specs.append(
+            pl.BlockSpec((1, nh, dh, dh), lambda s, i, c, u: (u[2, s], 0, 0, 0)))
+        operands.extend([pe, pv])
+
+    out_specs = [pl.BlockSpec((1, bn, H), lambda s, i, c, u: (s, i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((rb, n, H), h.dtype)]
+    if with_residuals:
+        out_specs.append(
+            pl.BlockSpec((1, bn, f, H), lambda s, i, c, u: (s, i, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((rb, n, f, H), h.dtype))
+        if not shared_v:
+            out_specs.append(
+                pl.BlockSpec((1, bn, f, H), lambda s, i, c, u: (s, i, 0, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((rb, n, f, H), h.dtype))
+
+    scratch = [pltpu.VMEM((bn, f, H), jnp.float32)]
+    if not shared_v:
+        scratch.append(pltpu.VMEM((bn, f, H), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_epilogue_kernel, n_chunks=grid[2], num_heads=nh, head_dim=dh,
+            scale=scale, slope=slope, has_eb=has_eb, has_post=has_post,
+            shared_v=shared_v, with_res=with_residuals,
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(us.astype(jnp.int32), *operands)
+    return out if with_residuals else out[0]
+
+
+# --------------------------------------------------------------------------
+# fused attention backward w.r.t. the neighbor activations
+# --------------------------------------------------------------------------
+
+
+def _attn_dh_kernel(u_ref, *refs, shared_v):
+    it = iter(refs)
+    dz_ref = next(it)
+    dv_ref = None if shared_v else next(it)
+    we_ref = next(it)
+    wv_ref = None if shared_v else next(it)
+    dh_ref = next(it)
+
+    dz = dz_ref[0]  # [bn, f, H]
+    bn, f, H = dz.shape
+    we = we_ref[0]  # [bc, H]
+    acc = jax.lax.dot_general(
+        dz.reshape(bn * f, H).astype(we.dtype), we, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if dv_ref is not None:
+        wv = wv_ref[0]
+        acc += jax.lax.dot_general(
+            dv_ref[0].reshape(bn * f, H).astype(wv.dtype), wv,
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+    dh_ref[0] = acc.reshape(bn, f, -1).astype(dh_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_in", "interpret")
+)
+def stacked_attn_dh_pallas(
+    dz: jnp.ndarray,  # [rb, n, f, H]
+    dv,  # [rb, n, f, H] or None (shared projection)
+    we: jnp.ndarray,  # [Ue, d_in, H]
+    wv,  # [Uv, d_in, H] or None
+    us: jnp.ndarray,  # [3, rb] int32
+    block_n: int = 128,
+    block_in: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    rb, n, f, H = dz.shape
+    d_in = we.shape[1]
+    bn, bc = block_n, block_in
+    shared_v = dv is None
+    grid = (rb, pl.cdiv(n, bn), pl.cdiv(d_in, bc))
+    in_specs = [pl.BlockSpec((1, bn, f, H), lambda s, i, c, u: (s, i, 0, 0))]
+    operands = [dz]
+    if not shared_v:
+        in_specs.append(
+            pl.BlockSpec((1, bn, f, H), lambda s, i, c, u: (s, i, 0, 0)))
+        operands.append(dv)
+    in_specs.append(
+        pl.BlockSpec((1, bc, H), lambda s, i, c, u: (u[0, s], c, 0)))
+    operands.append(we)
+    if not shared_v:
+        in_specs.append(
+            pl.BlockSpec((1, bc, H), lambda s, i, c, u: (u[1, s], c, 0)))
+        operands.append(wv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bn, f, bc), lambda s, i, c, u: (s, i, 0, c)),
+    )
+    return pl.pallas_call(
+        functools.partial(_attn_dh_kernel, shared_v=shared_v),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rb, n, f, d_in), dz.dtype),
+        interpret=interpret,
+    )(us.astype(jnp.int32), *operands)

@@ -7,9 +7,15 @@ module's ``fused`` declaration and the resolved backend
 
   * ``fused == "mean_linear"``     -> :func:`stacked_mean_linear` — the
     fully-fused Pallas kernel (scalar-prefetch slot→stack indirection).
-  * ``fused == "softmax_combine"`` -> logit/value projections via the
-    module's ``attn_parts`` (vmapped, XLA autodiff) + the Pallas masked
-    softmax+combine epilogue.
+  * ``fused == "softmax_combine"`` -> when the module declares an
+    :meth:`~repro.core.relmod.RelationModule.attn_epilogue` (and
+    ``fuse_epilogue`` is on), :func:`stacked_attn_epilogue` — the *fully
+    fused* kernel whose per-slot logit/value projections stream from the
+    ``[U, d_in, H]`` stacks via scalar prefetch (no materialized per-slot
+    weight gather; custom VJP emits stack-form projection grads).
+    Otherwise the oracle factoring: projections via the module's
+    ``attn_parts`` (vmapped, XLA autodiff over gathered weights) + the
+    Pallas masked softmax+combine epilogue.
   * anything else, or a non-TPU backend without forced interpret ->
     :func:`~repro.kernels.stacked_relation_agg.ref.stacked_agg_ref`, the
     gather-then-vmap oracle.
@@ -34,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,9 +52,12 @@ from repro.kernels.ops import (
     kernel_choice,
     pad_axes,
     pad_to,
+    resolve_blocks,
     zero_cotangent,
 )
 from repro.kernels.stacked_relation_agg.kernel import (
+    stacked_attn_dh_pallas,
+    stacked_attn_epilogue_pallas,
     stacked_mean_linear_dh_pallas,
     stacked_mean_linear_pallas,
     stacked_softmax_combine_pallas,
@@ -59,11 +68,13 @@ __all__ = [
     "stacked_agg",
     "stacked_mean_linear",
     "stacked_softmax_combine",
+    "stacked_attn_epilogue",
     "stacked_agg_ref",
     "stacked_agg_grouped",
     "stacked_mean_linear_blocks",
     "stacked_mean_linear_vmem_bytes",
     "stacked_softmax_combine_vmem_bytes",
+    "stacked_attn_epilogue_vmem_bytes",
 ]
 
 
@@ -87,6 +98,22 @@ def stacked_softmax_combine_vmem_bytes(
     H = num_heads * head_dim
     elems = bn * f * num_heads + bn * f + bn * f * H + bn * H
     return elems * bytes_per_elem
+
+
+def stacked_attn_epilogue_vmem_bytes(
+    n: int, f: int, d_in: int, num_heads: int, head_dim: int,
+    block_n: int = 128, block_in: int = 512,
+    shared_v: bool = True, bytes_per_elem: int = 4,
+) -> int:
+    """Per-grid-step working set of the fused attention AGG_r: h block +
+    mask + qv + streamed weight tile(s) + out tile (input dtype) plus the
+    float32 projection accumulator(s)."""
+    bn = clamp_block(block_n, n)
+    bc = clamp_block(block_in, d_in)
+    H = num_heads * head_dim
+    n_acc = 1 if shared_v else 2
+    elems = bn * f * bc + bn * f + bn * H + n_acc * bc * H + bn * H
+    return elems * bytes_per_elem + n_acc * bn * f * H * 4
 
 
 # --------------------------------------------------------------------------
@@ -244,6 +271,175 @@ def stacked_softmax_combine(
 
 
 # --------------------------------------------------------------------------
+# fully fused attention epilogue: stack-streamed projections, custom VJP
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _AECfg:
+    bn: int
+    bc: int
+    nh: int
+    dh: int
+    scale: float
+    slope: object  # Optional[float]
+    has_eb: bool
+    has_post: bool
+    shared_v: bool
+    interpret: bool
+
+
+def _ae_fwd_impl(cfg, h, mask, qv, eb, we, wv, pe, pv, us, with_residuals):
+    rb, n, f, d_in = h.shape
+    hp = pad_axes(h, {1: cfg.bn, 3: cfg.bc})
+    mp = pad_to(mask, 1, cfg.bn)
+    qp = pad_to(qv, 1, cfg.bn)
+    ebp = pad_to(eb, 1, cfg.bn) if cfg.has_eb else None
+    wep = pad_to(we, 1, cfg.bc)
+    wvp = None if cfg.shared_v else pad_to(wv, 1, cfg.bc)
+    pe_, pv_ = (pe, pv) if cfg.has_post else (None, None)
+    res = stacked_attn_epilogue_pallas(
+        hp, mp, qp, ebp, wep, wvp, pe_, pv_, us,
+        num_heads=cfg.nh, head_dim=cfg.dh, scale=cfg.scale, slope=cfg.slope,
+        with_residuals=with_residuals, block_n=cfg.bn, block_in=cfg.bc,
+        interpret=cfg.interpret,
+    )
+    if not with_residuals:
+        return res[:, :n]
+    out = res[0][:, :n]
+    z0 = res[1][:, :n]
+    v0 = z0 if cfg.shared_v else res[2][:, :n]
+    return out, z0, v0
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _stacked_ae(cfg: _AECfg, h, mask, qv, eb, we, wv, pe, pv, us):
+    return _ae_fwd_impl(cfg, h, mask, qv, eb, we, wv, pe, pv, us, False)
+
+
+def _ae_vjp_fwd(cfg, h, mask, qv, eb, we, wv, pe, pv, us):
+    # the pre-transform projections z0/v0 come back as kernel residuals —
+    # the backward never re-runs the big matmuls nor gathers a weight copy
+    out, z0, v0 = _ae_fwd_impl(cfg, h, mask, qv, eb, we, wv, pe, pv, us, True)
+    return out, (h, mask, qv, eb, we, wv, pe, pv, us, z0, v0)
+
+
+def _ae_vjp_bwd(cfg, res, g):
+    h, mask, qv, eb, we, wv, pe, pv, us, z0, v0 = res
+    rb, n, f, d_in = h.shape
+    nh, dh = cfg.nh, cfg.dh
+    H = nh * dh
+    z4 = z0.reshape(rb, n, f, nh, dh)
+    v4 = v0.reshape(rb, n, f, nh, dh)
+    ua = us[2]
+    if cfg.has_post:
+        peg, pvg = pe[ua], pv[ua]  # [rb, nh, dh, dh] — tiny per-slot gathers
+        zt = jnp.einsum("rnfhd,rhde->rnfhe", z4, peg)
+        vt = jnp.einsum("rnfhd,rhde->rnfhe", v4, pvg)
+    else:
+        zt, vt = z4, v4
+    qv4 = qv.reshape(rb, n, nh, dh)
+    e0 = jnp.einsum("rnfhe,rnhe->rnfh", zt, qv4) * cfg.scale
+    if cfg.has_eb:
+        e0 = e0 + eb[:, :, None, :]
+    e = e0 if cfg.slope is None else jax.nn.leaky_relu(
+        e0, negative_slope=cfg.slope)
+    alpha = _sc_alpha(e, mask)  # [rb, n, f, nh]
+    gh = g.reshape(rb, n, nh, dh)
+    # closed-form softmax Jacobian (matches _sc_vjp_bwd)
+    dalpha = jnp.einsum("rnfhd,rnhd->rnfh", vt, gh)
+    tot = jnp.sum(alpha * dalpha, axis=2, keepdims=True)
+    de = alpha * (dalpha - tot)
+    dvt = jnp.einsum("rnfh,rnhd->rnfhd", alpha, gh)
+    if cfg.slope is not None:
+        de = de * jnp.where(e0 >= 0, 1.0, cfg.slope).astype(de.dtype)
+    deb = jnp.sum(de, axis=2) if cfg.has_eb else jnp.zeros_like(eb)
+    des = de * cfg.scale
+    dqv = jnp.einsum("rnfh,rnfhe->rnhe", des, zt).reshape(rb, n, H)
+    dzt = jnp.einsum("rnfh,rnhe->rnfhe", des, qv4)
+    if cfg.has_post:
+        dz4 = jnp.einsum("rnfhe,rhde->rnfhd", dzt, peg)
+        dv4 = jnp.einsum("rnfhe,rhde->rnfhd", dvt, pvg)
+        dpe = jax.ops.segment_sum(
+            jnp.einsum("rnfhd,rnfhe->rhde", z4, dzt), ua,
+            num_segments=pe.shape[0])
+        dpv = jax.ops.segment_sum(
+            jnp.einsum("rnfhd,rnfhe->rhde", v4, dvt), ua,
+            num_segments=pv.shape[0])
+    else:
+        dz4, dv4 = dzt, dvt
+        dpe, dpv = jnp.zeros_like(pe), jnp.zeros_like(pv)
+    dz = dz4.reshape(rb, n, f, H)
+    dv = dv4.reshape(rb, n, f, H)
+    # projection-weight grads straight into stack form (segment-summed over
+    # slot rows; cross-shard sharing stays sync_stack_grads' job)
+    if cfg.shared_v:
+        dcomb = dz + dv
+        dwe = jax.ops.segment_sum(
+            jnp.einsum("rnfc,rnfk->rck", h, dcomb), us[0],
+            num_segments=we.shape[0])
+        dwv = jnp.zeros_like(wv)
+        dzp, dvp = pad_to(dcomb, 1, cfg.bn), None
+    else:
+        dwe = jax.ops.segment_sum(
+            jnp.einsum("rnfc,rnfk->rck", h, dz), us[0],
+            num_segments=we.shape[0])
+        dwv = jax.ops.segment_sum(
+            jnp.einsum("rnfc,rnfk->rck", h, dv), us[1],
+            num_segments=wv.shape[0])
+        dzp, dvp = pad_to(dz, 1, cfg.bn), pad_to(dv, 1, cfg.bn)
+    # dh through the scalar-prefetch transpose kernel — weight blocks read
+    # from the stack, same indirection as the forward
+    dh_ = stacked_attn_dh_pallas(
+        dzp, dvp, pad_to(we, 1, cfg.bc),
+        None if cfg.shared_v else pad_to(wv, 1, cfg.bc), us,
+        block_n=cfg.bn, block_in=cfg.bc, interpret=cfg.interpret,
+    )[:, :n, :, :d_in]
+    return (dh_, zero_cotangent(mask), dqv, deb, dwe, dwv, dpe, dpv,
+            zero_cotangent(us))
+
+
+_stacked_ae.defvjp(_ae_vjp_fwd, _ae_vjp_bwd)
+
+
+def stacked_attn_epilogue(
+    epi,  # relmod.AttnEpilogue
+    h: jnp.ndarray,  # [rb, n, f, d_in]
+    mask: jnp.ndarray,  # [rb, n, f]
+    block_n: int = 128,
+    block_in: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fully fused attention AGG_r from canonical epilogue operands."""
+    rb, n, f, d_in = h.shape
+    nh, dh = epi.num_heads, epi.head_dim
+    shared_v = epi.wv is None
+    has_post = epi.pe is not None
+    ue = epi.ue.astype(jnp.int32)
+    uv = ue if epi.uv is None else epi.uv.astype(jnp.int32)
+    ua = jnp.zeros_like(ue) if epi.ua is None else epi.ua.astype(jnp.int32)
+    us = jnp.stack([ue, uv, ua])
+    dummy = jnp.zeros((1, 1, 1), h.dtype)
+    cfg = _AECfg(
+        bn=clamp_block(block_n, n), bc=clamp_block(block_in, d_in),
+        nh=nh, dh=dh, scale=float(epi.scale),
+        slope=None if epi.slope is None else float(epi.slope),
+        has_eb=epi.eb is not None, has_post=has_post, shared_v=shared_v,
+        interpret=bool(interpret),
+    )
+    out = _stacked_ae(
+        cfg, h, mask, epi.qv,
+        dummy if epi.eb is None else epi.eb,
+        epi.we,
+        dummy if shared_v else epi.wv,
+        dummy if not has_post else epi.pe,
+        dummy if not has_post else epi.pv,
+        us,
+    )
+    return out if epi.bias is None else out + epi.bias[:, None, :]
+
+
+# --------------------------------------------------------------------------
 # the executor entry point
 # --------------------------------------------------------------------------
 
@@ -256,29 +452,76 @@ def stacked_agg(
     q: jnp.ndarray,  # [rb, n, d_dst]
     mask: jnp.ndarray,  # [rb, n, f]
     opts=None,
-    block_n: int = 128,
-    block_out: int = 128,
-    block_in: int = 512,
+    block_n: Optional[int] = None,
+    block_out: Optional[int] = None,
+    block_in: Optional[int] = None,
 ) -> jnp.ndarray:
-    """One level's AGG_r for every branch slot (see module docstring)."""
+    """One level's AGG_r for every branch slot (see module docstring).
+
+    Block sizes resolve per (op, shape-class): explicit kwargs beat the
+    ``opts`` overrides beat the committed tuning table (``opts.autotune``)
+    beat the defaults — see ``repro.kernels.ops.resolve_blocks``."""
     use, interp = kernel_choice(opts, "stacked_agg")
+    rb, n, f, d_in = h.shape
+
+    def _blocks(op: str, d_out: int):
+        bn, bo, bc = resolve_blocks(opts, op, n, f, d_in, d_out)
+        return (block_n or bn, block_out or bo, block_in or bc)
+
     scope_of = {s.name: s.scope for s in module.specs}
     if use and module.fused == "mean_linear":
         # the family contract is leaves named w/b sharing one scope; fall
         # through to the oracle for exotic declarations rather than
         # miscompute (or crash on a missing leaf)
         if scope_of.get("w") is not None and scope_of.get("w") == scope_of.get("b"):
+            bn, bo, bc = _blocks("stacked_mean_linear", stacks["w"].shape[2])
             return stacked_mean_linear(
                 h, mask, stacks["w"], stacks["b"], slot_u[scope_of["w"]],
-                block_n=block_n, block_out=block_out, block_in=block_in,
-                interpret=interp,
+                block_n=bn, block_out=bo, block_in=bc, interpret=interp,
             )
     if use and module.fused == "softmax_combine":
+        if getattr(opts, "fuse_epilogue", True):
+            bn, bo, bc = _blocks("stacked_attn_epilogue",
+                                 _epilogue_width(module, stacks))
+            epi = module.attn_epilogue(
+                stacks, slot_u, q,
+                linear=partial(_epilogue_linear, block_n=bn, block_out=bo,
+                               block_in=bc, interpret=interp),
+            )
+            if epi is not None:
+                return stacked_attn_epilogue(
+                    epi, h, mask, block_n=bn, block_in=bc, interpret=interp,
+                )
+        # attn_parts oracle path (fuse_epilogue off, or no epilogue decl):
+        # projections vmapped under XLA autodiff over gathered weights
         p_slots = {name: stacks[name][slot_u[scope_of[name]]] for name in stacks}
         e, v = jax.vmap(module.attn_parts)(p_slots, h, q)
+        nh_, dh_ = v.shape[3], v.shape[4]
+        bn, _, _ = _blocks("stacked_softmax_combine", nh_ * dh_)
         out = stacked_softmax_combine(
-            e, mask, v, block_n=block_n, interpret=interp
+            e, mask, v, block_n=bn, interpret=interp
         )
         bias = module.attn_bias(p_slots)  # [rb, hidden] or None
         return out if bias is None else out + bias[:, None, :]
     return stacked_agg_ref(module, stacks, slot_u, h, q, mask)
+
+
+def _epilogue_width(module, stacks) -> int:
+    """The attention hidden width nh*dh — the widest last dim among the
+    module's ``[U, d, hidden]`` projection stacks."""
+    return max(s.shape[-1] for s in stacks.values() if s.ndim == 3)
+
+
+def _epilogue_linear(w_stack, u, x, *, block_n, block_out, block_in, interpret):
+    """Per-slot projection ``x @ w_stack[u]`` for the q-side of an
+    attention epilogue — routed through :func:`stacked_mean_linear` with a
+    singleton fanout (masked mean over one slot is the identity), so the
+    weight blocks stream from the stack and the VJP lands in stack form."""
+    rb, n, d = x.shape
+    zb = jnp.zeros((w_stack.shape[0], w_stack.shape[2]), w_stack.dtype)
+    ones = jnp.ones((rb, n, 1), bool)
+    return stacked_mean_linear(
+        x[:, :, None, :], ones, w_stack, zb, u,
+        block_n=block_n, block_out=block_out, block_in=block_in,
+        interpret=interpret,
+    )

@@ -63,11 +63,16 @@ def stacked_agg_grouped(module, stacks, slot_u_np, h, q, mask):
         # run it once over the whole stack; only the [rb, n, d_in] means are
         # regrouped, and each unique weight is a static slice feeding one
         # flat matmul (this is the memory-movement shape the Pallas kernel
-        # realizes per block on TPU)
+        # realizes per block on TPU).  Group outputs are concatenated and
+        # un-permuted with ONE gather at the end: the earlier
+        # ``out.at[sl].set`` formulation copied the whole [rb, n, d_out]
+        # output once per group, which at rgcn shapes (every slot its own
+        # relation ⇒ all-singleton groups) cost more than the grouping
+        # saved — the 0.93x mag_l1/mag_l2 regression in BENCH_kernels.json.
         mw = mask.astype(h.dtype)
         cnt = jnp.maximum(mw.sum(-1, keepdims=True), 1.0)
         mean = jnp.einsum("rnfd,rnf->rnd", h, mw) / cnt
-        out = jnp.zeros((rb, n, stacks["w"].shape[2]), h.dtype)
+        chunks, order = [], []
         for sig, slots in groups.items():
             u_of = dict(zip(module.scopes, sig))
             uw = u_of[scope_of["w"]]
@@ -75,8 +80,11 @@ def stacked_agg_grouped(module, stacks, slot_u_np, h, q, mask):
             g = len(slots)
             m_g = jnp.take(mean, sl, axis=0).reshape(g * n, d_in)
             o_g = (m_g @ stacks["w"][uw] + stacks["b"][u_of[scope_of["b"]]])
-            out = out.at[sl].set(o_g.reshape(g, n, -1))
-        return out
+            chunks.append(o_g.reshape(g, n, -1))
+            order.extend(slots)
+        out = jnp.concatenate(chunks, axis=0)
+        inv = np.argsort(np.asarray(order))
+        return jnp.take(out, jnp.asarray(inv), axis=0)
     chunks, order = [], []
     for sig, slots in groups.items():
         u_of = dict(zip(module.scopes, sig))

@@ -29,8 +29,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.embed.cache import CacheAllocation, FeatureCache
-from repro.embed.profiler import HotnessProfile
+from repro.embed.cache import CacheAllocation, FeatureCache, allocate_cache
+from repro.embed.profiler import HotnessProfile, MissPenaltyProfile
 from repro.serve.full_graph import EmbeddingStore
 
 __all__ = ["MicroBatcher", "EmbeddingServer", "ServeResult", "ServeStats"]
@@ -272,12 +272,32 @@ class EmbeddingServer:
         kernels=None,
         mesh=None,
         hotness: Optional[HotnessProfile] = None,
+        readmit_every: int = 0,
     ):
         import jax
         import jax.numpy as jnp
 
         self.store = store
         self.cache = _build_serve_cache(store, cache_mb, kernels, hotness)
+        # online re-admission from the served-id trace: every fetch_many
+        # already bumps the cache's access counters, so after every
+        # `readmit_every` flushes the flusher thread re-splits the same
+        # byte budget across types ∝ observed traffic and re-admits each
+        # type's observed-hottest rows (0 = off).  Serving fronts
+        # read-only materialized embeddings, so the re-allocation is the
+        # hotness-only policy (all types share one miss penalty).
+        self.readmit_every = int(readmit_every)
+        self.readmits = 0
+        self._flush_count = 0
+        self._cache_bytes = int(cache_mb) << 20
+        self._hotness_ema = {
+            t: (
+                hotness.counts[t].astype(np.float64)
+                if hotness is not None and t in hotness.counts
+                else np.ones(a.shape[0], np.float64)
+            )
+            for t, a in store.embeddings.items()
+        }
         w = jnp.asarray(store.head["w"])
         b = jnp.asarray(store.head["b"])
         if mesh is not None:
@@ -338,7 +358,38 @@ class EmbeddingServer:
             self._count += len(items)
             for r in out:
                 self._latencies.append(r.latency_ms)
+        self._flush_count += 1
+        if self.readmit_every and self._flush_count % self.readmit_every == 0:
+            self._readmit()
         return out
+
+    def _readmit(self, decay: float = 0.5) -> None:
+        """Re-allocate the serve cache from the served-id trace.
+
+        Runs on the flusher thread — the only thread that calls
+        ``fetch_many`` — so the cache swap needs no extra locking.  The
+        drained access counters fold into a decayed running profile, the
+        unchanged byte budget re-splits across types ∝ observed traffic
+        (hotness-only: materialized embeddings are read-only and
+        penalty-uniform), and ``update_residency`` moves only the delta."""
+        window = self.cache.take_access_counts()
+        for t, ema in self._hotness_ema.items():
+            ema *= decay
+            if t in window:
+                ema += window[t]
+        profile = HotnessProfile(counts=self._hotness_ema)
+        tables = self.store.embeddings
+        pen = MissPenaltyProfile(
+            ratios={t: 1.0 for t in tables},
+            learnable={t: False for t in tables},
+            dims={t: a.shape[1] for t, a in tables.items()},
+        )
+        alloc = allocate_cache(
+            profile, pen, self._cache_bytes,
+            {t: a.shape[0] for t, a in tables.items()}, hotness_only=True,
+        )
+        self.cache.update_residency(alloc, profile)
+        self.readmits += 1
 
     # -- client surface ------------------------------------------------------
 

@@ -320,6 +320,66 @@ def test_kernel_config_round_trips():
     assert config_from_args(ap.parse_args([])).kernels.interpret is None
 
 
+def test_kernel_block_config_round_trips():
+    """The block-size knobs (autotune + explicit overrides) round-trip
+    through dict / flat-kwargs / CLI, and non-positive blocks are rejected."""
+    cfg = HetaConfig().updated(kernels=dict(autotune=True, block_n=64,
+                                            block_in=256, fuse_epilogue=False))
+    assert HetaConfig.from_dict(cfg.to_dict()) == cfg
+    flat = cfg.to_flat_kwargs()
+    assert flat["kernel_autotune"] is True
+    assert flat["kernel_block_n"] == 64 and flat["kernel_block_out"] is None
+    assert HetaConfig.from_flat_kwargs(**flat) == cfg
+    for f in ("block_n", "block_out", "block_in"):
+        for bad in (0, -8, 1.5, True):
+            with pytest.raises(ValueError, match=f"kernels.{f}"):
+                HetaConfig().updated(kernels={f: bad})
+    with pytest.raises(ValueError, match="kernels.autotune"):
+        HetaConfig().updated(kernels=dict(autotune="yes"))
+    with pytest.raises(ValueError, match="kernels.fuse_epilogue"):
+        HetaConfig().updated(kernels=dict(fuse_epilogue=1.0))
+    # derived CLI flags (unset blocks stay None -> dispatch defaults)
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    got = config_from_args(ap.parse_args(
+        ["--kernel-autotune", "--kernel-block-n", "256",
+         "--no-kernel-fuse-epilogue"]))
+    assert got.kernels.autotune and got.kernels.block_n == 256
+    assert got.kernels.fuse_epilogue is False
+    base = config_from_args(ap.parse_args([]))
+    assert base.kernels.block_n is None and base.kernels.autotune is False
+    assert base.kernels.fuse_epilogue is True
+
+
+def test_cache_readmit_config_round_trips():
+    cfg = HetaConfig().updated(cache=dict(readmit_every=2),
+                               serve=dict(readmit_every=5))
+    assert HetaConfig.from_dict(cfg.to_dict()) == cfg
+    assert HetaConfig.from_flat_kwargs(**cfg.to_flat_kwargs()) == cfg
+    with pytest.raises(ValueError, match="readmit_every"):
+        HetaConfig().updated(cache=dict(readmit_every=-1))
+    with pytest.raises(ValueError, match="readmit_every"):
+        HetaConfig().updated(serve=dict(readmit_every=-2))
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    got = config_from_args(ap.parse_args(
+        ["--readmit-every", "3", "--serve-readmit-every", "7"]))
+    assert got.cache.readmit_every == 3 and got.serve.readmit_every == 7
+    assert config_from_args(ap.parse_args([])).cache.readmit_every == 0
+
+
+def test_fit_loop_triggers_online_readmission():
+    """cache.readmit_every wires EmbedEngine.rebalance into the fit loop:
+    4 steps at period 2 -> exactly 2 rebalances, and training still runs."""
+    sess = Heta(tiny_config().updated(cache=dict(readmit_every=2),
+                                      run=dict(steps=4)))
+    m = sess.run()
+    assert sess.engine.rebalances == 2
+    assert sess.engine.stats()["rebalances"] == 2
+    assert len(m["losses"]) == 4
+    assert np.isfinite(m["losses"]).all()
+
+
 def test_pipeline_config_round_trips():
     cfg = HetaConfig().updated(pipeline=dict(enabled=True, depth=3,
                                              snapshot="fresh", num_workers=4))

@@ -1,0 +1,223 @@
+"""Block-size autotuner (DESIGN.md §8): determinism of the analytic sweep,
+schema validation of the committed tuning table, and the resolve_blocks
+priority chain (explicit overrides > table > defaults) the dispatch obeys.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels.ops import (
+    DEFAULT_BLOCKS,
+    TUNING_TABLE_PATH,
+    VMEM_BUDGET_BYTES,
+    KernelOptions,
+    load_tuning_table,
+    lookup_blocks,
+    resolve_blocks,
+    shape_class,
+)
+
+
+# --------------------------------------------------------------------------
+# determinism + the committed table
+# --------------------------------------------------------------------------
+
+
+def test_build_table_is_deterministic():
+    """Two analytic sweeps over the default shapes are bit-identical — the
+    property that lets CI regenerate and diff the committed table."""
+    t1 = autotune.build_table()
+    t2 = autotune.build_table()
+    assert t1 == t2
+    assert t1["mode"] == "analytic" and t1["backend"] == "any"
+    assert len(t1["entries"]) == len(autotune.DEFAULT_SHAPES)
+
+
+def test_committed_table_validates_and_is_current():
+    """The committed table passes the CI schema gate AND equals a fresh
+    analytic sweep (regeneration is reproducible on any host)."""
+    with open(TUNING_TABLE_PATH) as fh:
+        committed = json.load(fh)
+    autotune.validate_table(committed)
+    assert committed == autotune.build_table()
+
+
+def test_candidates_clamped_deduped_under_budget():
+    for op, n, f, d_in, d_out in autotune.DEFAULT_SHAPES:
+        cands = autotune.candidates(op, n, f, d_in, d_out)
+        assert cands, f"{op} has no candidate under the VMEM budget"
+        assert len(set(cands)) == len(cands)
+        for bn, bo, bc in cands:
+            assert bn <= max(8, n) and bc <= max(8, d_in)
+            assert autotune._vmem_bytes(op, n, f, d_in, d_out, bn, bo, bc) \
+                <= VMEM_BUDGET_BYTES
+
+
+def test_analytic_cost_prefers_fewer_grid_steps():
+    """Sanity on the model the winners come from: at fixed VMEM-feasible
+    candidates, halving the step count must not cost more."""
+    op, n, f, di, do = "stacked_mean_linear", 1024, 25, 128, 64
+    few = autotune.analytic_cost_us(op, n, f, di, do, 512, 64, 128)
+    many = autotune.analytic_cost_us(op, n, f, di, do, 32, 64, 128)
+    assert few < many
+
+
+# --------------------------------------------------------------------------
+# validate_table rejections (CI gate behavior)
+# --------------------------------------------------------------------------
+
+
+def _good_entry():
+    return {"block_n": 512, "block_out": 64, "block_in": 128,
+            "source": "analytic", "cost_us": 1.0}
+
+
+def _table(entries):
+    return {"version": 1, "mode": "analytic", "backend": "any",
+            "budget_bytes": VMEM_BUDGET_BYTES, "entries": entries}
+
+
+GOOD_KEY = "stacked_mean_linear/float32/n1024/f25/di128/do64"
+
+
+def test_validate_table_rejects_bad_version():
+    with pytest.raises(ValueError, match="version"):
+        autotune.validate_table({"version": 2, "entries": {}})
+
+
+def test_validate_table_rejects_malformed_key():
+    with pytest.raises(ValueError, match="malformed"):
+        autotune.validate_table(_table({"not/a/key": _good_entry()}))
+
+
+def test_validate_table_rejects_unknown_op():
+    key = "stacked_nonsense/float32/n1024/f25/di128/do64"
+    with pytest.raises(ValueError, match="unknown op"):
+        autotune.validate_table(_table({key: _good_entry()}))
+
+
+@pytest.mark.parametrize("field,bad", [
+    ("block_n", 0), ("block_out", -8), ("block_in", 1.5), ("block_n", None),
+])
+def test_validate_table_rejects_non_positive_blocks(field, bad):
+    e = _good_entry()
+    e[field] = bad
+    with pytest.raises(ValueError, match=field):
+        autotune.validate_table(_table({GOOD_KEY: e}))
+
+
+def test_validate_table_rejects_bad_source():
+    e = _good_entry()
+    e["source"] = "vibes"
+    with pytest.raises(ValueError, match="source"):
+        autotune.validate_table(_table({GOOD_KEY: e}))
+
+
+def test_validate_table_rejects_over_budget_blocks():
+    key = shape_class("stacked_mean_linear", 25600, 25, 1024, 1024)
+    e = {"block_n": 25600, "block_out": 1024, "block_in": 1024,
+         "source": "analytic", "cost_us": 1.0}
+    with pytest.raises(ValueError, match="VMEM"):
+        autotune.validate_table(_table({key: e}))
+
+
+# --------------------------------------------------------------------------
+# dispatch respects the table: the resolve_blocks priority chain
+# --------------------------------------------------------------------------
+
+
+def test_shape_class_buckets_n_to_pow2():
+    assert shape_class("stacked_mean_linear", 1000, 25, 128, 64) == \
+        shape_class("stacked_mean_linear", 1024, 25, 128, 64)
+    assert shape_class("stacked_mean_linear", 1025, 25, 128, 64) != \
+        shape_class("stacked_mean_linear", 1024, 25, 128, 64)
+
+
+def test_resolve_blocks_priority_chain(tmp_path):
+    """explicit opts.block_* > tuning table (autotune on) > DEFAULT_BLOCKS,
+    exercised against a temp table with a distinctive winner."""
+    p = tmp_path / "table.json"
+    key = shape_class("stacked_mean_linear", 1024, 25, 128, 64)
+    autotune.save_table(_table({key: _good_entry()}), p)
+    shape = ("stacked_mean_linear", 1024, 25, 128, 64)
+
+    # autotune off -> defaults, even with the table present
+    off = KernelOptions(autotune=False)
+    assert resolve_blocks(off, *shape, path=str(p)) == DEFAULT_BLOCKS
+
+    # autotune on -> the table's winner
+    on = KernelOptions(autotune=True)
+    assert resolve_blocks(on, *shape, path=str(p)) == (512, 64, 128)
+
+    # table miss -> defaults
+    miss = ("stacked_mean_linear", 64, 3, 8, 8)
+    assert resolve_blocks(on, *miss, path=str(p)) == DEFAULT_BLOCKS
+
+    # explicit overrides beat the table where set, table fills the rest
+    ov = KernelOptions(autotune=True, block_n=64)
+    assert resolve_blocks(ov, *shape, path=str(p)) == (64, 64, 128)
+
+    # no opts at all -> defaults
+    assert resolve_blocks(None, *shape, path=str(p)) == DEFAULT_BLOCKS
+
+
+def test_lookup_blocks_committed_table_hit():
+    """The committed table serves the mag_l1 shape class the benchmarks
+    race (BENCH_kernels.json's autotuned rows)."""
+    hit = lookup_blocks("stacked_mean_linear", 1024, 25, 128, 64)
+    assert hit is not None
+    bn, bo, bc = hit
+    assert all(isinstance(v, int) and v > 0 for v in (bn, bo, bc))
+
+
+def test_save_table_round_trips_and_clears_cache(tmp_path):
+    p = tmp_path / "t.json"
+    table = _table({GOOD_KEY: _good_entry()})
+    autotune.save_table(table, p)
+    assert load_tuning_table(str(p)) == table
+    # overwrite with an empty table: the lru cache must not serve stale hits
+    autotune.save_table(_table({}), p)
+    assert load_tuning_table(str(p))["entries"] == {}
+
+
+def test_stacked_agg_dispatch_consults_table(monkeypatch, tmp_path):
+    """End to end: with opts.autotune on, the stacked_agg dispatch resolves
+    its blocks through the table (observed via the resolver call) and the
+    numerics stay oracle-equal regardless of the block choice."""
+    import jax.numpy as jnp
+
+    from repro.core.relmod import get_relation_module
+    from repro.kernels.stacked_relation_agg import (
+        ops as sops,
+        stacked_agg,
+        stacked_agg_ref,
+    )
+
+    seen = []
+    real = sops.resolve_blocks
+
+    def spy(opts, op, n, f, d_in, d_out, path=None):
+        out = real(opts, op, n, f, d_in, d_out, path=path)
+        seen.append((op, out))
+        return out
+
+    monkeypatch.setattr(sops, "resolve_blocks", spy)
+
+    mod = get_relation_module("rgcn")
+    r = np.random.default_rng(3)
+    rb, n, f, di, do, U = 4, 40, 3, 16, 12, 2
+    stacks = {"w": jnp.asarray(r.standard_normal((U, di, do)), jnp.float32),
+              "b": jnp.asarray(r.standard_normal((U, do)), jnp.float32)}
+    slot_u = {"relation": jnp.asarray(r.integers(0, U, rb))}
+    h = jnp.asarray(r.standard_normal((rb, n, f, di)), jnp.float32)
+    q = jnp.asarray(r.standard_normal((rb, n, di)), jnp.float32)
+    mask = jnp.asarray(r.random((rb, n, f)) > 0.3)
+
+    opts = KernelOptions(interpret=True, autotune=True)
+    out = stacked_agg(mod, stacks, slot_u, h, q, mask, opts=opts)
+    ref = stacked_agg_ref(mod, stacks, slot_u, h, q, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    assert seen and seen[0][0] == "stacked_mean_linear"

@@ -230,6 +230,107 @@ def test_stacked_agg_fused_and_grouped_match_oracle(model):
         np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5, rtol=1e-5)
 
 
+# --------------------------------------------------------------------------
+# fused attention epilogue: the fuse_epilogue toggle selects between the
+# fully fused kernel and the attn_parts factoring — both must match the
+# gather-then-vmap oracle, forward AND VJP (DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+OPTS_PARTS = KernelOptions(interpret=True, fuse_epilogue=False)
+
+
+@pytest.mark.parametrize("model", ["rgat", "hgt"])
+@pytest.mark.parametrize("rb,n,f", [
+    (5, 19, 4),    # non-block-multiple everywhere
+    (3, 130, 3),   # one past the n block edge
+])
+def test_fused_epilogue_matches_attn_parts_and_oracle(model, rb, n, f):
+    """The fused epilogue (per-slot projections streamed from the weight
+    stacks) and the attn_parts oracle factoring agree with the vmap oracle
+    at non-block-multiple shapes — forward and gradients, including stacks
+    with shared rows (U < rb forces slot collisions)."""
+    mod, stacks, slot_np, slot_u, h, q, mask = _module_case(
+        model, rb=rb, n=n, f=f, di=23, dd=17, hidden=32, nh=4, seed=rb * n
+    )
+    # force shared stack rows: at least two slots per scope hit row 0
+    slot_u = {s: jnp.asarray(np.where(np.arange(rb) < 2, 0, v))
+              for s, v in slot_np.items()}
+
+    ref = stacked_agg_ref(mod, stacks, slot_u, h, q, mask)
+    fused = stacked_agg(mod, stacks, slot_u, h, q, mask, opts=OPTS_ON)
+    parts = stacked_agg(mod, stacks, slot_u, h, q, mask, opts=OPTS_PARTS)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(parts), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+    def loss(opts):
+        def f_(st, h_):
+            return jnp.sum(stacked_agg(mod, st, slot_u, h_, q, mask,
+                                       opts=opts) ** 2)
+        return f_
+
+    g_fused = jax.grad(loss(OPTS_ON), argnums=(0, 1))(stacks, h)
+    g_parts = jax.grad(loss(OPTS_PARTS), argnums=(0, 1))(stacks, h)
+    g_ref = jax.grad(
+        lambda st, h_: jnp.sum(stacked_agg_ref(mod, st, slot_u, h_, q, mask) ** 2),
+        argnums=(0, 1),
+    )(stacks, h)
+    for a, b, c in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_parts),
+                       jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=2e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(c),
+                                   atol=2e-5, rtol=1e-5)
+
+
+def test_fused_epilogue_grad_lands_in_stack_rows():
+    """Slots sharing a projection-stack row sum their gradient contributions
+    into that row (the custom VJP's stack-form gradients), and rows no slot
+    references get exactly zero — the contract sync_stack_grads relies on."""
+    mod, stacks, slot_np, _, h, q, mask = _module_case(
+        "rgat", rb=4, n=11, f=3, di=12, dd=10, hidden=16, nh=4, seed=9
+    )
+    # every scope: slots 0-1 share row 0, slots 2-3 share row 1; higher rows
+    # stay unused (every scope's stack has ≥2 rows in _module_case)
+    slot_u = {s: jnp.asarray([0, 0, 1, 1]) for s in mod.scopes}
+
+    def loss(st):
+        return jnp.sum(stacked_agg(mod, st, slot_u, h, q, mask, opts=OPTS_ON))
+
+    g = jax.grad(loss)(stacks)
+    scope_of = {sp.name: sp.scope for sp in mod.specs}
+    for name, gs in g.items():
+        u_used = np.unique(np.asarray(slot_u[scope_of[name]]))
+        for u in range(gs.shape[0]):
+            mag = float(jnp.abs(gs[u]).max())
+            if u not in u_used:
+                assert mag == 0.0, f"{name}[{u}] unused but got grad {mag}"
+
+
+@pytest.mark.parametrize("model", ["rgat", "hgt"])
+def test_session_3step_loss_parity_fused_vs_attn_parts(model):
+    """Executor-level acceptance: a 3-step training run through the fused
+    epilogue produces the same losses as the attn_parts oracle factoring
+    (≤1e-5), end to end through the api session."""
+    from repro.api import DataConfig, Heta, HetaConfig, ModelConfig
+    from repro.api import PartitionConfig, RunConfig
+
+    def run(fuse):
+        cfg = HetaConfig(
+            data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                            batch_size=16),
+            partition=PartitionConfig(num_partitions=2),
+            model=ModelConfig(model=model, hidden=32),
+            run=RunConfig(executor="raf_spmd", steps=3, lr=1e-2, seed=0),
+        ).updated(kernels=dict(interpret=True, fuse_epilogue=fuse))
+        return np.asarray(Heta(cfg).run()["losses"])
+
+    fused, parts = run(True), run(False)
+    assert fused.shape == (3,) and np.isfinite(fused).all()
+    np.testing.assert_allclose(fused, parts, atol=1e-5, rtol=1e-6)
+
+
 def test_stacked_agg_disabled_is_oracle():
     mod, stacks, slot_np, slot_u, h, q, mask = _module_case(
         "rgcn", rb=3, n=8, f=3, di=10, dd=10, hidden=16, nh=4, seed=4
