@@ -27,9 +27,9 @@ Or collapse all stages: ``result = Heta(cfg).run()``.
 Configuration
 =============
 
-:class:`HetaConfig` is a typed tree of eight sections — ``data``,
+:class:`HetaConfig` is a typed tree of ten sections — ``data``,
 ``partition``, ``model``, ``cache``, ``run``, ``pipeline``, ``kernels``,
-``serve`` — that round-trips through
+``serve``, ``checkpoint``, ``faults`` — that round-trips through
 nested dicts (``to_dict``/``from_dict``), the historical flat-kwargs surface
 (``from_flat_kwargs``/``to_flat_kwargs``) and auto-generated CLI flags
 (``add_config_args``/``config_from_args`` — what ``python -m
@@ -77,6 +77,8 @@ from repro.api.config import (
     PipelineConfig,
     RunConfig,
     ServeConfig,
+    CheckpointConfig,
+    FaultConfig,
     add_config_args,
     config_from_args,
 )
@@ -93,6 +95,8 @@ __all__ = [
     "PipelineConfig",
     "KernelConfig",
     "ServeConfig",
+    "CheckpointConfig",
+    "FaultConfig",
     "Heta",
     "HetaStageError",
     "PartitionReport",

@@ -1,6 +1,6 @@
 """HetaConfig — the typed, validated configuration tree of the public API.
 
-One config object describes a complete Heta run.  It composes eight section
+One config object describes a complete Heta run.  It composes ten section
 dataclasses mirroring the pipeline stages:
 
   * :class:`DataConfig`      — dataset, scale, fanouts, batch size
@@ -13,8 +13,13 @@ dataclasses mirroring the pipeline stages:
   * :class:`KernelConfig`    — fused Pallas kernel layer (per-op toggles,
     interpret override; see ``repro.kernels`` and DESIGN.md §8)
   * :class:`ServeConfig`     — online inference tier (layer-wise inference
-    node block, micro-batch flush policy, serve cache budget; see
-    ``repro.serve`` and DESIGN.md §10)
+    node block, micro-batch flush policy, serve cache budget, degradation
+    policy — deadlines, flush retries, circuit breaker; see ``repro.serve``
+    and DESIGN.md §10/§12)
+  * :class:`CheckpointConfig`— periodic session checkpointing
+    (``Heta.save``/``restore``; see ``repro.checkpoint`` and DESIGN.md §12)
+  * :class:`FaultConfig`     — fault-tolerance policy (worker restart
+    budget/backoff, arena write stall timeout; DESIGN.md §12)
 
 Three interchange formats round-trip losslessly:
 
@@ -43,6 +48,8 @@ __all__ = [
     "PipelineConfig",
     "KernelConfig",
     "ServeConfig",
+    "CheckpointConfig",
+    "FaultConfig",
     "HetaConfig",
     "add_config_args",
     "config_from_args",
@@ -300,7 +307,16 @@ class ServeConfig:
     embedding store with a shared-memory segment for zero-copy attach;
     ``production_mesh`` places the scoring step on ``make_production_mesh``
     (256 devices) instead of the run's mesh; ``readmit_every`` re-admits
-    the serve cache from the served-id trace every N flushes (0 = off)."""
+    the serve cache from the served-id trace every N flushes (0 = off).
+
+    Degradation policy (DESIGN.md §12): ``deadline_ms`` is the default
+    per-request deadline (0 = none) — ``query`` waits at most this long and
+    the flusher stops retrying once the oldest queued request would blow
+    it; a failing flush is retried ``flush_retries`` times with exponential
+    backoff from ``retry_backoff_ms``; ``breaker_threshold`` consecutive
+    primary-path failures trip a circuit breaker that serves requests from
+    a degraded direct-store gather (cache bypass) until a probe succeeds
+    after ``breaker_cooldown_ms``."""
 
     node_block: int = 1024
     max_batch: int = 64
@@ -310,6 +326,11 @@ class ServeConfig:
     shm: bool = False
     production_mesh: bool = False
     readmit_every: int = 0
+    deadline_ms: float = 0.0
+    flush_retries: int = 2
+    retry_backoff_ms: float = 1.0
+    breaker_threshold: int = 3
+    breaker_cooldown_ms: float = 1000.0
 
     def __post_init__(self):
         if self.node_block < 1:
@@ -328,6 +349,77 @@ class ServeConfig:
         if self.readmit_every < 0:
             raise ValueError(
                 f"readmit_every must be >= 0, got {self.readmit_every}")
+        if self.deadline_ms < 0:
+            raise ValueError(
+                f"deadline_ms must be >= 0, got {self.deadline_ms}")
+        if self.flush_retries < 0:
+            raise ValueError(
+                f"flush_retries must be >= 0, got {self.flush_retries}")
+        if self.retry_backoff_ms < 0:
+            raise ValueError(
+                f"retry_backoff_ms must be >= 0, got {self.retry_backoff_ms}")
+        if self.breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {self.breaker_threshold}")
+        if self.breaker_cooldown_ms < 0:
+            raise ValueError(
+                f"breaker_cooldown_ms must be >= 0, got "
+                f"{self.breaker_cooldown_ms}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """Periodic session checkpointing (``repro.checkpoint``, DESIGN.md §12).
+
+    With ``every_steps > 0`` the fit loop calls ``Heta.save(dir)`` after
+    every N consumed steps; checkpoints are written atomically (tmp +
+    rename, content-hashed manifest) and ``Heta.restore(dir)`` resumes the
+    loss trajectory bit-for-bit.  ``keep`` prunes all but the newest K
+    checkpoints (0 = keep everything)."""
+
+    every_steps: int = 0
+    dir: Optional[str] = None
+    keep: int = 0
+
+    def __post_init__(self):
+        if self.every_steps < 0:
+            raise ValueError(
+                f"every_steps must be >= 0, got {self.every_steps}")
+        if self.keep < 0:
+            raise ValueError(f"keep must be >= 0, got {self.keep}")
+        if self.every_steps > 0 and not self.dir:
+            raise ValueError(
+                "checkpoint.every_steps > 0 requires checkpoint.dir")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Fault-tolerance policy (DESIGN.md §12).
+
+    ``max_worker_restarts`` bounds how many times the pool supervisor
+    respawns a silently-dead sampler worker per fit (0 disables respawn —
+    a death raises :class:`~repro.data.worker_pool.WorkerDiedError`
+    immediately); respawn ``r`` backs off ``worker_backoff_s * 2**r``
+    seconds first.  ``arena_write_timeout_s`` bounds the batch-arena
+    writer's backpressure poll: a worker whose consumer vanished raises
+    ``ArenaStalledError`` instead of spinning forever."""
+
+    max_worker_restarts: int = 2
+    worker_backoff_s: float = 0.05
+    arena_write_timeout_s: float = 60.0
+
+    def __post_init__(self):
+        if self.max_worker_restarts < 0:
+            raise ValueError(
+                f"max_worker_restarts must be >= 0, got "
+                f"{self.max_worker_restarts}")
+        if self.worker_backoff_s < 0:
+            raise ValueError(
+                f"worker_backoff_s must be >= 0, got {self.worker_backoff_s}")
+        if self.arena_write_timeout_s <= 0:
+            raise ValueError(
+                f"arena_write_timeout_s must be > 0, got "
+                f"{self.arena_write_timeout_s}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -342,9 +434,12 @@ class HetaConfig:
     pipeline: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
     kernels: KernelConfig = dataclasses.field(default_factory=KernelConfig)
     serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
+    checkpoint: CheckpointConfig = dataclasses.field(
+        default_factory=CheckpointConfig)
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
 
     SECTIONS = ("data", "partition", "model", "cache", "run", "pipeline",
-                "kernels", "serve")
+                "kernels", "serve", "checkpoint", "faults")
 
     # -- derived ------------------------------------------------------------
 
@@ -386,7 +481,9 @@ class HetaConfig:
             sec_cls = {"data": DataConfig, "partition": PartitionConfig,
                        "model": ModelConfig, "cache": CacheConfig,
                        "run": RunConfig, "pipeline": PipelineConfig,
-                       "kernels": KernelConfig, "serve": ServeConfig}[name]
+                       "kernels": KernelConfig, "serve": ServeConfig,
+                       "checkpoint": CheckpointConfig,
+                       "faults": FaultConfig}[name]
             known = {f.name for f in dataclasses.fields(sec_cls)}
             bad = set(sec) - known
             if bad:
@@ -483,6 +580,17 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "serve_shm": ("serve", "shm", bool, bool),
     "serve_production_mesh": ("serve", "production_mesh", bool, bool),
     "serve_readmit_every": ("serve", "readmit_every", int, int),
+    "serve_deadline_ms": ("serve", "deadline_ms", float, float),
+    "serve_flush_retries": ("serve", "flush_retries", int, int),
+    "serve_retry_backoff_ms": ("serve", "retry_backoff_ms", float, float),
+    "serve_breaker_threshold": ("serve", "breaker_threshold", int, int),
+    "serve_breaker_cooldown_ms": ("serve", "breaker_cooldown_ms", float, float),
+    "checkpoint_every_steps": ("checkpoint", "every_steps", int, int),
+    "checkpoint_dir": ("checkpoint", "dir", lambda v: v, lambda v: v),
+    "checkpoint_keep": ("checkpoint", "keep", int, int),
+    "max_worker_restarts": ("faults", "max_worker_restarts", int, int),
+    "worker_backoff_s": ("faults", "worker_backoff_s", float, float),
+    "arena_write_timeout_s": ("faults", "arena_write_timeout_s", float, float),
 }
 
 
@@ -547,6 +655,38 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("serve", "readmit_every"): (
         "--serve-readmit-every", int,
         "serve-cache re-admission period in flushes (0 = one-shot)"),
+    ("serve", "deadline_ms"): (
+        "--serve-deadline-ms", float,
+        "default per-request deadline in ms (0 = none)"),
+    ("serve", "flush_retries"): (
+        "--serve-flush-retries", int,
+        "retries of a failing flush before the breaker counts it"),
+    ("serve", "retry_backoff_ms"): (
+        "--serve-retry-backoff-ms", float,
+        "base backoff between flush retries (doubles per attempt)"),
+    ("serve", "breaker_threshold"): (
+        "--serve-breaker-threshold", int,
+        "consecutive flush failures that trip the circuit breaker"),
+    ("serve", "breaker_cooldown_ms"): (
+        "--serve-breaker-cooldown-ms", float,
+        "open-breaker cooldown before a half-open probe"),
+    ("checkpoint", "every_steps"): (
+        "--checkpoint-every-steps", int,
+        "save a session checkpoint every N steps (0 = off)"),
+    ("checkpoint", "dir"): (
+        "--checkpoint-dir", str, "checkpoint directory"),
+    ("checkpoint", "keep"): (
+        "--checkpoint-keep", int,
+        "retain only the newest K checkpoints (0 = all)"),
+    ("faults", "max_worker_restarts"): (
+        "--max-worker-restarts", int,
+        "pool supervisor restart budget per worker (0 = fail fast)"),
+    ("faults", "worker_backoff_s"): (
+        "--worker-backoff-s", float,
+        "base respawn backoff in seconds (doubles per restart)"),
+    ("faults", "arena_write_timeout_s"): (
+        "--arena-write-timeout-s", float,
+        "arena writer backpressure stall timeout (seconds)"),
 }
 
 _SCALAR_PARSERS = {int: int, float: float, str: str, Optional[float]: float, bool: None}
@@ -559,7 +699,9 @@ def _cli_specs():
     for section, sec_cls in (("data", DataConfig), ("partition", PartitionConfig),
                              ("model", ModelConfig), ("cache", CacheConfig),
                              ("run", RunConfig), ("pipeline", PipelineConfig),
-                             ("kernels", KernelConfig), ("serve", ServeConfig)):
+                             ("kernels", KernelConfig), ("serve", ServeConfig),
+                             ("checkpoint", CheckpointConfig),
+                             ("faults", FaultConfig)):
         hints = typing.get_type_hints(sec_cls)
         for f in dataclasses.fields(sec_cls):
             default = getattr(sec_cls(), f.name)

@@ -114,6 +114,10 @@ class Heta:
         # online inference tier (repro.serve)
         self.embedding_store = None
         self._server = None
+        # deterministic chaos drills (repro.data.faults.FaultPlan, or None):
+        # threaded into the training pool's SampleStageTask and consumed by
+        # the supervision batteries / benchmarks/fault_drill.py
+        self.fault_plan = None
 
     # -- stage guards --------------------------------------------------------
 
@@ -137,6 +141,15 @@ class Heta:
         from repro.graph.synthetic import make_dataset
 
         t0 = time.perf_counter()
+        # shm janitor (DESIGN.md §12): a hard-crashed prior run can leave
+        # orphaned graph/arena segments the resource tracker never saw;
+        # sweep segments whose owner pid is gone before allocating new ones
+        try:
+            from repro.graph.shm import cleanup_stale_segments
+
+            cleanup_stale_segments()
+        except Exception:
+            pass  # best-effort: /dev/shm may be absent on this platform
         cfg = self.config
         self.graph = graph if graph is not None else make_dataset(
             cfg.data.dataset, scale=cfg.data.scale, seed=cfg.run.seed)
@@ -321,6 +334,7 @@ class Heta:
             self.losses.append(loss)
             self._steps_done += 1
             self._maybe_rebalance()
+            self._maybe_checkpoint()
             return loss
         arrays = self.executor.stage(self, self.plan, batch)
         return self._consume(batch, arrays, time.perf_counter() - t0)
@@ -340,6 +354,7 @@ class Heta:
         self.losses.append(loss)
         self._steps_done += 1
         self._maybe_rebalance()
+        self._maybe_checkpoint()
         return loss
 
     def _maybe_rebalance(self) -> None:
@@ -499,7 +514,8 @@ class Heta:
             try:
                 with WorkerPool(task, num_workers=pcfg.num_workers,
                                 depth=pcfg.depth, num_items=n,
-                                name="eval-pool") as pool:
+                                name="eval-pool",
+                                **self._supervision_kw(arena)) as pool:
                     # the stream resolves arena SlotRefs (and passes legacy
                     # tuples through); eval consumes raw batches, so the
                     # consumer-side completion is a no-op
@@ -591,6 +607,12 @@ class Heta:
             max_queue=scfg.max_queue, cache_mb=scfg.cache_mb,
             kernels=self.config.kernels, mesh=mesh,
             readmit_every=scfg.readmit_every,
+            deadline_ms=scfg.deadline_ms,
+            flush_retries=scfg.flush_retries,
+            retry_backoff_ms=scfg.retry_backoff_ms,
+            breaker_threshold=scfg.breaker_threshold,
+            breaker_cooldown_ms=scfg.breaker_cooldown_ms,
+            faults=self.fault_plan,
         )
         kw.update(overrides)
         self._server = EmbeddingServer(self.embedding_store, **kw)
@@ -619,6 +641,161 @@ class Heta:
         if self.state is None:
             self.compile()
         return self.fit()
+
+    # -- checkpoint / resume (DESIGN.md §12) ------------------------------------
+
+    def config_fingerprint(self) -> str:
+        """sha256 over the canonical config dict — stamped into every
+        checkpoint manifest so :meth:`restore` refuses state trained under
+        a different configuration."""
+        import hashlib
+        import json
+
+        blob = json.dumps(self.config.to_dict(), sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    def _ckpt_tree(self) -> Dict:
+        """The checkpointable pytree: executor state (param stacks +
+        optimizer), learnable embed tables + Adam rows + step counters,
+        readmission EMA, and the cache-residency profile."""
+        snap = self.engine.state_snapshot()
+        return {
+            "state": self.state,
+            "embed": {
+                "tables": snap["tables"],
+                "m": snap["m"],
+                "v": snap["v"],
+                "steps": {t: np.int64(s) for t, s in snap["steps"].items()},
+                "hotness_ema": snap["hotness_ema"],
+                "residency": {t: np.asarray(ids, np.int64)
+                              for t, ids in snap["residency"].items()},
+            },
+        }
+
+    def save(self, directory: Optional[str] = None, name: str = "ckpt") -> str:
+        """Atomically checkpoint the full session state at the current step.
+
+        Written via :func:`repro.checkpoint.save_checkpoint` (npz tmp +
+        rename, then manifest rename as the commit point; per-array sha256
+        hashes).  The manifest's ``extra`` records the config fingerprint,
+        the sampler position ``(steps_done, epoch_seed, step_in_epoch)``
+        and the run seed, so :meth:`restore` resumes the loss trajectory
+        bit-for-bit.  ``directory`` defaults to ``checkpoint.dir``."""
+        from repro.checkpoint import save_checkpoint
+
+        self._require("state", "compile", "save")
+        directory = directory or self.config.checkpoint.dir
+        if directory is None:
+            raise ValueError(
+                "save() needs a directory (argument or checkpoint.dir config)")
+        step = self._steps_done
+        epoch_seed, idx = self._schedule().seed_and_index(step)
+        extra = {
+            "fingerprint": self.config_fingerprint(),
+            "steps_done": step,
+            "epoch_seed": int(epoch_seed),
+            "step_in_epoch": int(idx),
+            "seed": int(self.config.run.seed),
+        }
+        path = save_checkpoint(directory, step, self._ckpt_tree(),
+                               name=name, extra=extra)
+        self._prune_checkpoints(directory, name)
+        return path
+
+    def restore(self, directory: Optional[str] = None,
+                step: Optional[int] = None, name: str = "ckpt") -> int:
+        """Load a committed checkpoint and position the session at its step.
+
+        Runs any missing pipeline stages first (the restored arrays load
+        into freshly-compiled templates), verifies the config fingerprint
+        and every array's content hash (:class:`CheckpointError` on any
+        mismatch or torn write), and realigns the sampler so the next
+        ``fit``/``step`` continues the interrupted run's loss trajectory
+        bit-for-bit.  Returns the restored step."""
+        from repro.checkpoint import (CheckpointError, latest_step,
+                                      load_checkpoint, read_manifest)
+
+        directory = directory or self.config.checkpoint.dir
+        if directory is None:
+            raise ValueError(
+                "restore() needs a directory (argument or checkpoint.dir)")
+        if step is None:
+            step = latest_step(directory, name)
+            if step is None:
+                raise CheckpointError(
+                    f"no committed checkpoint found in {directory!r}")
+        if self.graph is None:
+            self.build_graph()
+        if self.spec is None:
+            self.partition()
+        if self.engine is None:
+            self.profile_and_cache()
+        if self.state is None:
+            self.compile()
+        manifest = read_manifest(directory, step, name)
+        extra = manifest.get("extra", {})
+        fp = extra.get("fingerprint")
+        if fp and fp != self.config_fingerprint():
+            raise CheckpointError(
+                f"checkpoint at step {step} was written under a different "
+                f"HetaConfig (fingerprint {fp[:12]}… != "
+                f"{self.config_fingerprint()[:12]}…)")
+        template = self._ckpt_tree()
+        # residency sets change size across rebalances: template shapes for
+        # them come from the manifest, not from the session's current cache
+        template["embed"]["residency"] = {
+            key.split("/", 2)[2]: np.zeros(tuple(manifest["shapes"][key]),
+                                           np.int64)
+            for key in manifest.get("keys", [])
+            if key.startswith("embed/residency/")
+        }
+        tree = load_checkpoint(directory, step, template, name=name)
+        self.state = tree["state"]
+        emb = tree["embed"]
+        self.engine.load_state({
+            "tables": emb["tables"],
+            "m": emb["m"],
+            "v": emb["v"],
+            "steps": {t: int(s) for t, s in emb["steps"].items()},
+            "hotness_ema": emb["hotness_ema"],
+            "residency": emb["residency"],
+        })
+        self._steps_done = int(extra.get("steps_done", step))
+        # the persistent pool (if any) is positioned at the pre-restore
+        # step; tear it down so the next fit respawns aligned
+        self.close_pipeline()
+        return step
+
+    def _maybe_checkpoint(self) -> None:
+        """Periodic checkpointing: every ``checkpoint.every_steps`` consumed
+        steps, :meth:`save` to ``checkpoint.dir`` (both config-driven)."""
+        c = self.config.checkpoint
+        if (c.every_steps > 0 and self._steps_done > 0
+                and self._steps_done % c.every_steps == 0):
+            self.save(c.dir)
+
+    def _prune_checkpoints(self, directory: str, name: str) -> None:
+        """Keep only the newest ``checkpoint.keep`` committed checkpoints
+        (0 = keep everything)."""
+        import os
+        import re
+
+        keep = self.config.checkpoint.keep
+        if keep <= 0:
+            return
+        steps = sorted(
+            int(m.group(1))
+            for f in os.listdir(directory)
+            if (m := re.fullmatch(rf"{name}_(\d+)\.npz", f))
+            and os.path.exists(os.path.join(directory, f + ".json"))
+        )
+        for s in steps[:-keep]:
+            base = os.path.join(directory, f"{name}_{s:08d}.npz")
+            for p in (base, base + ".json"):
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
 
     def results(self) -> Dict:
         """The legacy ``train_hgnn`` result dict."""
@@ -709,9 +886,11 @@ class Heta:
         store, arena, task = self._pool_task(
             self._schedule(start_step), self.config.run.seed + 1,
             recipe=self.executor.worker_stage_recipe(self, self.plan),
+            faults=self.fault_plan,
         )
         pool = WorkerPool(task, num_workers=pcfg.num_workers,
-                          depth=pcfg.depth, num_items=None)
+                          depth=pcfg.depth, num_items=None,
+                          **self._supervision_kw(arena))
         self._pool_cache = [store, arena, pool, start_step, pcfg.num_workers]
         if self._pool_atexit_cb is None:
             # scripts that train and simply exit must not leave the store
@@ -758,7 +937,20 @@ class Heta:
                 if arena is not None:
                     arena.unlink()
 
-    def _pool_task(self, schedule, sampler_seed: int, recipe=None):
+    def _supervision_kw(self, arena) -> Dict:
+        """WorkerPool supervision kwargs from ``FaultConfig`` (DESIGN.md
+        §12): restart budget, backoff, and the death hook that poisons the
+        dead worker's arena sub-ring so stale ``SlotRef``\\ s fail loudly
+        before the replacement replays the stripe."""
+        fcfg = self.config.faults
+        kw = dict(max_restarts=fcfg.max_worker_restarts,
+                  restart_backoff_s=fcfg.worker_backoff_s)
+        if arena is not None:
+            kw["on_worker_death"] = arena.invalidate_worker_slots
+        return kw
+
+    def _pool_task(self, schedule, sampler_seed: int, recipe=None,
+                   faults=None):
         """Shared-memory graph store, batch arena and picklable sampling
         task for a worker pool following ``schedule`` (the caller owns
         both: ``_acquire_pool`` parks them in ``_pool_cache``, ``evaluate``
@@ -804,6 +996,8 @@ class Heta:
             schedule=schedule,
             recipe=recipe,
             arena=arena.handle if arena is not None else None,
+            faults=faults,
+            write_timeout_s=self.config.faults.arena_write_timeout_s,
         )
         return store, arena, task
 

@@ -1,3 +1,6 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.ckpt import (CheckpointError, latest_step,
+                                   load_checkpoint, read_manifest,
+                                   save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "read_manifest", "CheckpointError"]

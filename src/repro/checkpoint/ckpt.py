@@ -3,69 +3,175 @@
 Each host saves the addressable shards of its arrays (single-host here, so
 everything), keyed by the pytree path.  Restore rebuilds the tree and
 device_puts with the provided shardings.  No external deps (no orbax).
+
+Durability contract (DESIGN.md §12): a checkpoint is *committed* by the
+rename of its manifest — the npz payload is written to a temp file and
+renamed first, then the manifest (temp + rename) last, so a crash at any
+point leaves either a complete (npz, manifest) pair or junk that
+:func:`latest_step` ignores.  The manifest records, per array, the shape,
+the *logical* dtype (bf16, even though npz stores a ``uint16`` view), the
+*stored* dtype, and a sha256 content hash; :func:`load_checkpoint`
+verifies all of them and raises :class:`CheckpointError` on any corrupt,
+truncated, or manifest-less checkpoint rather than restoring garbage.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
+import zipfile
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "CheckpointError"]
+
+_MANIFEST_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, partial, or fails integrity verification."""
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    """Flatten to {path-key: stored array}; bf16 leaves become uint16 views
+    (npz cannot store bf16 — the manifest keeps the logical dtype)."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         arr = np.asarray(leaf)
-        if arr.dtype == jax.numpy.bfloat16:  # npz cannot store bf16
+        if arr.dtype == jax.numpy.bfloat16:
             arr = arr.view(np.uint16)
-        flat[key] = arr
+        flat[_path_key(path)] = arr
     return flat
 
 
-def save_checkpoint(directory: str, step: int, tree: Any, name: str = "ckpt") -> str:
+def _logical_dtypes(tree: Any) -> Dict[str, str]:
+    return {
+        _path_key(path): str(np.asarray(leaf).dtype)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+    }
+
+
+def _sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, name: str = "ckpt",
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomically write one checkpoint; returns the npz path.
+
+    ``extra`` is a small JSON-able dict stored verbatim in the manifest
+    (session metadata: config fingerprint, sampler position, RNG)."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
     flat = _flatten(tree)
-    np.savez(path, **flat)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:  # file object: savez can't mangle the name
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
     manifest = {
+        "version": _MANIFEST_VERSION,
         "step": step,
         "keys": sorted(flat),
         "shapes": {k: list(v.shape) for k, v in flat.items()},
-        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "dtypes": _logical_dtypes(tree),
+        "stored_dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "sha256": {k: _sha256(v) for k, v in flat.items()},
+        "extra": extra or {},
     }
-    with open(path + ".json", "w") as f:
+    mtmp = path + ".json.tmp"
+    with open(mtmp, "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(mtmp, path + ".json")  # the commit point
     return path
 
 
 def latest_step(directory: str, name: str = "ckpt") -> Optional[int]:
+    """The newest *committed* step: an npz whose manifest also exists."""
     if not os.path.isdir(directory):
         return None
     steps = [
         int(m.group(1))
         for f in os.listdir(directory)
         if (m := re.fullmatch(rf"{name}_(\d+)\.npz", f))
+        and os.path.exists(os.path.join(directory, f + ".json"))
     ]
     return max(steps) if steps else None
 
 
-def load_checkpoint(directory: str, step: int, template: Any, name: str = "ckpt") -> Any:
-    """Restore into the structure of ``template`` (shapes must match)."""
+def read_manifest(directory: str, step: int, name: str = "ckpt") -> Dict:
+    path = os.path.join(directory, f"{name}_{step:08d}.npz.json")
+    if not os.path.exists(path):
+        raise CheckpointError(f"checkpoint manifest missing: {path}")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError) as exc:
+        raise CheckpointError(f"unreadable manifest {path}: {exc}") from exc
+
+
+def load_checkpoint(directory: str, step: int, template: Any,
+                    name: str = "ckpt", verify: bool = True) -> Any:
+    """Restore into the structure of ``template`` (shapes must match).
+
+    The manifest drives dtype restoration — a bf16 array stored as uint16
+    comes back bf16 even when the template leaf has a different dtype —
+    and (with ``verify``, the default) every array's sha256 is checked, so
+    a torn or bit-rotten payload raises :class:`CheckpointError`."""
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
-    data = np.load(path)
+    manifest = read_manifest(directory, step, name)
+    if not os.path.exists(path):
+        raise CheckpointError(f"checkpoint payload missing: {path}")
+    try:
+        data = np.load(path)
+    except (OSError, ValueError, zipfile.BadZipFile) as exc:
+        raise CheckpointError(f"unreadable checkpoint {path}: {exc}") from exc
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    want = {_path_key(p) for p, _ in leaves_with_path}
+    have = set(manifest.get("keys", []))
+    if want != have:
+        raise CheckpointError(
+            f"checkpoint {path} key mismatch: template-only="
+            f"{sorted(want - have)[:4]} checkpoint-only={sorted(have - want)[:4]}")
+    dtypes = manifest.get("dtypes", {})
+    hashes = manifest.get("sha256", {})
     out = []
     for p, leaf in leaves_with_path:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
-        arr = data[key]
-        if np.asarray(leaf).dtype == jax.numpy.bfloat16:
+        key = _path_key(p)
+        try:
+            arr = data[key]
+        except KeyError:
+            raise CheckpointError(
+                f"checkpoint {path} payload missing array {key!r} "
+                f"(torn write?)") from None
+        except (OSError, ValueError, zipfile.BadZipFile) as exc:
+            raise CheckpointError(
+                f"checkpoint {path} array {key!r} unreadable: {exc}") from exc
+        shape = manifest.get("shapes", {}).get(key)
+        if shape is not None and list(arr.shape) != shape:
+            raise CheckpointError(
+                f"checkpoint {path} array {key!r}: stored shape "
+                f"{list(arr.shape)} != manifest {shape}")
+        if verify and key in hashes and _sha256(arr) != hashes[key]:
+            raise CheckpointError(
+                f"checkpoint {path} array {key!r} failed sha256 verification")
+        logical = dtypes.get(key)
+        if logical == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16)
+        elif logical is None and np.asarray(leaf).dtype == jax.numpy.bfloat16:
+            # pre-v2 manifest: fall back to the template's dtype
             arr = arr.view(jax.numpy.bfloat16)
         if hasattr(leaf, "sharding"):
             arr = jax.device_put(arr, leaf.sharding)

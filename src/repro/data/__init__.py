@@ -84,6 +84,7 @@ from repro.data.staging import (
     stack_batch_host,
     unpack_slot,
 )
+from repro.data.faults import FaultPlan, FaultSpec, InjectedFault
 from repro.data.worker_pool import (
     EpochSchedule,
     HotnessCountTask,
@@ -103,6 +104,9 @@ __all__ = [
     "arena_fields",
     "pack_batch_into",
     "unpack_slot",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
     "EpochSchedule",
     "HotnessCountTask",
     "SampleStageTask",

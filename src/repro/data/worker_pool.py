@@ -21,6 +21,19 @@ one CPU core; this module lifts the host pipeline onto N worker *processes*:
     after the pool shuts down; a worker that dies without a word raises
     :class:`WorkerDiedError`.  ``close()`` is idempotent, drains the queues,
     joins every process, and terminates stragglers.
+  * **supervision** (DESIGN.md §12) — with ``max_restarts > 0`` a silent
+    death (SIGKILL, OOM, ``os._exit``) is *survived* instead: the consumer
+    detects it at the exact stripe position the dead worker owed
+    (``__next__`` only ever blocks on queue ``i % W``), discards the dead
+    worker's queue (any undelivered ``SlotRef`` in it is stale), invokes
+    ``on_worker_death`` (the session poisons the worker's arena sub-ring
+    there so stale refs fail loudly), and respawns a replacement that
+    replays the stripe from that position — tasks are pure functions of
+    the item index, so the replayed items are bit-identical and the
+    consumer-visible stream is indistinguishable from a faultless run.
+    Respawn ``r`` of a worker backs off ``restart_backoff_s * 2**r``
+    first; once a worker exhausts the budget, :class:`WorkerDiedError`
+    carries the exit code and the last stripe index it delivered.
 
 Workers are **spawned** (never forked — the parent owns jax threads) and
 deliberately jax-free: a :class:`SampleStageTask` imports only numpy-level
@@ -37,7 +50,7 @@ import queue as _queue
 import sys
 import time
 import traceback
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 __all__ = [
     "WorkerPool",
@@ -118,20 +131,30 @@ def _picklable_failure(exc: BaseException) -> _Failure:
 
 
 def _worker_main(task, wid: int, num_workers: int,
-                 num_items: Optional[int], q, stop) -> None:
-    """Entry point of one spawned worker: setup, stripe loop, teardown."""
+                 num_items: Optional[int], q, stop,
+                 start_item: Optional[int] = None, attempt: int = 0) -> None:
+    """Entry point of one spawned worker: setup, stripe loop, teardown.
+
+    ``start_item`` (default ``wid``) is where the stripe loop begins —
+    the supervisor respawns a replacement at the consumer's next
+    undelivered index so the stripe replays deterministically.
+    ``attempt`` counts this worker slot's incarnations (0 = original);
+    tasks with fault plans consult it so scheduled faults fire once."""
     try:
         # tasks that block outside the queues (the arena's backpressure
         # gate) need the stop event to exit promptly on pool shutdown
         bind = getattr(task, "bind_stop", None)
         if bind is not None:
             bind(stop)
+        bind_w = getattr(task, "bind_worker", None)
+        if bind_w is not None:
+            bind_w(wid, attempt)
         task.setup()
     except BaseException as exc:  # noqa: BLE001 — delivered to the consumer
         _put(q, stop, _picklable_failure(exc))
         return
     try:
-        i = wid
+        i = wid if start_item is None else start_item
         while not stop.is_set() and (num_items is None or i < num_items):
             item = task(i)
             if not _put(q, stop, item):
@@ -155,6 +178,14 @@ class WorkerPool:
     worker), ``__call__(i)`` (the item for global index ``i``), and
     ``teardown()`` (best-effort, at exit).  Iterator + context manager;
     items come back strictly in index order.
+
+    ``max_restarts`` arms supervision (see module docstring): each worker
+    slot may be respawned that many times after a silent death, with
+    exponential backoff from ``restart_backoff_s``; ``on_worker_death(wid)``
+    runs in the consumer before each respawn (arena slot invalidation).
+    ``restarts`` records one event dict per respawn —
+    ``{"wid", "item", "exitcode", "attempt", "downtime_s"}`` — the
+    recovery-time figure ``benchmarks/fault_drill.py`` reports.
     """
 
     def __init__(
@@ -164,6 +195,9 @@ class WorkerPool:
         depth: int = 2,
         num_items: Optional[int] = None,
         name: str = "sampler-pool",
+        max_restarts: int = 0,
+        restart_backoff_s: float = 0.05,
+        on_worker_death=None,
     ):
         if num_workers < 1:
             raise ValueError(f"num_workers must be >= 1, got {num_workers}")
@@ -171,9 +205,20 @@ class WorkerPool:
             raise ValueError(f"depth must be >= 1, got {depth}")
         if num_items is not None and num_items < 0:
             raise ValueError(f"num_items must be >= 0, got {num_items}")
+        if max_restarts < 0:
+            raise ValueError(f"max_restarts must be >= 0, got {max_restarts}")
         ctx = mp.get_context("spawn")
         self.num_workers = num_workers
         self.num_items = num_items
+        self.max_restarts = max_restarts
+        self.restart_backoff_s = restart_backoff_s
+        self.on_worker_death = on_worker_death
+        self.restarts: List[Dict] = []  # one event dict per respawn
+        self._ctx = ctx
+        self._task = task
+        self._depth = depth
+        self._name = name
+        self._restart_counts = [0] * num_workers
         self._stop = ctx.Event()
         self._queues = [ctx.Queue(maxsize=depth) for _ in range(num_workers)]
         self._procs = []
@@ -207,8 +252,8 @@ class WorkerPool:
         if self._done:
             raise StopIteration
         w = self._next % self.num_workers
-        q, proc = self._queues[w], self._procs[w]
         while True:
+            q, proc = self._queues[w], self._procs[w]
             try:
                 item = q.get(timeout=_POLL_S)
                 break
@@ -219,10 +264,17 @@ class WorkerPool:
                         item = q.get(timeout=_POLL_S)
                         break
                     except _queue.Empty:
+                        if self._restart_counts[w] < self.max_restarts:
+                            self._respawn(w, proc.exitcode)
+                            continue
+                        last = self._next - self.num_workers
                         self.close()
                         raise WorkerDiedError(
                             f"worker {w} exited (code {proc.exitcode}) without "
-                            f"delivering item {self._next}"
+                            f"delivering item {self._next} (last stripe index "
+                            f"delivered: {last if last >= 0 else None}; "
+                            f"restarts used: {self._restart_counts[w]}/"
+                            f"{self.max_restarts})"
                         ) from None
         if isinstance(item, _Done):
             # stripes interleave: worker w done at position i means every
@@ -237,6 +289,58 @@ class WorkerPool:
             raise item.exc
         self._next += 1
         return item
+
+    # -- supervision ---------------------------------------------------------
+
+    def _respawn(self, w: int, exitcode) -> None:
+        """Replace silently-dead worker ``w``, replaying from ``self._next``.
+
+        The dead worker's queue is discarded wholesale: per-producer FIFO
+        means item ``self._next`` missing implies nothing later from this
+        stripe is trustworthy either, and a late-arriving stale ``SlotRef``
+        would shift the stream.  ``on_worker_death`` runs *before* the
+        replacement spawns so the session can poison the worker's arena
+        sub-ring first (DESIGN.md §12)."""
+        t0 = time.monotonic()
+        r = self._restart_counts[w]
+        self._restart_counts[w] = r + 1
+        if self.restart_backoff_s > 0:
+            time.sleep(min(self.restart_backoff_s * (2 ** r), 5.0))
+        # discard the dead worker's queue (stale refs) and give the
+        # replacement a fresh one
+        old_q = self._queues[w]
+        try:
+            while True:
+                old_q.get_nowait()
+        except (_queue.Empty, OSError, ValueError):
+            pass
+        try:
+            old_q.cancel_join_thread()
+            old_q.close()
+        except BaseException:
+            pass
+        if self.on_worker_death is not None:
+            self.on_worker_death(w)
+        self._queues[w] = self._ctx.Queue(maxsize=self._depth)
+        old_p = self._procs[w]
+        with _spawnable_main():
+            p = self._ctx.Process(
+                target=_worker_main,
+                args=(self._task, w, self.num_workers, self.num_items,
+                      self._queues[w], self._stop, self._next, r + 1),
+                name=f"{self._name}-{w}-r{r + 1}",
+                daemon=True,
+            )
+            p.start()
+        self._procs[w] = p
+        old_p.join(timeout=1.0)
+        self.restarts.append({
+            "wid": w,
+            "item": self._next,
+            "exitcode": exitcode,
+            "attempt": r + 1,
+            "downtime_s": time.monotonic() - t0,
+        })
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -347,6 +451,16 @@ class SampleStageTask:
     stream's payload; with an :class:`~repro.graph.shm.ArenaHandle` the
     arrays are written straight into the item's ring slot and only a
     :class:`SlotRef` crosses the queue (zero pickled ndarrays).
+
+    ``faults`` (a :class:`~repro.data.faults.FaultPlan`, or None) arms
+    deterministic chaos drills: a scheduled ``kill_worker`` exits the
+    process with :data:`~repro.data.faults.KILL_EXIT_CODE` before the item
+    is produced, ``raise_item`` raises
+    :class:`~repro.data.faults.InjectedFault`, and ``poison_slot`` corrupts
+    the slot stamp after a completed write.  ``write_timeout_s`` bounds the
+    arena backpressure wait — a dead consumer raises
+    :class:`~repro.graph.shm.ArenaStalledError` instead of hanging the
+    worker forever (DESIGN.md §12).
     """
 
     handle: object  # repro.graph.shm.GraphHandle
@@ -356,11 +470,19 @@ class SampleStageTask:
     schedule: EpochSchedule
     recipe: object = None
     arena: object = None  # repro.graph.shm.ArenaHandle
+    faults: object = None  # repro.data.faults.FaultPlan
+    write_timeout_s: float = 60.0
 
     def bind_stop(self, stop) -> None:
         """Called by the pool runner so the arena backpressure wait can
         observe shutdown."""
         self._stop = stop
+
+    def bind_worker(self, wid: int, attempt: int) -> None:
+        """Called by the pool runner: this incarnation's identity, consulted
+        by the fault plan so scheduled faults fire deterministically."""
+        self._wid = wid
+        self._attempt = attempt
 
     def setup(self) -> None:
         from repro.graph.sampler import NeighborSampler
@@ -383,6 +505,17 @@ class SampleStageTask:
                                         stack_batch_host)
 
         t0 = time.perf_counter()
+        if self.faults is not None and self.faults:
+            from repro.data.faults import KILL_EXIT_CODE, InjectedFault
+
+            wid = getattr(self, "_wid", 0)
+            attempt = getattr(self, "_attempt", 0)
+            if self.faults.kill_at(wid, attempt, i):
+                os._exit(KILL_EXIT_CODE)  # a silent death: no queue message
+            if self.faults.raise_at(wid, attempt, i):
+                raise InjectedFault(
+                    f"scheduled raise_item fault at item {i} "
+                    f"(worker {wid}, attempt {attempt})")
         epoch_seed, idx = self.schedule.seed_and_index(i)
         batch = self._sampler.batch_at(
             idx, epoch_seed=epoch_seed, shuffle=self.schedule.shuffle)
@@ -397,8 +530,17 @@ class SampleStageTask:
         slot, use = a.handle.slot_for(i)
         # backpressure: the sub-ring is full until the consumer releases
         # this slot's previous generation
-        if not a.wait_writable(slot, use, stop=getattr(self, "_stop", None)):
-            return None  # pool is stopping; the queue put will abort too
+        stop = getattr(self, "_stop", None)
+        if not a.wait_writable(slot, use, stop=stop,
+                               timeout=self.write_timeout_s):
+            if stop is not None and stop.is_set():
+                return None  # pool is stopping; the queue put will abort too
+            from repro.graph.shm import ArenaStalledError
+
+            raise ArenaStalledError(
+                f"arena slot {slot} (use {use}) not writable after "
+                f"{self.write_timeout_s:.1f}s — consumer dead or wedged "
+                f"(DESIGN.md §12)")
         table_version = 0
         a.begin_write(slot, use)
         try:
@@ -413,6 +555,9 @@ class SampleStageTask:
                                  out=views, prefix=HOST_PREFIX)
         finally:
             a.end_write(slot, use)
+        if self.faults is not None and self.faults and self.faults.poison_at(
+                getattr(self, "_wid", 0), getattr(self, "_attempt", 0), i):
+            a.poison_slot(slot)
         return SlotRef(step=i, slot=slot, use=use,
                        host_s=time.perf_counter() - t0,
                        table_version=table_version,

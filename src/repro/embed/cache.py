@@ -396,6 +396,58 @@ class FeatureCache:
             }
         return moves
 
+    # -- checkpoint support (DESIGN.md §12) ------------------------------------
+
+    def merged_learnable_state(self):
+        """(tables, m, v): per learnable type, the host array with cached
+        rows merged in — the coherent full-table state a checkpoint stores.
+        Caller must hold the engine's table lock."""
+        tables, m, v = {}, {}, {}
+        for t in self.learnable:
+            tab = self.host[t].copy()
+            mm = self.host_m[t].copy()
+            vv = self.host_v[t].copy()
+            c = self.caches.get(t)
+            if c is not None:
+                tab[c.ids] = np.asarray(c.data)
+                if c.m is not None:
+                    mm[c.ids] = np.asarray(c.m)
+                    vv[c.ids] = np.asarray(c.v)
+            tables[t], m[t], v[t] = tab, mm, vv
+        return tables, m, v
+
+    def residency(self) -> Dict[str, np.ndarray]:
+        """ntype -> cached node ids (the §6 residency profile)."""
+        return {t: c.ids.copy() for t, c in self.caches.items()}
+
+    def set_residency(self, ids_by_type: Dict[str, np.ndarray]) -> None:
+        """Rebuild every per-type cache to exactly these resident ids,
+        sourcing row data (and Adam states) from the host tables — restore
+        path only: callers must have written authoritative full tables to
+        host first (:meth:`merged_learnable_state` inverse).  Caller holds
+        the engine's table lock."""
+        for t in list(self.caches):
+            if t not in ids_by_type:
+                del self.caches[t]
+        for t, ids in ids_by_type.items():
+            if t not in self.host:
+                continue
+            ids = np.asarray(ids, np.int64)
+            slot_of = np.full(self.host[t].shape[0], -1, dtype=np.int64)
+            slot_of[ids] = np.arange(len(ids))
+            learn = t in self.learnable
+            old = self.caches.get(t)
+            self.caches[t] = _TypeCache(
+                ids=ids,
+                slot_of=slot_of,
+                data=jnp.asarray(self.host[t][ids]),
+                m=jnp.asarray(self.host_m[t][ids]) if learn else None,
+                v=jnp.asarray(self.host_v[t][ids]) if learn else None,
+                shard_of=ids % self.num_shards,
+                hits=old.hits if old is not None else 0,
+                misses=old.misses if old is not None else 0,
+            )
+
     # -- stats ----------------------------------------------------------------
 
     def hit_rates(self) -> Dict[str, float]:

@@ -131,6 +131,51 @@ class EmbedEngine:
             self.steps[ntype] += 1
             self.cache.write_learnable(ntype, uniq, new_rows, new_m, new_v)
 
+    # -- checkpoint support (DESIGN.md §12) -------------------------------------
+
+    def state_snapshot(self) -> Dict[str, object]:
+        """The engine's restorable state: per learnable type the coherent
+        full table + Adam moments (cached rows merged in), per-type Adam
+        step counters, the online-readmission hotness EMA, and the cache
+        residency profile.  Atomic w.r.t. concurrent ``apply_row_grads``."""
+        with self.lock:
+            tables, m, v = self.cache.merged_learnable_state()
+            return {
+                "tables": tables,
+                "m": m,
+                "v": v,
+                "steps": {t: int(s) for t, s in self.steps.items()},
+                "hotness_ema": {t: e.copy()
+                                for t, e in self._hotness_ema.items()},
+                "residency": self.cache.residency(),
+            }
+
+    def load_state(self, state: Dict[str, object]) -> None:
+        """Inverse of :meth:`state_snapshot`: write the full tables home,
+        then re-gather cached rows from host — bit-exact, because the
+        merged snapshot *was* the authoritative value of every row."""
+        with self.lock:
+            for t in self.learnable_types:
+                self.cache.host[t][:] = state["tables"][t]
+                self.cache.host_m[t][:] = state["m"][t]
+                self.cache.host_v[t][:] = state["v"][t]
+            res = state.get("residency")
+            if res is not None:
+                self.cache.set_residency(res)
+            else:  # keep current residency; refresh cached learnable rows
+                for t in self.learnable_types:
+                    c = self.cache.caches.get(t)
+                    if c is not None:
+                        c.data = jnp.asarray(self.cache.host[t][c.ids])
+                        c.m = jnp.asarray(self.cache.host_m[t][c.ids])
+                        c.v = jnp.asarray(self.cache.host_v[t][c.ids])
+            for t, s in state.get("steps", {}).items():
+                if t in self.steps:
+                    self.steps[t] = int(s)
+            for t, e in state.get("hotness_ema", {}).items():
+                if t in self._hotness_ema:
+                    self._hotness_ema[t][:] = np.asarray(e)
+
     # -- online penalty-aware re-admission (paper §6, observed traffic) ---------
 
     def rebalance(self, decay: float = 0.5) -> Dict[str, object]:

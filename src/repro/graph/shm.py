@@ -61,9 +61,11 @@ __all__ = [
     "ArenaHandle",
     "BatchArena",
     "AttachedArena",
+    "ArenaStalledError",
     "create_arena",
     "attach_arena",
     "live_segments",
+    "cleanup_stale_segments",
 ]
 
 _ALIGN = 64  # byte alignment of each array inside the segment
@@ -487,6 +489,22 @@ def attach_arrays(handle: ArraysHandle) -> AttachedArrays:
 
 _CTRL_WORDS = 2  # per-slot control: [write_seq, release_seq]
 
+# write_seq value stamped by invalidate_worker_slots: odd (so resolve()
+# rejects it as torn) and impossibly large (so it can never collide with a
+# live generation's 2*use+1) — any SlotRef that still points at the slot
+# fails loudly instead of reading a dead worker's half-written payload
+_POISON_SEQ = (1 << 63) | 1
+
+
+class ArenaStalledError(RuntimeError):
+    """An arena writer's backpressure poll timed out (DESIGN.md §12).
+
+    The release gate (`release_seq >= use`) is consumer-driven; if the
+    consumer process dies without setting the pool stop event, a worker
+    blocked on a full sub-ring would spin forever.  The bounded wait turns
+    that hang into this error, so the worker exits and the death is
+    observable."""
+
 
 @dataclasses.dataclass(frozen=True)
 class ArenaHandle:
@@ -576,6 +594,10 @@ class _ArenaOps:
         The descriptor arrives on the queue strictly after ``end_write``, so
         an odd/short ``write_seq`` here is a protocol violation, not a race."""
         seq = int(self._ctrl[slot, 0])
+        if seq == _POISON_SEQ:
+            raise RuntimeError(
+                f"arena slot {slot} generation {use}: slot was invalidated "
+                "after its writer died (stale SlotRef; DESIGN.md §12)")
         if seq != 2 * use + 2:
             raise RuntimeError(
                 f"arena slot {slot} generation {use}: write_seq={seq}, "
@@ -586,6 +608,30 @@ class _ArenaOps:
         """Consumer side: hand generation ``use`` of ``slot`` back to its
         writer.  Call only once every view of the slot is dead."""
         self._ctrl[slot, 1] = use + 1
+
+    def poison_slot(self, slot: int) -> None:
+        """Stamp one slot's ``write_seq`` torn (fault injection; the slot
+        heals on the next ``begin_write``/``end_write`` pair)."""
+        self._ctrl[slot, 0] = _POISON_SEQ
+
+    def invalidate_worker_slots(self, wid: int) -> None:
+        """Poison the ``write_seq`` of worker ``wid``'s whole sub-ring
+        (DESIGN.md §12 slot-invalidation rule).
+
+        Called by the pool supervisor before respawning a dead worker: a
+        crashed writer may have left any of its slots mid-write (odd seq)
+        or stamped-complete-but-undelivered.  Stamping every slot with the
+        poison generation makes any stale :class:`SlotRef` fail loudly in
+        :meth:`resolve` instead of silently yielding a torn or duplicated
+        payload; the replacement worker's own ``begin_write``/``end_write``
+        restores valid stamps as it deterministically replays the stripe.
+        ``release_seq`` is consumer-owned and left untouched — the
+        replacement writer still honors the normal backpressure gate."""
+        if not 0 <= wid < self.handle.stride:
+            raise ValueError(
+                f"wid must be in [0, {self.handle.stride}), got {wid}")
+        d = self.handle.depth
+        self._ctrl[wid * d:(wid + 1) * d, 0] = _POISON_SEQ
 
     # -- staging-table region ---------------------------------------------
 
@@ -771,3 +817,53 @@ def live_segments(prefix: str = SEGMENT_PREFIX) -> List[str]:
         return sorted(n for n in os.listdir("/dev/shm") if n.startswith(prefix))
     except FileNotFoundError:
         return []
+
+
+def _segment_owner_pid(name: str) -> Optional[int]:
+    """Parse the creator pid encoded in a ``heta-shm-<pidhex>-<token>``
+    segment name (None when the name doesn't follow the convention)."""
+    rest = name[len(SEGMENT_PREFIX):]
+    pid_hex, sep, _ = rest.partition("-")
+    if not sep or not pid_hex:
+        return None
+    try:
+        return int(pid_hex, 16)
+    except ValueError:
+        return None
+
+
+def cleanup_stale_segments(prefix: str = SEGMENT_PREFIX) -> List[str]:
+    """Unlink orphaned ``/dev/shm`` segments whose creator is dead
+    (the shm janitor; DESIGN.md §12).
+
+    Every segment this package creates embeds its creator's pid in the
+    name (``heta-shm-<pidhex>-<token>``).  A hard-crashed owner — SIGKILL,
+    OOM — never runs ``unlink()``, and when the crash takes the
+    ``resource_tracker`` down with it nothing reclaims the segment: the
+    leak survives until reboot.  This sweep runs at session start
+    (``Heta.build_graph``; also ``launch/train.py --shm-cleanup``): any
+    segment under ``prefix`` whose named creator no longer exists is
+    unlinked.  Conservative by construction — a live pid (even a recycled
+    one), an unparsable name, or this process's own segments are skipped,
+    so a concurrent healthy run is never touched.  Returns the names
+    removed."""
+    removed: List[str] = []
+    for name in live_segments(prefix):
+        pid = _segment_owner_pid(name)
+        if pid is None or pid == os.getpid():
+            continue
+        try:
+            os.kill(pid, 0)
+            continue  # creator alive: not ours to reap
+        except ProcessLookupError:
+            pass
+        except PermissionError:
+            continue  # pid exists under another uid
+        try:
+            os.unlink(os.path.join("/dev/shm", name))
+            removed.append(name)
+        except FileNotFoundError:
+            pass  # lost the race to another janitor
+        except OSError:
+            pass  # best-effort: never fail session start over a sweep
+    return removed

@@ -74,7 +74,16 @@ def main():
                     help="legacy alias for --placement naive")
     ap.add_argument("--hotness-only", action="store_true",
                     help="legacy alias for --cache-policy hotness")
+    ap.add_argument("--shm-cleanup", action="store_true",
+                    help="sweep orphaned /dev/shm graph segments left by "
+                         "crashed runs, then train as usual")
     args = ap.parse_args()
+    if args.shm_cleanup:
+        from repro.graph.shm import cleanup_stale_segments
+
+        removed = cleanup_stale_segments()
+        print(f"shm-cleanup: removed {len(removed)} stale segment(s)"
+              + ("".join(f"\n  {n}" for n in removed)))
     cfg = config_from_args(args)
     if cfg.run.executor not in executors.available():
         ap.error(f"unknown --executor {cfg.run.executor!r}; "

@@ -17,6 +17,18 @@ rows with a jitted ``relu(e) @ W + b`` step placed on the serving mesh
 (``make_production_mesh`` in production; any mesh — or none — in tests).
 The cache fronts the store's host arrays (which may be a zero-copy shm
 attach), so repeated hot-node lookups never touch host memory twice.
+
+Degradation (DESIGN.md §12): the primary flush path (cache gather + jitted
+scoring) is wrapped in retry-with-backoff for transient failures, and a
+circuit breaker — ``closed`` → (``breaker_threshold`` consecutive flush
+failures) → ``open`` → (after ``breaker_cooldown_ms``) → ``half_open`` →
+one probe flush → ``closed`` again or back to ``open`` — trips into a
+*degraded* cache-bypass path: a direct numpy gather from the store's host
+embedding arrays plus a numpy head application.  Degraded answers are
+slower but correct, so callers are never rejected; trips, recoveries,
+retries and degraded-answer counts surface in :class:`ServeStats`.
+Per-request deadlines (``deadline_ms``) bound both the retry budget and
+the default ``query`` wait.
 """
 
 from __future__ import annotations
@@ -207,6 +219,12 @@ class ServeStats:
     p99_ms: float
     qps: float
     hit_rates: Dict[str, float]
+    # degradation bookkeeping (DESIGN.md §12)
+    breaker_state: str = "closed"
+    breaker_trips: int = 0
+    breaker_recoveries: int = 0
+    degraded: int = 0  # requests answered via the cache-bypass path
+    retries: int = 0  # primary-path retry attempts
 
     def render(self) -> str:
         lines = [
@@ -214,6 +232,11 @@ class ServeStats:
             f"p50={self.p50_ms:.3f} ms  p99={self.p99_ms:.3f} ms  "
             f"qps={self.qps:,.0f}"
         ]
+        if self.breaker_trips or self.degraded or self.retries:
+            lines.append(
+                f"    breaker={self.breaker_state}  trips={self.breaker_trips}"
+                f"  recoveries={self.breaker_recoveries}"
+                f"  degraded={self.degraded}  retries={self.retries}")
         for t, r in sorted(self.hit_rates.items()):
             lines.append(f"    cache[{t}] hit-rate={r:.2%}")
         return "\n".join(lines)
@@ -273,11 +296,32 @@ class EmbeddingServer:
         mesh=None,
         hotness: Optional[HotnessProfile] = None,
         readmit_every: int = 0,
+        deadline_ms: float = 0.0,
+        flush_retries: int = 2,
+        retry_backoff_ms: float = 1.0,
+        breaker_threshold: int = 3,
+        breaker_cooldown_ms: float = 1000.0,
+        faults=None,
     ):
         import jax
         import jax.numpy as jnp
 
         self.store = store
+        # degradation policy (DESIGN.md §12) + deterministic fault plan
+        self.deadline_ms = float(deadline_ms)
+        self.flush_retries = int(flush_retries)
+        self.retry_backoff_ms = float(retry_backoff_ms)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_ms = float(breaker_cooldown_ms)
+        self.faults = faults
+        self.breaker_state = "closed"
+        self.breaker_trips = 0
+        self.breaker_recoveries = 0
+        self.degraded_count = 0
+        self.retry_count = 0
+        self._consec_failures = 0
+        self._breaker_opened_t = 0.0
+        self._flush_index = 0  # attempted flushes (fault-plan coordinate)
         self.cache = _build_serve_cache(store, cache_mb, kernels, hotness)
         # online re-admission from the served-id trace: every fetch_many
         # already bumps the cache's access counters, so after every
@@ -320,25 +364,22 @@ class EmbeddingServer:
 
     # -- the flush (device hot path) ----------------------------------------
 
-    def _flush(self, items: List[Tuple[str, np.ndarray, float]]) -> List[ServeResult]:
-        import jax.numpy as jnp
-
-        # group per type, remembering each request's slice of the batch
+    @staticmethod
+    def _group(items):
+        """Group requests per type, remembering each one's batch slice."""
         grouped: Dict[str, List[np.ndarray]] = {}
         offsets: List[Tuple[str, int, int]] = []
         for ntype, nids, _ in items:
             lo = sum(len(x) for x in grouped.get(ntype, []))
             grouped.setdefault(ntype, []).append(nids)
             offsets.append((ntype, lo, lo + len(nids)))
-        requests = {t: np.concatenate(parts) for t, parts in grouped.items()}
-        rows = self.cache.fetch_many(requests)  # one gather per type
-        target = self.store.target_type
-        scores = (
-            np.asarray(self._score(rows[target])) if target in rows else None
-        )
-        host_rows = {t: np.asarray(r) for t, r in rows.items()}
+        return ({t: np.concatenate(parts) for t, parts in grouped.items()},
+                offsets)
+
+    def _package(self, items, offsets, host_rows, scores, degraded=False):
         now = time.monotonic()
         out = []
+        target = self.store.target_type
         for (ntype, nids, t_submit), (_, lo, hi) in zip(items, offsets):
             lat_ms = (now - t_submit) * 1e3
             out.append(
@@ -356,12 +397,115 @@ class EmbeddingServer:
             )
         with self._stats_lock:
             self._count += len(items)
+            if degraded:
+                self.degraded_count += len(items)
             for r in out:
                 self._latencies.append(r.latency_ms)
+        return out
+
+    def _primary(self, items) -> List[ServeResult]:
+        """The device hot path: cache gather + jitted scoring.  The fault
+        plan's ``fail_flush``/``delay_flush`` triggers fire here, at the
+        ``fetch_many`` call site, exactly as a transient device/cache error
+        would; the plan's coordinate is the primary-*attempt* index (each
+        retry advances it, so a ``count=1`` fault is a clean transient and
+        ``count >= breaker_threshold * (flush_retries + 1)`` forces a
+        trip)."""
+        requests, offsets = self._group(items)
+        if self.faults is not None and self.faults:
+            from repro.data.faults import InjectedFault
+
+            fi = self._flush_index
+            self._flush_index += 1
+            delay = self.faults.flush_delay(fi)
+            if delay > 0:
+                time.sleep(delay)
+            if self.faults.flush_fault(fi) is not None:
+                raise InjectedFault(
+                    f"scheduled fail_flush fault at primary attempt {fi}")
+        rows = self.cache.fetch_many(requests)  # one gather per type
+        target = self.store.target_type
+        scores = (
+            np.asarray(self._score(rows[target])) if target in rows else None
+        )
+        host_rows = {t: np.asarray(r) for t, r in rows.items()}
+        return self._package(items, offsets, host_rows, scores)
+
+    def _degraded(self, items) -> List[ServeResult]:
+        """The cache-bypass path: direct host gather from the store's
+        embedding arrays + numpy head scoring.  Device- and cache-free, so
+        it survives whatever broke the primary path; slower, never wrong."""
+        requests, offsets = self._group(items)
+        host_rows = {
+            t: np.asarray(self.store.embeddings[t])[nids]
+            for t, nids in requests.items()
+        }
+        target = self.store.target_type
+        scores = None
+        if target in host_rows:
+            w = np.asarray(self.store.head["w"], np.float32)
+            b = np.asarray(self.store.head["b"], np.float32)
+            scores = np.maximum(host_rows[target], 0.0) @ w + b
+        return self._package(items, offsets, host_rows, scores, degraded=True)
+
+    def _oldest_deadline_blown(self, items, extra_ms: float = 0.0) -> bool:
+        if self.deadline_ms <= 0:
+            return False
+        age_ms = (time.monotonic() - min(t for _, _, t in items)) * 1e3
+        return age_ms + extra_ms >= self.deadline_ms
+
+    def _flush(self, items: List[Tuple[str, np.ndarray, float]]) -> List[ServeResult]:
+        out = self._flush_with_degradation(items)
         self._flush_count += 1
         if self.readmit_every and self._flush_count % self.readmit_every == 0:
             self._readmit()
         return out
+
+    def _flush_with_degradation(self, items) -> List[ServeResult]:
+        """Breaker + retry state machine around :meth:`_primary` (module
+        docstring; DESIGN.md §12).  Every exit answers the flush — the
+        degraded path is the fallback, never an exception to callers."""
+        if self.breaker_state == "open":
+            since_ms = (time.monotonic() - self._breaker_opened_t) * 1e3
+            if since_ms < self.breaker_cooldown_ms:
+                return self._degraded(items)
+            self.breaker_state = "half_open"
+        if self.breaker_state == "half_open":
+            # one probe, no retries: failure re-opens, success closes
+            try:
+                out = self._primary(items)
+            except Exception:
+                self.breaker_state = "open"
+                self._breaker_opened_t = time.monotonic()
+                return self._degraded(items)
+            with self._stats_lock:
+                self.breaker_state = "closed"
+                self.breaker_recoveries += 1
+                self._consec_failures = 0
+            return out
+        # closed: primary with bounded retries under the oldest deadline
+        attempts = self.flush_retries + 1
+        for a in range(attempts):
+            try:
+                out = self._primary(items)
+                self._consec_failures = 0
+                return out
+            except Exception:
+                backoff_ms = self.retry_backoff_ms * (2 ** a)
+                if (a + 1 < attempts
+                        and not self._oldest_deadline_blown(items, backoff_ms)):
+                    with self._stats_lock:
+                        self.retry_count += 1
+                    time.sleep(backoff_ms / 1e3)
+                    continue
+                break
+        self._consec_failures += 1
+        if self._consec_failures >= self.breaker_threshold:
+            with self._stats_lock:
+                self.breaker_state = "open"
+                self.breaker_trips += 1
+            self._breaker_opened_t = time.monotonic()
+        return self._degraded(items)
 
     def _readmit(self, decay: float = 0.5) -> None:
         """Re-allocate the serve cache from the served-id trace.
@@ -408,7 +552,14 @@ class EmbeddingServer:
         self, nids: Sequence[int], ntype: Optional[str] = None,
         timeout: Optional[float] = None,
     ) -> ServeResult:
-        """Blocking lookup (submit + wait for the micro-batch flush)."""
+        """Blocking lookup (submit + wait for the micro-batch flush).
+
+        With ``deadline_ms`` configured the wait is bounded by it by
+        default (explicit ``timeout`` wins); retries and breaker trips are
+        budgeted against the same deadline, so a degraded answer normally
+        lands inside it."""
+        if timeout is None and self.deadline_ms > 0:
+            timeout = self.deadline_ms / 1e3
         return self.submit(nids, ntype).result(timeout)
 
     # -- stats / lifecycle ---------------------------------------------------
@@ -425,6 +576,11 @@ class EmbeddingServer:
             p99_ms=float(np.percentile(lats, 99)) if len(lats) else 0.0,
             qps=count / wall,
             hit_rates=self.cache.hit_rates(),
+            breaker_state=self.breaker_state,
+            breaker_trips=self.breaker_trips,
+            breaker_recoveries=self.breaker_recoveries,
+            degraded=self.degraded_count,
+            retries=self.retry_count,
         )
 
     def reset_stats(self) -> None:

@@ -403,6 +403,50 @@ def test_pipeline_config_round_trips():
     assert config_from_args(ap.parse_args([])).pipeline.num_workers == 0
 
 
+def test_checkpoint_and_fault_config_round_trips():
+    cfg = HetaConfig().updated(
+        checkpoint=dict(every_steps=5, dir="/tmp/ck", keep=3),
+        faults=dict(max_worker_restarts=4, worker_backoff_s=0.1,
+                    arena_write_timeout_s=12.0),
+        serve=dict(deadline_ms=250.0, flush_retries=1, retry_backoff_ms=0.5,
+                   breaker_threshold=2, breaker_cooldown_ms=100.0),
+    )
+    assert HetaConfig.from_dict(cfg.to_dict()) == cfg
+    flat = cfg.to_flat_kwargs()
+    assert flat["checkpoint_every_steps"] == 5
+    assert flat["max_worker_restarts"] == 4
+    assert flat["serve_breaker_threshold"] == 2
+    assert HetaConfig.from_flat_kwargs(**flat) == cfg
+
+    with pytest.raises(ValueError, match="every_steps"):
+        HetaConfig().updated(checkpoint=dict(every_steps=-1))
+    with pytest.raises(ValueError, match="checkpoint.dir"):
+        HetaConfig().updated(checkpoint=dict(every_steps=2))
+    with pytest.raises(ValueError, match="max_worker_restarts"):
+        HetaConfig().updated(faults=dict(max_worker_restarts=-1))
+    with pytest.raises(ValueError, match="breaker_threshold"):
+        HetaConfig().updated(serve=dict(breaker_threshold=0))
+    with pytest.raises(ValueError, match="deadline_ms"):
+        HetaConfig().updated(serve=dict(deadline_ms=-1.0))
+
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    args = ap.parse_args([
+        "--checkpoint-every-steps", "2", "--checkpoint-dir", "/tmp/ck",
+        "--checkpoint-keep", "1", "--max-worker-restarts", "3",
+        "--worker-backoff-s", "0.2", "--serve-deadline-ms", "100",
+        "--serve-flush-retries", "1", "--serve-breaker-threshold", "5",
+    ])
+    got = config_from_args(args)
+    assert got.checkpoint.every_steps == 2 and got.checkpoint.dir == "/tmp/ck"
+    assert got.checkpoint.keep == 1
+    assert got.faults.max_worker_restarts == 3
+    assert got.faults.worker_backoff_s == 0.2
+    assert got.serve.deadline_ms == 100.0
+    assert got.serve.flush_retries == 1
+    assert got.serve.breaker_threshold == 5
+
+
 def test_legacy_step_only_executor_still_works():
     """Executors registered before the staged-step seam (override step()
     only) keep working on the serial path; the pipeline names them as the

@@ -1,0 +1,231 @@
+"""Checkpoint durability + session resume (DESIGN.md §12): atomic
+commit-by-manifest, integrity verification (corrupt/torn/partial payloads
+refused loudly), bf16 manifest-driven dtype restore, and the session
+contract — Heta.save/restore resumes the loss trajectory bit-for-bit,
+config-driven periodic checkpointing, pruning, and fingerprint checks."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointError,
+    latest_step,
+    load_checkpoint,
+    read_manifest,
+    save_checkpoint,
+)
+
+jax = pytest.importorskip("jax")
+jnp = jax.numpy
+
+
+# --------------------------------------------------------------------------
+# the checkpoint files themselves
+# --------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.normal(size=(4, 3)).astype(np.float32),
+        "steps": np.int64(7),
+        "nested": {"ids": np.arange(5, dtype=np.int64)},
+    }
+
+
+def test_round_trip_with_extra_metadata(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    save_checkpoint(d, 3, tree, extra={"fingerprint": "abc", "seed": 0})
+    assert latest_step(d) == 3
+    manifest = read_manifest(d, 3)
+    assert manifest["extra"] == {"fingerprint": "abc", "seed": 0}
+    got = load_checkpoint(d, 3, jax.tree.map(np.zeros_like, tree))
+    jax.tree.map(np.testing.assert_array_equal, got, tree)
+
+
+def test_bf16_stored_as_uint16_restored_by_manifest_dtype(tmp_path):
+    """npz can't hold bf16: the payload stores a uint16 view and the
+    manifest keeps the logical dtype — restore returns bf16 even when the
+    template leaf is float32."""
+    d = str(tmp_path)
+    tree = {"h": jnp.asarray(np.arange(6, dtype=np.float32).reshape(2, 3),
+                             dtype=jnp.bfloat16)}
+    save_checkpoint(d, 0, tree)
+    m = read_manifest(d, 0)
+    assert m["dtypes"]["h"] == "bfloat16"
+    assert m["stored_dtypes"]["h"] == "uint16"
+    got = load_checkpoint(d, 0, {"h": np.zeros((2, 3), np.float32)})
+    assert np.asarray(got["h"]).dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got["h"], np.float32),
+                                  np.asarray(tree["h"], np.float32))
+
+
+def test_latest_step_ignores_uncommitted(tmp_path):
+    """An npz without its manifest is junk from a crash mid-save — it must
+    be invisible, never restored."""
+    d = str(tmp_path)
+    assert latest_step(d) is None
+    save_checkpoint(d, 2, _tree())
+    # a torn save: payload renamed, crash before the manifest commit
+    with open(os.path.join(d, "ckpt_00000009.npz"), "wb") as f:
+        f.write(b"not a checkpoint")
+    assert latest_step(d) == 2
+    with pytest.raises(CheckpointError, match="manifest missing"):
+        load_checkpoint(d, 9, _tree())
+
+
+def test_corrupt_payload_refused(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    path = save_checkpoint(d, 1, tree)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF  # one flipped bit somewhere in an array
+    with open(path, "wb") as f:
+        f.write(blob)
+    with pytest.raises(CheckpointError):
+        load_checkpoint(d, 1, jax.tree.map(np.zeros_like, tree))
+
+
+def test_truncated_payload_refused(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    path = save_checkpoint(d, 1, tree)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 3])
+    with pytest.raises(CheckpointError):
+        load_checkpoint(d, 1, jax.tree.map(np.zeros_like, tree))
+
+
+def test_template_key_mismatch_refused(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    with pytest.raises(CheckpointError, match="key mismatch"):
+        load_checkpoint(d, 1, {"other": np.zeros(3, np.float32)})
+
+
+def test_corrupt_manifest_refused(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 1, _tree())
+    with open(path + ".json", "w") as f:
+        f.write("{ truncated")
+    with pytest.raises(CheckpointError, match="unreadable manifest"):
+        read_manifest(d, 1)
+
+
+# --------------------------------------------------------------------------
+# the session contract: save/restore resumes bit-for-bit
+# --------------------------------------------------------------------------
+
+
+def _cfg(**over):
+    from repro.api import (CacheConfig, DataConfig, HetaConfig, ModelConfig,
+                           PartitionConfig, RunConfig)
+
+    cfg = HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=0.002, fanouts=(3, 2),
+                        batch_size=8),
+        partition=PartitionConfig(num_partitions=2),
+        model=ModelConfig(hidden=32),
+        cache=CacheConfig(cache_mb=2, presample_epochs=1),
+        run=RunConfig(executor="raf_spmd", steps=8, lr=1e-2, seed=0),
+    )
+    return cfg.updated(**over) if over else cfg
+
+
+def _stage(sess):
+    sess.build_graph()
+    sess.partition()
+    sess.profile_and_cache()
+    sess.compile()
+    return sess
+
+
+def test_session_resume_is_bit_identical(tmp_path):
+    """ISSUE 9 acceptance (b): interrupt a run at step 4, restore in a
+    *fresh* session, finish — the remaining losses are bit-identical to
+    the uninterrupted trajectory (params, Adam moments, learnable tables
+    + their Adam rows, and the sampler position all round-trip)."""
+    from repro.api import Heta
+
+    ref = Heta(_cfg()).run()["losses"]
+    assert len(ref) == 8
+
+    d = str(tmp_path / "ckpts")
+    first = _stage(Heta(_cfg()))
+    half = first.fit(4)["losses"]
+    assert half == ref[:4]
+    first.save(d)
+    assert latest_step(d) == 4
+
+    resumed = Heta(_cfg())  # fresh session: restore runs missing stages
+    assert resumed.restore(d) == 4
+    rest = resumed.fit(4)["losses"]
+    assert rest == ref[4:]  # bit-identical tail
+
+
+def test_restore_refuses_config_fingerprint_mismatch(tmp_path):
+    from repro.api import Heta
+
+    d = str(tmp_path)
+    sess = _stage(Heta(_cfg()))
+    sess.fit(2)
+    sess.save(d)
+    other = Heta(_cfg(model=dict(hidden=64)))
+    with pytest.raises(CheckpointError, match="different"):
+        other.restore(d)
+
+
+def test_restore_without_checkpoint_raises(tmp_path):
+    from repro.api import Heta
+
+    with pytest.raises(CheckpointError, match="no committed checkpoint"):
+        Heta(_cfg()).restore(str(tmp_path))
+    with pytest.raises(ValueError, match="directory"):
+        Heta(_cfg()).restore()  # no checkpoint.dir configured either
+
+
+def test_periodic_checkpointing_and_pruning(tmp_path):
+    """checkpoint.every_steps drives saves from the fit loop;
+    checkpoint.keep prunes all but the newest committed pairs."""
+    from repro.api import Heta
+
+    d = str(tmp_path / "auto")
+    cfg = _cfg(run=dict(steps=6),
+               checkpoint=dict(every_steps=2, dir=d, keep=2))
+    sess = Heta(cfg)
+    sess.run()
+    committed = sorted(
+        int(f.split("_")[1].split(".")[0])
+        for f in os.listdir(d)
+        if f.endswith(".npz") and os.path.exists(os.path.join(d, f + ".json"))
+    )
+    assert committed == [4, 6]  # saved at 2, 4, 6; keep=2 pruned step 2
+    assert latest_step(d) == 6
+
+    # and the pruned directory still restores the newest step
+    resumed = Heta(cfg)
+    assert resumed.restore(d) == 6
+
+
+def test_engine_state_snapshot_load_round_trip():
+    """EmbedEngine.state_snapshot/load_state: mutate, load the snapshot
+    back, and every table/moment/step/residency is restored exactly."""
+    from repro.api import Heta
+
+    sess = _stage(Heta(_cfg()))
+    sess.fit(2)
+    eng = sess.engine
+    snap = eng.state_snapshot()
+    before = {t: eng.table(t).copy() for t in eng.learnable_types}
+    sess.fit(2)  # mutates learnable rows + Adam state
+    after = {t: eng.table(t) for t in eng.learnable_types}
+    assert any(not np.array_equal(before[t], after[t]) for t in before)
+    eng.load_state(snap)
+    for t in before:
+        np.testing.assert_array_equal(eng.table(t), before[t])
+    assert {t: int(s) for t, s in eng.steps.items()} == snap["steps"]

@@ -307,3 +307,92 @@ def test_serve_executor_registered_and_guarded():
         sess.compile(executor="serve")
     with pytest.raises(HetaStageError, match="infer_all"):
         sess.serve()
+
+
+# --------------------------------------------------------------------------
+# degradation policy (DESIGN.md §12): retries, circuit breaker, cache bypass
+# --------------------------------------------------------------------------
+
+
+def test_serve_transient_flush_failure_is_retried():
+    """One injected primary failure: the retry path answers the request
+    from the primary (no degradation, no trip), and the retry is counted."""
+    from repro.data.faults import FaultPlan, FaultSpec
+
+    store = _toy_store()
+    plan = FaultPlan((FaultSpec("fail_flush", step=0, count=1),))
+    with EmbeddingServer(store, max_batch=8, max_wait_ms=1, faults=plan,
+                         flush_retries=2, retry_backoff_ms=0.1) as srv:
+        res = srv.query([3, 1, 4])
+        np.testing.assert_array_equal(
+            res.embeddings, store.embedding("paper", [3, 1, 4]))
+        stats = srv.stats()
+        assert stats.retries == 1
+        assert stats.degraded == 0
+        assert stats.breaker_trips == 0
+        assert stats.breaker_state == "closed"
+
+
+def test_serve_breaker_trips_and_degrades_with_zero_rejects():
+    """Persistent primary failure: after breaker_threshold consecutive
+    flush failures (each retried flush_retries times) the breaker opens
+    and every request — including the failing ones — is answered from the
+    degraded direct-store path.  Zero rejected callers, answers exact."""
+    from repro.data.faults import FaultPlan, FaultSpec
+
+    store = _toy_store()
+    # threshold=2 failures x (1 retry + 1) attempts = 4 faulted attempts
+    plan = FaultPlan((FaultSpec("fail_flush", step=0, count=4),))
+    with EmbeddingServer(store, max_batch=8, max_wait_ms=1, faults=plan,
+                         flush_retries=1, retry_backoff_ms=0.1,
+                         breaker_threshold=2,
+                         breaker_cooldown_ms=60_000) as srv:
+        for k in range(4):  # 2 tripping flushes + 2 served while open
+            res = srv.query([k, k + 1])
+            np.testing.assert_array_equal(
+                res.embeddings, store.embedding("paper", [k, k + 1]))
+            np.testing.assert_allclose(
+                res.scores, store.scores(np.array([k, k + 1])), atol=1e-5)
+        stats = srv.stats()
+        assert stats.count == 4  # every caller answered
+        assert stats.breaker_state == "open"
+        assert stats.breaker_trips == 1
+        assert stats.degraded == 4
+        assert stats.retries == 2
+
+
+def test_serve_breaker_recovers_after_cooldown():
+    """Half-open probe: once the cooldown elapses a single probe flush
+    runs the primary again; success closes the breaker."""
+    from repro.data.faults import FaultPlan, FaultSpec
+
+    store = _toy_store()
+    plan = FaultPlan((FaultSpec("fail_flush", step=0, count=1),))
+    with EmbeddingServer(store, max_batch=8, max_wait_ms=1, faults=plan,
+                         flush_retries=0, breaker_threshold=1,
+                         breaker_cooldown_ms=50) as srv:
+        srv.query([1, 2])  # fails, trips, degraded
+        assert srv.stats().breaker_state == "open"
+        time.sleep(0.12)  # past the cooldown
+        res = srv.query([3, 4])  # half-open probe succeeds
+        np.testing.assert_array_equal(
+            res.embeddings, store.embedding("paper", [3, 4]))
+        stats = srv.stats()
+        assert stats.breaker_state == "closed"
+        assert stats.breaker_recoveries == 1
+        assert stats.degraded == 1  # only the tripping flush degraded
+
+
+def test_serve_flush_delay_and_default_deadline():
+    """delay_flush slows the primary; deadline_ms sets query's default
+    result timeout so a healthy-but-slow flush still answers in time."""
+    from repro.data.faults import FaultPlan, FaultSpec
+
+    store = _toy_store()
+    plan = FaultPlan((FaultSpec("delay_flush", step=0, delay_s=0.05),))
+    with EmbeddingServer(store, max_batch=8, max_wait_ms=1, faults=plan,
+                         deadline_ms=2000.0) as srv:
+        res = srv.query([5, 6])  # no explicit timeout: deadline drives it
+        assert res.latency_ms >= 50.0
+        np.testing.assert_array_equal(
+            res.embeddings, store.embedding("paper", [5, 6]))
