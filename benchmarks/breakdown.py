@@ -267,6 +267,137 @@ def run_worker_sweep(scale: float = 0.01, batch: int = 64, fanouts=(10, 10),
     return results
 
 
+def run_consumer_completion(scale: float = 0.01, batch: int = 64,
+                            fanouts=(10, 10), repeats: int = 30):
+    """Consumer-side completion cost of a worker-staged batch.
+
+    With frozen tables the sampler workers assemble the full stacked host
+    arrays (``stack_batch_host``); all the consumer does is finish staging.
+    ``stage_from_host`` feeds those host views straight into the sharded
+    ``device_put`` — the device-put-free path — while the reference row
+    re-times the copying completion it replaced (``np.array`` per field,
+    then the same device put).  Both produce bit-identical device arrays;
+    the delta is pure consumer-thread overhead that the overlap window
+    cannot hide.  ``cpus`` is stamped on every row as usual."""
+    import numpy as np
+
+    from repro.data.staging import stack_batch_host
+
+    sess = _session(scale, batch, fanouts, steps=1, train_learnable=False)
+    ex, plan = sess.executor, sess.plan
+    recipe = ex.worker_stage_recipe(sess, plan)
+    if recipe is None:  # pragma: no cover - frozen tables always have one
+        raise SystemExit("no worker stage recipe; cannot probe completion")
+    tables = sess.engine.tables_snapshot()
+    b = sess._batch_for_step(0)
+    host = stack_batch_host(recipe, b, tables)
+
+    import jax
+
+    def t_of(fn):
+        fn()  # warmup (compile + first-touch)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2]
+
+    t_free = t_of(lambda: ex.stage_from_host(sess, plan, b, host))
+    t_copy = t_of(lambda: ex.stage_from_host(
+        sess, plan, b, {k: np.array(v) for k, v in host.items()}))
+    nbytes = int(sum(v.nbytes for v in host.values()))
+    emit("pipeline/consumer/stage_from_host", t_free * 1e6,
+         f"device-put-free completion of {nbytes / 1e6:.1f} MB staged host "
+         "arrays", kind="consumer_completion", copy_free=True,
+         staged_bytes=nbytes, batch_size=batch, fanouts=list(fanouts))
+    emit("pipeline/consumer/copying_reference", t_copy * 1e6,
+         "same completion behind a per-field np.array copy",
+         kind="consumer_completion", copy_free=False, staged_bytes=nbytes,
+         batch_size=batch, fanouts=list(fanouts))
+    emit("pipeline/consumer/copy_free_speedup", 0.0,
+         f"{t_copy / t_free:.2f}x from skipping the host copy",
+         kind="consumer_completion",
+         speedup_vs_copy=round(t_copy / t_free, 3))
+    return {"stage_from_host_s": t_free, "copying_s": t_copy}
+
+
+def run_pinning_probe(scale: float = 0.01, batch: int = 64, fanouts=(10, 10),
+                      steps: int = 32, workers: int = 2, repeats: int = 3):
+    """``pipeline.pin_workers`` on/off over the arena pool, same batches.
+
+    Pinning helps when the scheduler migrates sampler workers across cores
+    mid-epoch (cold caches); on a container with fewer cores than workers
+    it is expected to be a wash or a small loss — the rows record whichever
+    way it goes, stamped with ``cpus`` so readers can tell the two regimes
+    apart.  No timing gate anywhere."""
+    from repro.data.prefetch import Prefetcher  # noqa: F401  (parity import)
+    from repro.data.staging import arena_fields, unpack_slot
+    from repro.data.worker_pool import (EpochSchedule, SampleStageTask,
+                                        WorkerPool)
+    from repro.graph.sampler import NeighborSampler
+    from repro.graph.shm import create_arena, share_graph
+
+    sess = Heta(HetaConfig(
+        data=DataConfig(dataset="ogbn-mag", scale=scale, fanouts=fanouts,
+                        batch_size=batch),
+        partition=PartitionConfig(num_partitions=2),
+        run=RunConfig(seed=3),
+    ))
+    sess.build_graph()
+    sess.partition()
+    g, spec = sess.graph, sess.spec
+    E = NeighborSampler(g, spec, batch).steps_per_epoch()
+    sched = EpochSchedule(7, E)
+    warm = 2
+
+    def time_pool(pin: bool) -> float:
+        n = steps * repeats + warm
+        store = share_graph(g, include_features=False)
+        probe = NeighborSampler(g, spec, batch, seed=1).batch_at(0,
+                                                                 epoch_seed=7)
+        ring = create_arena(arena_fields(probe), num_workers=workers, depth=2)
+        task = SampleStageTask(handle=store.handle, spec=spec,
+                               batch_size=batch, sampler_seed=1,
+                               schedule=sched, arena=ring.handle,
+                               pin_cpus=pin)
+        src = WorkerPool(task, num_workers=workers, depth=2, num_items=n)
+        try:
+            it = iter(src)
+
+            def draw():
+                item = next(it)
+                unpack_slot(ring.resolve(item.slot, item.use), spec)
+                ring.release(item.slot, item.use)
+
+            for _ in range(warm):
+                draw()
+            wall = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for _ in range(steps):
+                    draw()
+                wall = min(wall, time.perf_counter() - t0)
+        finally:
+            src.close()
+            store.unlink()
+            ring.unlink()
+        return steps * batch / wall
+
+    base = time_pool(False)
+    pinned = time_pool(True)
+    for name, sps, pin in (("unpinned", base, False), ("pinned", pinned, True)):
+        emit(f"pipeline/sampling/workers{workers}_{name}", batch / sps * 1e6,
+             f"{sps:,.0f} samples/s", workers=workers, pin_workers=pin,
+             samples_per_s=round(sps, 1), batch_size=batch,
+             fanouts=list(fanouts), kind="sampling_pinning")
+    emit(f"pipeline/sampling/pinning_effect_w{workers}", 0.0,
+         f"{pinned / base:.2f}x pinned vs unpinned ({os.cpu_count()} cpus)",
+         workers=workers, speedup_pinned=round(pinned / base, 3),
+         kind="sampling_pinning")
+    return {"unpinned": base, "pinned": pinned}
+
+
 def _parse_workers(s: str):
     return tuple(int(x) for x in s.split(","))
 
@@ -288,11 +419,20 @@ if __name__ == "__main__":
     ap.add_argument("--no-arena", action="store_true",
                     help="sweep over the legacy pickle queues instead of the "
                          "shm batch arena")
+    ap.add_argument("--consumer", action="store_true",
+                    help="probe the consumer completion (device-put-free "
+                         "stage_from_host vs the copying reference)")
+    ap.add_argument("--pin-probe", type=int, default=0, metavar="W",
+                    help="probe pipeline.pin_workers on/off with W workers")
     args = ap.parse_args()
     if not args.skip_stages:
         run()
     if args.num_workers is not None:
         run_worker_sweep(steps=args.sweep_steps, workers=args.num_workers,
                          arena=not args.no_arena)
+    if args.consumer:
+        run_consumer_completion()
+    if args.pin_probe:
+        run_pinning_probe(workers=args.pin_probe)
     if args.records_out:
         write_records(args.records_out)

@@ -1,0 +1,173 @@
+"""DESIGN.md §13 — hierarchical scale-out benchmarks.
+
+Three legs, all machine-readable (``--records-out BENCH_scale.json``):
+
+* ``run_comm_invariance`` — Prop-2 at 10x the comm bench's graph: a
+  MAG240M-schema topology built **out-of-core** by ``mag240m_stream``
+  (scale ≥ 0.005 vs ``comm_volume.py``'s 0.0005 in-RAM graphs), attached
+  from its mmap store, hierarchically partitioned, and byte-counted by
+  ``comm_report``'s ``hier_*`` keys for every relation module.  The
+  inter-group RAF payload (``hier_level0_raf``) must be bit-equal across
+  rgcn/rgat/hgt: per-node-type parameters change *what each group
+  computes*, never *what crosses the network* (paper Prop 2).
+* ``run_dp_parity`` — 2-trainer data-parallel fit (``scale.mode=
+  "global"``, the stripe discipline) vs the single-process fit on the
+  same config: the loss trajectories must match **bit for bit**
+  (``repro.data.dp_trainer`` publishes exact state bytes; no tolerance).
+* ``run_epoch_time`` — honest wall-clock of the same fit single-process
+  vs 2-trainer DP.  ``cpus`` is stamped on every row: on a container
+  with fewer cores than trainers the DP run *loses* (two jax processes
+  time-slice one core) and the row says so — the speedup is a recording,
+  never a gate.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks._util import emit, write_records
+from repro.api import (
+    DataConfig, Heta, HetaConfig, ModelConfig, PartitionConfig, RunConfig,
+)
+
+MODELS = ("rgcn", "rgat", "hgt")
+
+
+def _stream_store(scale: float, seed: int = 4):
+    from repro.graph.synthetic import mag240m_stream
+
+    t0 = time.perf_counter()
+    store = mag240m_stream(scale=scale, seed=seed)
+    return store, time.perf_counter() - t0
+
+
+def run_comm_invariance(scale: float = 0.005, batch: int = 1024,
+                        hidden: int = 64, fanouts=(25, 20),
+                        hierarchy=(2, 2), seed: int = 0, models=MODELS):
+    """Prop-2 rows over the out-of-core store (see module docstring)."""
+    from repro.graph.mmap_store import attach_any
+
+    store, build_s = _stream_store(scale)
+    att = attach_any(store.handle)
+    g = att.graph
+    num_edges = sum(csr.indices.size for csr in g.relations.values())
+    emit("scale/comm/store_build", build_s * 1e6,
+         f"{num_edges / 1e6:.1f}M edges, {store.nbytes / 1e9:.2f} GB "
+         f"streamed out-of-core at scale={scale}",
+         kind="hier_comm", scale=scale, num_edges=int(num_edges),
+         store_bytes=int(store.nbytes))
+    out = {}
+    try:
+        for model in models:
+            sess = Heta(HetaConfig(
+                data=DataConfig(dataset="mag240m", scale=scale,
+                                fanouts=fanouts, batch_size=batch),
+                partition=PartitionConfig(num_partitions=2),
+                model=ModelConfig(model=model, hidden=hidden,
+                                  learnable_dim=64),
+                run=RunConfig(seed=seed),
+            ).updated(scale=dict(num_trainers=hierarchy[0] * hierarchy[1],
+                                 hierarchy=tuple(hierarchy))))
+            sess.build_graph(graph=g)
+            sess.partition()
+            comm = sess.comm_report(bytes_per_elem=2)
+            hier = {k: v for k, v in comm.items() if k.startswith("hier_")}
+            emit(f"scale/comm/{model}/level0_raf_MB", 0.0,
+                 f"{hier['hier_level0_raf'] / 1e6:.2f}MB inter-group RAF "
+                 "partials", kind="hier_comm", model=model, scale=scale,
+                 num_edges=int(num_edges), hierarchy=list(hierarchy),
+                 **{k: int(v) for k, v in hier.items()})
+            out[model] = hier
+    finally:
+        att.close()
+        store.unlink()
+    first = out[models[0]]
+    assert all(out[m]["hier_level0_raf"] == first["hier_level0_raf"]
+               for m in models), out
+    assert all(out[m]["hier_total_wire"] == first["hier_total_wire"]
+               for m in models), out
+    emit("scale/comm/prop2_invariance", 0.0,
+         f"level0_raf identical across {'/'.join(models)} at "
+         f"{num_edges / 1e6:.1f}M edges", kind="hier_comm",
+         models=list(models), invariant=True, num_edges=int(num_edges),
+         level0_raf=int(first["hier_level0_raf"]))
+    return out
+
+
+def _fit_cfg(scale_on: bool, steps: int, store: str = "shm"):
+    cfg = HetaConfig.from_dict(dict(
+        data=dict(dataset="ogbn-mag", scale=0.01, fanouts=(4, 3),
+                  batch_size=32),
+        model=dict(hidden=32, num_heads=2, train_learnable=False),
+        run=dict(executor="raf_spmd", steps=steps, seed=7, log_every=0),
+        pipeline=dict(num_workers=0),
+    ))
+    if scale_on:
+        cfg = cfg.updated(scale=dict(num_trainers=2, mode="global",
+                                     store=store))
+    return cfg
+
+
+def _timed_fit(cfg):
+    sess = Heta(cfg)
+    sess.build_graph()
+    sess.partition()
+    sess.profile_and_cache()
+    sess.compile()
+    t0 = time.perf_counter()
+    sess.fit()
+    return sess, time.perf_counter() - t0
+
+
+def run_dp_parity(steps: int = 6, store: str = "shm"):
+    """Bit-identical loss parity: 2-trainer global-mode DP vs single."""
+    single, t1 = _timed_fit(_fit_cfg(False, steps))
+    dp, t2 = _timed_fit(_fit_cfg(True, steps, store))
+    bit = list(map(float, single.losses)) == list(map(float, dp.losses))
+    emit("scale/dp/parity", 0.0,
+         f"{steps} steps {'bit-identical' if bit else 'DIVERGED'} "
+         f"(2 trainers, mode=global, store={store})",
+         kind="dp_parity", bit_identical=bool(bit), num_trainers=2,
+         mode="global", store=store, steps=steps,
+         losses=[float(x) for x in dp.losses])
+    assert bit, (single.losses, dp.losses)
+    return {"single_s": t1, "dp_s": t2, "bit_identical": bit}
+
+
+def run_epoch_time(steps: int = 16):
+    """Honest single vs 2-trainer wall clock (see module docstring)."""
+    single, t1 = _timed_fit(_fit_cfg(False, steps))
+    dp, t2 = _timed_fit(_fit_cfg(True, steps))
+    for name, t, n in (("single", t1, 1), ("dp2", t2, 2)):
+        emit(f"scale/dp/epoch_time_{name}", t / steps * 1e6,
+             f"{t:.2f}s wall for {steps} steps, {n} trainer(s) on "
+             f"{os.cpu_count()} cpus", kind="dp_epoch_time",
+             num_trainers=n, steps=steps, wall_s=round(t, 3))
+    emit("scale/dp/speedup_2t", 0.0,
+         f"{t1 / t2:.2f}x vs single ({os.cpu_count()} cpus; <1 expected "
+         "when trainers outnumber cores)", kind="dp_epoch_time",
+         num_trainers=2, speedup_vs_single=round(t1 / t2, 3))
+    return {"single_s": t1, "dp_s": t2}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--comm-scale", type=float, default=0.005,
+                    help="mag240m_stream scale for the Prop-2 leg")
+    ap.add_argument("--parity-steps", type=int, default=6)
+    ap.add_argument("--epoch-steps", type=int, default=16)
+    ap.add_argument("--skip-comm", action="store_true")
+    ap.add_argument("--skip-dp", action="store_true")
+    ap.add_argument("--records-out", type=str, default=None,
+                    help="write machine-readable rows (BENCH_scale.json)")
+    args = ap.parse_args()
+    if not args.skip_comm:
+        run_comm_invariance(scale=args.comm_scale)
+    if not args.skip_dp:
+        run_dp_parity(steps=args.parity_steps)
+        run_epoch_time(steps=args.epoch_steps)
+    if args.records_out:
+        write_records(args.records_out)

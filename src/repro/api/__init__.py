@@ -27,9 +27,9 @@ Or collapse all stages: ``result = Heta(cfg).run()``.
 Configuration
 =============
 
-:class:`HetaConfig` is a typed tree of ten sections — ``data``,
+:class:`HetaConfig` is a typed tree of eleven sections — ``data``,
 ``partition``, ``model``, ``cache``, ``run``, ``pipeline``, ``kernels``,
-``serve``, ``checkpoint``, ``faults`` — that round-trips through
+``serve``, ``checkpoint``, ``faults``, ``scale`` — that round-trips through
 nested dicts (``to_dict``/``from_dict``), the historical flat-kwargs surface
 (``from_flat_kwargs``/``to_flat_kwargs``) and auto-generated CLI flags
 (``add_config_args``/``config_from_args`` — what ``python -m
@@ -79,6 +79,7 @@ from repro.api.config import (
     ServeConfig,
     CheckpointConfig,
     FaultConfig,
+    ScaleConfig,
     add_config_args,
     config_from_args,
 )
@@ -97,6 +98,7 @@ __all__ = [
     "ServeConfig",
     "CheckpointConfig",
     "FaultConfig",
+    "ScaleConfig",
     "Heta",
     "HetaStageError",
     "PartitionReport",

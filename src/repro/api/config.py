@@ -1,7 +1,7 @@
 """HetaConfig — the typed, validated configuration tree of the public API.
 
-One config object describes a complete Heta run.  It composes ten section
-dataclasses mirroring the pipeline stages:
+One config object describes a complete Heta run.  It composes eleven
+section dataclasses mirroring the pipeline stages:
 
   * :class:`DataConfig`      — dataset, scale, fanouts, batch size
   * :class:`PartitionConfig` — partition count + relation placement policy
@@ -20,6 +20,9 @@ dataclasses mirroring the pipeline stages:
     (``Heta.save``/``restore``; see ``repro.checkpoint`` and DESIGN.md §12)
   * :class:`FaultConfig`     — fault-tolerance policy (worker restart
     budget/backoff, arena write stall timeout; DESIGN.md §12)
+  * :class:`ScaleConfig`     — hierarchical scale-out (trainer process
+    count, group hierarchy, store flavor, allreduce overlap; see
+    ``repro.data.dp_trainer`` and DESIGN.md §13)
 
 Three interchange formats round-trip losslessly:
 
@@ -50,6 +53,7 @@ __all__ = [
     "ServeConfig",
     "CheckpointConfig",
     "FaultConfig",
+    "ScaleConfig",
     "HetaConfig",
     "add_config_args",
     "config_from_args",
@@ -226,6 +230,9 @@ class PipelineConfig:
     snapshot: str = "stale"  # stale (max overlap) | fresh (bit-exact staging)
     num_workers: int = 0  # 0 = thread producer; N > 0 = sampler process pool
     arena: bool = True  # pool mode: shm ring-buffer slots, descriptor queues
+    # opt-in CPU-affinity pin: sampler worker w sticks to core (w+1) % ncpu,
+    # biasing core 0 toward the consumer (best-effort; Linux only)
+    pin_workers: bool = False
 
     def __post_init__(self):
         if self.depth < 1:
@@ -423,6 +430,82 @@ class FaultConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScaleConfig:
+    """Hierarchical scale-out (``repro.data.dp_trainer``, DESIGN.md §13).
+
+    ``num_trainers`` spawns that many data-parallel trainer processes in
+    ``Heta.fit`` (1 = today's in-process loop, no spawn).  Each trainer
+    owns one edge-cut sub-partition of a *shared* graph store, samples its
+    own seed slice locally, and synchronizes gradients through a shm
+    all-reduce folded into the ``sync_stack_grads`` discipline.
+
+    ``hierarchy`` is the two-level layout ``(groups, trainers_per_group)``
+    of :func:`repro.core.meta_partition.hierarchical_partition` — schema-
+    level meta-partitioning across groups, greedy edge-cut within.  The
+    default ``None`` resolves to ``(1, num_trainers)``; when given, the
+    product must equal ``num_trainers``.
+
+    ``store`` picks the shared-store flavor trainers attach: ``"shm"``
+    (``/dev/shm`` segment, RAM-resident) or ``"mmap"`` (on-disk
+    memory-mapped store, out-of-core).  ``overlap`` keeps the gradient
+    all-reduce overlapped against the next batch's host sampling
+    (scale-out adds bandwidth, not a barrier); off, trainers synchronize
+    at a barrier each step (debugging aid).
+
+    ``mode`` selects the data-parallel discipline (DESIGN.md §13):
+
+    * ``"global"`` (default) — trainers stripe-own the *global* batch
+      schedule (trainer ``r`` computes steps ``r, r+N, …`` with the fused
+      train step and publishes the updated state through the shm
+      exchange); the loss trajectory is **bit-identical** to the
+      single-process fit.
+    * ``"local"`` — each trainer draws sub-batches from the train nodes
+      its hierarchy sub-partition owns; raw stack gradients are summed
+      across trainers in fixed rank order, then ``sync_stack_grads`` +
+      Adam run on the sum.  Deterministic and bit-identical *across
+      trainers*, but a different (equally valid) trajectory from the
+      single-process schedule."""
+
+    num_trainers: int = 1
+    hierarchy: Optional[Tuple[int, int]] = None  # (groups, trainers_per_group)
+    store: str = "shm"  # shm (RAM segment) | mmap (out-of-core store)
+    overlap: bool = True
+    mode: str = "global"  # global (stripe, single-process-identical) | local
+
+    def __post_init__(self):
+        if self.num_trainers < 1:
+            raise ValueError(
+                f"num_trainers must be >= 1, got {self.num_trainers}")
+        if self.hierarchy is not None:
+            object.__setattr__(
+                self, "hierarchy", tuple(int(x) for x in self.hierarchy))
+            if len(self.hierarchy) != 2 or any(x < 1 for x in self.hierarchy):
+                raise ValueError(
+                    f"hierarchy must be 2 positive ints (groups, "
+                    f"trainers_per_group), got {self.hierarchy}")
+            g, s = self.hierarchy
+            if g * s != self.num_trainers:
+                raise ValueError(
+                    f"hierarchy {g}x{s} must multiply to num_trainers "
+                    f"({self.num_trainers})")
+        if self.store not in ("shm", "mmap"):
+            raise ValueError(
+                f"store must be 'shm' or 'mmap', got {self.store!r}")
+        if self.mode not in ("global", "local"):
+            raise ValueError(
+                f"mode must be 'global' or 'local', got {self.mode!r}")
+
+    @property
+    def resolved_hierarchy(self) -> Tuple[int, int]:
+        """(groups, trainers_per_group); default = one flat group."""
+        return self.hierarchy or (1, self.num_trainers)
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_trainers > 1
+
+
+@dataclasses.dataclass(frozen=True)
 class HetaConfig:
     """The full run description; the single argument of :class:`repro.api.Heta`."""
 
@@ -437,9 +520,10 @@ class HetaConfig:
     checkpoint: CheckpointConfig = dataclasses.field(
         default_factory=CheckpointConfig)
     faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    scale: ScaleConfig = dataclasses.field(default_factory=ScaleConfig)
 
     SECTIONS = ("data", "partition", "model", "cache", "run", "pipeline",
-                "kernels", "serve", "checkpoint", "faults")
+                "kernels", "serve", "checkpoint", "faults", "scale")
 
     # -- derived ------------------------------------------------------------
 
@@ -483,7 +567,7 @@ class HetaConfig:
                        "run": RunConfig, "pipeline": PipelineConfig,
                        "kernels": KernelConfig, "serve": ServeConfig,
                        "checkpoint": CheckpointConfig,
-                       "faults": FaultConfig}[name]
+                       "faults": FaultConfig, "scale": ScaleConfig}[name]
             known = {f.name for f in dataclasses.fields(sec_cls)}
             bad = set(sec) - known
             if bad:
@@ -562,6 +646,7 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "snapshot_policy": ("pipeline", "snapshot", str, str),
     "num_workers": ("pipeline", "num_workers", int, int),
     "batch_arena": ("pipeline", "arena", bool, bool),
+    "pin_workers": ("pipeline", "pin_workers", bool, bool),
     "kernels": ("kernels", "enabled", bool, bool),
     "kernel_stacked_agg": ("kernels", "stacked_agg", bool, bool),
     "kernel_relation_agg": ("kernels", "relation_agg", bool, bool),
@@ -591,6 +676,15 @@ _FLAT_MAP: Dict[str, Tuple[str, str, Callable, Callable]] = {
     "max_worker_restarts": ("faults", "max_worker_restarts", int, int),
     "worker_backoff_s": ("faults", "worker_backoff_s", float, float),
     "arena_write_timeout_s": ("faults", "arena_write_timeout_s", float, float),
+    "num_trainers": ("scale", "num_trainers", int, int),
+    "hierarchy": (
+        "scale", "hierarchy",
+        lambda v: None if v is None else _parse_mesh(v),
+        lambda v: v,
+    ),
+    "scale_store": ("scale", "store", str, str),
+    "scale_overlap": ("scale", "overlap", bool, bool),
+    "scale_mode": ("scale", "mode", str, str),
 }
 
 
@@ -618,6 +712,9 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
         "--num-workers", int, "sampler worker processes (0 = single thread)"),
     ("pipeline", "arena"): (
         "--batch-arena", None, "shm ring-buffer batch arena (pool mode)"),
+    ("pipeline", "pin_workers"): (
+        "--pin-workers", None,
+        "pin sampler workers to distinct CPU cores (Linux, best-effort)"),
     ("kernels", "enabled"): ("--kernels", None, "fused Pallas kernel layer on/off"),
     ("kernels", "stacked_agg"): (
         "--kernel-stacked-agg", None, "stacked relation-aggregation kernel"),
@@ -687,6 +784,22 @@ _CLI_OVERRIDES: Dict[Tuple[str, str], Tuple[str, Optional[Callable], str]] = {
     ("faults", "arena_write_timeout_s"): (
         "--arena-write-timeout-s", float,
         "arena writer backpressure stall timeout (seconds)"),
+    ("scale", "num_trainers"): (
+        "--num-trainers", int,
+        "data-parallel trainer processes (1 = in-process loop)"),
+    ("scale", "hierarchy"): (
+        "--hierarchy", _parse_mesh,
+        "GROUPSxTRAINERS partition hierarchy, e.g. 2x2"),
+    ("scale", "store"): (
+        "--scale-store", str,
+        "shared graph store flavor: shm | mmap (out-of-core)"),
+    ("scale", "overlap"): (
+        "--scale-overlap", None,
+        "overlap the gradient all-reduce with next-batch sampling"),
+    ("scale", "mode"): (
+        "--scale-mode", str,
+        "DP discipline: global (stripe, single-process-identical) | local "
+        "(hierarchy-owned sub-batches, gradient allreduce)"),
 }
 
 _SCALAR_PARSERS = {int: int, float: float, str: str, Optional[float]: float, bool: None}
@@ -701,7 +814,7 @@ def _cli_specs():
                              ("run", RunConfig), ("pipeline", PipelineConfig),
                              ("kernels", KernelConfig), ("serve", ServeConfig),
                              ("checkpoint", CheckpointConfig),
-                             ("faults", FaultConfig)):
+                             ("faults", FaultConfig), ("scale", ScaleConfig)):
         hints = typing.get_type_hints(sec_cls)
         for f in dataclasses.fields(sec_cls):
             default = getattr(sec_cls(), f.name)

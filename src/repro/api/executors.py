@@ -392,16 +392,17 @@ class RafSpmdExecutor(Executor):
         return raf_spmd.stack_recipe(plan.plan)
 
     def stage_from_host(self, sess, plan, batch, host_arrays):
+        """Device-put-free consumer completion: the worker-staged host
+        arrays (read-only arena-slot views) go straight into
+        ``shard_arrays``'s sharded ``device_put`` — no intermediate
+        ``jnp.asarray`` copy.  Safe against slot reuse because the stream
+        defers each slot's release past the consuming step, and the step's
+        ``float(loss)`` sync completes before the deferred release runs."""
         if host_arrays is None:
             return self.stage(sess, plan, batch)
-        import jax.numpy as jnp
-
         from repro.core import raf_spmd
 
-        return raf_spmd.shard_arrays(
-            plan.plan, plan.mesh,
-            {k: jnp.asarray(v) for k, v in host_arrays.items()},
-        )
+        return raf_spmd.shard_arrays(plan.plan, plan.mesh, host_arrays)
 
     def step_staged(self, sess, plan, state, batch, arrays):
         t0 = time.perf_counter()

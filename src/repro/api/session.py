@@ -141,15 +141,22 @@ class Heta:
         from repro.graph.synthetic import make_dataset
 
         t0 = time.perf_counter()
-        # shm janitor (DESIGN.md §12): a hard-crashed prior run can leave
-        # orphaned graph/arena segments the resource tracker never saw;
-        # sweep segments whose owner pid is gone before allocating new ones
+        # shm janitor (DESIGN.md §12/§13): a hard-crashed prior run can leave
+        # orphaned graph/arena segments the resource tracker never saw — and,
+        # since the scale-out tier, on-disk mmap stores too; sweep both kinds
+        # whose owner pid is gone before allocating new ones
         try:
             from repro.graph.shm import cleanup_stale_segments
 
             cleanup_stale_segments()
         except Exception:
             pass  # best-effort: /dev/shm may be absent on this platform
+        try:
+            from repro.graph.mmap_store import cleanup_stale_stores
+
+            cleanup_stale_stores()
+        except Exception:
+            pass  # best-effort: never fail session start over a sweep
         cfg = self.config
         self.graph = graph if graph is not None else make_dataset(
             cfg.data.dataset, scale=cfg.data.scale, seed=cfg.run.seed)
@@ -205,7 +212,14 @@ class Heta:
         placement — computed from ``assign_branches`` even when this
         session's configured placement is naive, so the comparison always
         shows the meta-partitioning gain).
-        """
+
+        When the scale-out tier is configured (``scale.num_trainers > 1``
+        or an explicit ``scale.hierarchy``), ``hier_*`` keys from
+        :func:`repro.core.comm.hierarchical_comm_bytes` ride along —
+        exact per-level wire bytes under the two-level hierarchical
+        partition, including the Prop-2 level-0 RAF bound
+        ``2(G-1)·|B|·hidden·bpe`` and the DP tier's gradient all-reduce
+        bytes (DESIGN.md §13)."""
         from repro.core.comm import vanilla_comm_bytes, vanilla_update_bytes
         from repro.core.meta_partition import random_edge_cut
         from repro.core.raf import assign_branches, raf_comm_bytes, random_branch_assignment
@@ -222,7 +236,7 @@ class Heta:
         )
         cut = random_edge_cut(self.graph, P, seed=seed)
         ld = cfg.model.learnable_dim
-        return {
+        out = {
             "vanilla_feat": vanilla_comm_bytes(
                 batch, cut, self.feat_dims, learnable_dim=ld,
                 bytes_per_elem=bytes_per_elem, include_topology=include_topology,
@@ -242,6 +256,31 @@ class Heta:
                 B, h, bytes_per_elem,
             ),
         }
+        sc = cfg.scale
+        if sc.enabled or sc.hierarchy is not None:
+            from repro.core.comm import hierarchical_comm_bytes
+            from repro.core.meta_partition import hierarchical_partition
+
+            g, s = sc.resolved_hierarchy
+            hier = hierarchical_partition(
+                self.graph, g, s, num_layers=cfg.num_layers, seed=seed)
+            grad_bytes = 0
+            if self.state is not None:
+                # DP all-reduce volume = one gradient set (= param bytes)
+                import jax
+
+                params = (self.state.get("stacks")
+                          or self.state.get("bundle")) if isinstance(
+                              self.state, dict) else None
+                if params is not None:
+                    grad_bytes = int(sum(
+                        np.asarray(leaf).nbytes
+                        for leaf in jax.tree_util.tree_leaves(params)))
+            rep = hierarchical_comm_bytes(
+                batch, hier, h, feat_dims=self.feat_dims, learnable_dim=ld,
+                bytes_per_elem=bytes_per_elem, grad_bytes=grad_bytes)
+            out.update({f"hier_{k}": int(v) for k, v in rep.items()})
+        return out
 
     # -- stage 3: §6 profiling + cache ---------------------------------------
 
@@ -386,6 +425,13 @@ class Heta:
         bounded-stale tables (staleness ≤ ring depth)."""
         self._require("state", "compile", "fit")
         steps = self.config.run.steps if steps is None else steps
+        if steps and self.config.scale.enabled:
+            # multi-process data-parallel tier (DESIGN.md §13): rank 0 is
+            # this process; scale.num_trainers-1 trainer processes attach
+            # the shared store and the loop runs in repro.data.dp_trainer
+            from repro.data.dp_trainer import run_dp_fit
+
+            return run_dp_fit(self, steps)
         log_every = self.config.run.log_every
 
         def logged(loss: float) -> None:
@@ -998,6 +1044,7 @@ class Heta:
             arena=arena.handle if arena is not None else None,
             faults=faults,
             write_timeout_s=self.config.faults.arena_write_timeout_s,
+            pin_cpus=pcfg.pin_workers,
         )
         return store, arena, task
 

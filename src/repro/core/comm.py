@@ -17,11 +17,16 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.meta_partition import EdgeCutPartition
+from repro.core.meta_partition import EdgeCutPartition, HierarchicalPartition
 from repro.graph.hetgraph import HetGraph
 from repro.graph.sampler import SampledBatch
 
-__all__ = ["vanilla_comm_bytes", "vanilla_update_bytes", "CommReport"]
+__all__ = [
+    "vanilla_comm_bytes",
+    "vanilla_update_bytes",
+    "hierarchical_comm_bytes",
+    "CommReport",
+]
 
 
 def _seed_owner(batch: SampledBatch, cut: EdgeCutPartition) -> np.ndarray:
@@ -93,6 +98,62 @@ def vanilla_update_bytes(
             row = learnable_dim * bytes_per_elem * (1 + optimizer_state_mult)
             total += len(uniq) * row * 2  # read + write-back
     return int(total)
+
+
+def hierarchical_comm_bytes(
+    batch: SampledBatch,
+    hier: HierarchicalPartition,
+    hidden: int,
+    feat_dims: Optional[Dict[str, int]] = None,
+    learnable_dim: int = 64,
+    bytes_per_elem: int = 2,
+    grad_bytes: int = 0,
+) -> "CommReport":
+    """Exact per-level, per-batch byte accounting for the two-level
+    hierarchy (DESIGN.md §13; DistDGL-style layout, PAPERS.md 2112.15345).
+
+    * ``level0_raf`` — inter-group RAF partial-aggregate exchange.  Every
+      group holds ≥1 root branch by construction (one sub-metatree per
+      root child, paper §5), so each of the ``G-1`` non-designated groups
+      moves one ``[B, hidden]`` partial forward and its gradient back:
+      ``2·(G-1)·B·hidden`` elements — independent of the relation module
+      and of every feature dimension (Prop 2).
+    * ``level0_grad`` — inter-group model sync: group leaders all-reduce
+      the shared gradient buffer (``2·(G-1)·grad_bytes`` wire bytes,
+      designated style, fwd+bwd symmetric reduce+broadcast).
+    * ``level1_grad`` — intra-group data parallelism: per group, a ring
+      all-reduce of ``grad_bytes`` among ``S`` trainers moves
+      ``2·(S-1)·grad_bytes`` aggregate wire bytes; summed over groups.
+    * ``level1_local_read`` — feature bytes each batch pulls from the
+      *shared* store (unique sampled nodes × dim).  These are DRAM /
+      page-cache reads, **not** network traffic: trainers inside a group
+      attach the same shm/mmap store, which is exactly why level 1 adds
+      bandwidth, not bytes.  Reported for the vanilla contrast (an
+      edge-cut-only system ships a large share of these over the wire).
+
+    ``total_wire`` sums the three network levels and excludes the local
+    reads.  All counts are exact given the batch and the hierarchy.
+    """
+    G, S = hier.num_groups, hier.trainers_per_group
+    B = int(batch.batch_size)
+    level0_raf = 2 * max(0, G - 1) * B * hidden * bytes_per_elem
+    level0_grad = 2 * max(0, G - 1) * int(grad_bytes)
+    level1_grad = G * 2 * max(0, S - 1) * int(grad_bytes)
+    local_read = 0
+    fd = feat_dims or {}
+    for lv, branches in zip(batch.levels, batch.spec.levels):
+        for b, bs in enumerate(branches):
+            nids, mask = lv.nids[b], lv.mask[b]
+            uniq = np.unique(nids[mask])
+            dim = fd.get(bs.src_type, learnable_dim)
+            local_read += uniq.size * dim * bytes_per_elem
+    return CommReport(
+        level0_raf=int(level0_raf),
+        level0_grad=int(level0_grad),
+        level1_grad=int(level1_grad),
+        level1_local_read=int(local_read),
+        total_wire=int(level0_raf + level0_grad + level1_grad),
+    )
 
 
 class CommReport(dict):

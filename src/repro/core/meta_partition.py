@@ -40,6 +40,8 @@ __all__ = [
     "greedy_edge_cut",
     "boundary_nodes",
     "cross_edges",
+    "HierarchicalPartition",
+    "hierarchical_partition",
 ]
 
 
@@ -369,3 +371,190 @@ def boundary_nodes(graph: HetGraph, cut: EdgeCutPartition) -> List[int]:
         for p, c in zip(*np.unique(parts, return_counts=True)):
             counts[int(p)] += int(c)
     return counts
+
+
+# --------------------------------------------------------------------------
+# Hierarchical composition (DistDGL-style two-level scale-out, DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HierarchicalPartition:
+    """Two-level partition hierarchy for multi-process scale-out.
+
+    Composes the paper's schema-level meta-partitioning (level 0, across
+    *trainer groups*) with greedy edge-cut partitioning (level 1, *inside*
+    each group) — the DistDGL hybrid billion-scale layout (PAPERS.md,
+    arxiv 2112.15345) applied to Heta:
+
+    * **Level 0 — groups.**  ``meta_partition(graph, num_groups)`` assigns
+      whole relation types to groups.  Each group holds complete
+      mono-relation subgraphs plus all target nodes (paper §5 Step 2), so
+      the only *inter-group* traffic is the RAF partial-aggregate exchange
+      at target nodes — Θ(|B|·hidden) per batch, independent of the
+      relation module (Prop 2).
+    * **Level 1 — sub-partitions.**  Inside each group,
+      ``greedy_edge_cut`` over the group's materialized subgraph splits
+      nodes into ``trainers_per_group`` sub-partitions.  Trainers in a
+      group run data-parallel over a *shared* store (shm or mmap), so
+      *intra-group* traffic is the gradient allreduce only — edge-cut
+      locality governs DRAM/page-cache reads, never network bytes.
+
+    **Ownership invariant** (tested): every node of every type is owned by
+    exactly one ``(group, sub_partition)`` pair.
+
+    * Target-type nodes are *replicated* across groups at level 0; their
+      unique owner group is the deterministic stripe ``nid % num_groups``
+      (replicas split target nodes with data parallelism, paper §5
+      discussion), and the owner sub-partition is that group's edge-cut
+      assignment.
+    * Every other type is owned by the first group whose schema contains
+      it (deeper duplicates are replication, not ownership — same rule as
+      :meth:`MetaPartitioning.relation_to_partition`); the sub-partition
+      is that group's edge-cut assignment.
+    * Types outside every group's schema (unreachable within
+      ``num_layers`` of the metatree) fall back to group 0 with the
+      stripe ``nid % trainers_per_group``.
+
+    Global trainer ranks are row-major: ``rank = group * trainers_per_group
+    + sub``.  Per-level byte accounting for this layout lives in
+    :func:`repro.core.comm.hierarchical_comm_bytes` and is surfaced through
+    ``Heta.comm_report``.
+    """
+
+    meta: MetaPartitioning
+    cuts: List[EdgeCutPartition]  # one per group, over the group's subgraph
+    group_of: Dict[str, np.ndarray]  # ntype -> [n] owning group id (int32)
+    sub_of: Dict[str, np.ndarray]  # ntype -> [n] sub-partition in the group
+    num_groups: int
+    trainers_per_group: int
+    elapsed_s: float = 0.0
+
+    @property
+    def num_trainers(self) -> int:
+        return self.num_groups * self.trainers_per_group
+
+    def owner(self, ntype: str, nids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(group, sub-partition) owning each node — exactly one per node."""
+        nids = np.asarray(nids)
+        return self.group_of[ntype][nids], self.sub_of[ntype][nids]
+
+    def rank_of(self, ntype: str, nids: np.ndarray) -> np.ndarray:
+        """Global trainer rank owning each node (row-major group × sub)."""
+        g, s = self.owner(ntype, nids)
+        return g.astype(np.int64) * self.trainers_per_group + s.astype(np.int64)
+
+    def trainer_train_nodes(self, graph: HetGraph, rank: int) -> np.ndarray:
+        """The disjoint slice of ``graph.train_nodes`` trainer ``rank`` owns.
+
+        Concatenating over all ranks is a permutation of ``train_nodes``
+        (every seed trained exactly once per epoch, no replication)."""
+        if not 0 <= rank < self.num_trainers:
+            raise ValueError(
+                f"rank {rank} out of range for {self.num_trainers} trainers"
+            )
+        seeds = np.asarray(graph.train_nodes)
+        return seeds[self.rank_of(graph.target_type, seeds) == rank]
+
+    def validate_ownership(self, graph: HetGraph) -> None:
+        """Assert the ownership invariant over every node of every type."""
+        for t, n in graph.num_nodes.items():
+            g, s = self.group_of.get(t), self.sub_of.get(t)
+            if g is None or s is None or len(g) != n or len(s) != n:
+                raise AssertionError(f"ownership missing/short for type {t!r}")
+            if not ((g >= 0).all() and (g < self.num_groups).all()):
+                raise AssertionError(f"group out of range for type {t!r}")
+            if not ((s >= 0).all() and (s < self.trainers_per_group).all()):
+                raise AssertionError(f"sub-partition out of range for {t!r}")
+
+    def summary(self) -> str:
+        lines = [
+            f"hierarchical partition: {self.num_groups} group(s) x "
+            f"{self.trainers_per_group} trainer(s) = {self.num_trainers} "
+            f"ranks, {self.elapsed_s * 1e3:.2f} ms"
+        ]
+        for p in self.meta.partitions:
+            cut = self.cuts[p.index]
+            owned = sum(
+                int((self.group_of[t] == p.index).sum())
+                for t in self.group_of
+            )
+            lines.append(
+                f"  G{p.index}: {len(p.relations)} relations, "
+                f"{owned:,} owned nodes, edge-cut {cut.method} "
+                f"({cut.elapsed_s * 1e3:.1f} ms)"
+            )
+        return "\n".join(lines)
+
+
+def hierarchical_partition(
+    graph: HetGraph,
+    num_groups: int,
+    trainers_per_group: int,
+    num_layers: int = 2,
+    metapaths: Optional[Sequence[Sequence[Relation]]] = None,
+    seed: int = 0,
+    edge_cut: str = "greedy",
+) -> HierarchicalPartition:
+    """Build the two-level hierarchy (see :class:`HierarchicalPartition`).
+
+    Level 0 is Algorithm 2 verbatim (``meta_partition`` with
+    ``materialize=True`` — level-1 cuts need the group subgraphs); level 1
+    runs ``greedy_edge_cut`` (or ``random_edge_cut`` with
+    ``edge_cut="random"``) per group with a per-group derived seed so group
+    cuts are independent but deterministic in ``seed``.
+    """
+    if num_groups < 1 or trainers_per_group < 1:
+        raise ValueError(
+            f"num_groups and trainers_per_group must be >= 1, got "
+            f"{num_groups} x {trainers_per_group}"
+        )
+    cut_fn = {"greedy": greedy_edge_cut, "random": random_edge_cut}.get(edge_cut)
+    if cut_fn is None:
+        raise ValueError(f"edge_cut must be 'greedy' or 'random', got {edge_cut!r}")
+    t0 = time.perf_counter()
+    meta = meta_partition(
+        graph, num_groups, num_layers=num_layers, metapaths=metapaths,
+        materialize=True,
+    )
+    cuts = [
+        cut_fn(p.graph, trainers_per_group, seed=seed + 1000 * p.index)
+        for p in meta.partitions
+    ]
+
+    # level-0 ownership: first group whose schema holds the type; target
+    # nodes stripe across groups (replicas split seeds, paper §5).
+    type_owner: Dict[str, int] = {}
+    for p in meta.partitions:
+        for t in p.node_types:
+            type_owner.setdefault(t, p.index)
+    target = graph.target_type
+    G, S = len(meta.partitions), trainers_per_group
+    group_of: Dict[str, np.ndarray] = {}
+    sub_of: Dict[str, np.ndarray] = {}
+    for t, n in graph.num_nodes.items():
+        ids = np.arange(n, dtype=np.int64)
+        if t == target:
+            group_of[t] = (ids % G).astype(np.int32)
+            sub = np.empty(n, dtype=np.int32)
+            for g in range(G):
+                mine = group_of[t] == g
+                sub[mine] = cuts[g].part_of(t, ids[mine])
+            sub_of[t] = sub
+        elif t in type_owner:
+            g = type_owner[t]
+            group_of[t] = np.full(n, g, dtype=np.int32)
+            sub_of[t] = cuts[g].part_of(t, ids).astype(np.int32)
+        else:  # outside the metatree: deterministic fallback stripes
+            group_of[t] = np.zeros(n, dtype=np.int32)
+            sub_of[t] = (ids % S).astype(np.int32)
+
+    return HierarchicalPartition(
+        meta=meta,
+        cuts=cuts,
+        group_of=group_of,
+        sub_of=sub_of,
+        num_groups=G,
+        trainers_per_group=S,
+        elapsed_s=time.perf_counter() - t0,
+    )

@@ -62,6 +62,8 @@ __all__ = [
     "sync_stack_grads",
     "make_loss_fn",
     "make_train_step",
+    "make_grad_step",
+    "make_apply_step",
     "shard_map_nocheck",
 ]
 
@@ -598,6 +600,49 @@ def make_train_step(
         return stacks, opt_state, loss, gf
 
     return step_feats
+
+
+def make_grad_step(
+    plan: StackedPlan,
+    mesh: Mesh,
+    model_axis: str = "model",
+    data_axes=("data",),
+    local_combine: bool = True,
+    kernels=None,
+):
+    """Jitted forward/backward half of :func:`make_train_step` for the
+    multi-process data-parallel tier (``repro.data.dp_trainer``, DESIGN.md
+    §13): ``grad(stacks, arrays) -> (loss, grads)`` with *raw* stack
+    gradients.  The DP trainer allreduces these across trainer processes in
+    fixed rank order and only then runs :func:`make_apply_step` — which
+    performs :func:`sync_stack_grads` + Adam — so the cross-slot sync
+    happens exactly once, on the cross-trainer sum, preserving the
+    single-process sync discipline."""
+    loss_fn, split_arrays = _build_loss_fn(plan, mesh, model_axis, data_axes,
+                                           local_combine, kernels)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def grad(stacks, arrays):
+        feats, rest = split_arrays(arrays)
+        return grad_fn(stacks, feats, rest)
+
+    return grad
+
+
+def make_apply_step(plan: StackedPlan, adam_cfg):
+    """Jitted update half of :func:`make_train_step` (see
+    :func:`make_grad_step`): ``apply(stacks, opt_state, grads) ->
+    (stacks, opt_state)`` — :func:`sync_stack_grads` on the (already
+    cross-trainer-summed) gradients, then Adam."""
+    from repro.optim.adam import adam_update
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def apply_grads(stacks, opt_state, grads):
+        grads = sync_stack_grads(plan, grads)
+        return adam_update(adam_cfg, stacks, grads, opt_state)
+
+    return apply_grads
 
 
 def shard_arrays(plan: StackedPlan, mesh: Mesh, arrays: Dict, data_axes=("data",),

@@ -463,7 +463,7 @@ class SampleStageTask:
     worker forever (DESIGN.md §12).
     """
 
-    handle: object  # repro.graph.shm.GraphHandle
+    handle: object  # repro.graph.shm.GraphHandle | mmap_store.MmapGraphHandle
     spec: object  # repro.graph.sampler.SampleSpec
     batch_size: int
     sampler_seed: int
@@ -472,6 +472,7 @@ class SampleStageTask:
     arena: object = None  # repro.graph.shm.ArenaHandle
     faults: object = None  # repro.data.faults.FaultPlan
     write_timeout_s: float = 60.0
+    pin_cpus: bool = False  # opt-in: pin worker w to core (w+1) % ncpu
 
     def bind_stop(self, stop) -> None:
         """Called by the pool runner so the arena backpressure wait can
@@ -485,10 +486,23 @@ class SampleStageTask:
         self._attempt = attempt
 
     def setup(self) -> None:
+        from repro.graph.mmap_store import attach_any
         from repro.graph.sampler import NeighborSampler
-        from repro.graph.shm import attach, attach_arena
+        from repro.graph.shm import attach_arena
 
-        self._attached = attach(self.handle)
+        if self.pin_cpus:
+            # opt-in affinity pin (pipeline.pin_workers): worker w sticks to
+            # core (w+1) % ncpu, biasing core 0 toward the consumer — spares
+            # the samplers' cache/NUMA locality from scheduler migration.
+            # Best-effort: unsupported platforms (macOS) just skip it.
+            try:
+                ncpu = os.cpu_count() or 1
+                os.sched_setaffinity(
+                    0, {(getattr(self, "_wid", 0) + 1) % ncpu})
+            except (AttributeError, OSError):
+                pass
+
+        self._attached = attach_any(self.handle)
         self._sampler = NeighborSampler(
             self._attached.graph, self.spec, self.batch_size,
             seed=self.sampler_seed,

@@ -283,7 +283,10 @@ def share_graph(
     handle = GraphHandle(
         segment=segment,
         owner_pid=os.getpid(),
-        num_nodes=tuple(sorted(graph.num_nodes.items())),
+        # insertion order, NOT sorted: per-type arena offsets downstream
+        # follow the graph dict's iteration order, so the attached twin
+        # must reproduce it exactly (DESIGN.md §13)
+        num_nodes=tuple(graph.num_nodes.items()),
         relations=tuple((r.src, r.etype, r.dst) for r, _ in rel_list),
         target_type=graph.target_type,
         num_classes=int(graph.num_classes),

@@ -75,15 +75,20 @@ def main():
     ap.add_argument("--hotness-only", action="store_true",
                     help="legacy alias for --cache-policy hotness")
     ap.add_argument("--shm-cleanup", action="store_true",
-                    help="sweep orphaned /dev/shm graph segments left by "
-                         "crashed runs, then train as usual")
+                    help="sweep orphaned /dev/shm graph segments and on-disk "
+                         "mmap stores left by crashed runs, then train as "
+                         "usual")
     args = ap.parse_args()
     if args.shm_cleanup:
+        from repro.graph.mmap_store import cleanup_stale_stores
         from repro.graph.shm import cleanup_stale_segments
 
         removed = cleanup_stale_segments()
         print(f"shm-cleanup: removed {len(removed)} stale segment(s)"
               + ("".join(f"\n  {n}" for n in removed)))
+        reaped = cleanup_stale_stores()
+        print(f"shm-cleanup: removed {len(reaped)} stale mmap store(s)"
+              + ("".join(f"\n  {n}" for n in reaped)))
     cfg = config_from_args(args)
     if cfg.run.executor not in executors.available():
         ap.error(f"unknown --executor {cfg.run.executor!r}; "
